@@ -1,0 +1,26 @@
+"""Benchmark timing helpers (paper methodology: averaged repeats, CI)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def bench(fn, *args, reps: int = 5, warmup: int = 1):
+    """Median + 95% CI wall time of jax fn (blocks on completion)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts = np.asarray(ts)
+    ci = 1.96 * ts.std() / max(np.sqrt(len(ts)), 1)
+    return float(np.median(ts)), float(ci)
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds*1e6:.1f},{derived}"

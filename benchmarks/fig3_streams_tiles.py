@@ -1,0 +1,46 @@
+"""Fig. 3 analogue: tiled Cholesky runtime vs stream count and tile count.
+
+The paper sweeps CUDA streams × tiles at n=32768 on an A30.  Here the same
+sweep runs the level-batched schedule on the host CPU (single XLA device):
+``n_streams`` is the batching-granularity knob (DESIGN.md §2) and tiles per
+dimension sweeps M.  The monolithic single-call Cholesky is the cuSOLVER
+reference analogue.  Sizes are scaled to CPU (default n=1024; use --n).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench, row
+from repro.core import cholesky as chol
+
+
+def run(n: int = 1024, out=print):
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    k = jnp.asarray(a @ a.T + n * np.eye(n, dtype=np.float32))
+
+    mono = jax.jit(chol.monolithic_cholesky)
+    t, ci = bench(mono, k)
+    out(row(f"fig3/monolithic/n{n}", t, f"ci={ci:.2e}"))
+    base = t
+
+    for m_tiles in (4, 8, 16, 32):
+        m = n // m_tiles
+        for ns in (1, 4, 16, None):
+            fn = jax.jit(
+                lambda kk, m=m, ns=ns: chol.cholesky_dense_via_tiles(kk, m, n_streams=ns)
+            )
+            t, ci = bench(fn, k)
+            tag = "inf" if ns is None else str(ns)
+            out(row(
+                f"fig3/tiled/n{n}/tiles{m_tiles}/streams{tag}",
+                t,
+                f"speedup_vs_monolithic={base/t:.3f}",
+            ))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Fig. 4 analogue: runtime breakdown of the GP pipeline per step.
+
+Paper stages at n=32768 / 32 streams, varying tiles: covariance assembly,
+Cholesky, triangular solves, prediction.  Same decomposition on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench, row
+from repro.core import cholesky as chol
+from repro.core import predict as pred
+from repro.core import triangular
+from repro.core.kernels_math import SEKernelParams
+
+
+def run(n: int = 1024, n_test: int = 1024, out=print):
+    rng = np.random.default_rng(0)
+    d = 16
+    x = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    xt = jnp.asarray(rng.standard_normal((n_test, d)).astype(np.float32))
+    params = SEKernelParams.paper_defaults()
+
+    for m_tiles in (4, 16):
+        m = n // m_tiles
+        xc = pred.pad_features(x, m)
+        yc = pred.pad_vector(y, m)
+        xtc = pred.pad_features(xt, m)
+
+        assemble = jax.jit(lambda xc: pred.assemble_packed_covariance(xc, params, n))
+        t, _ = bench(assemble, xc)
+        out(row(f"fig4/assembly/n{n}/tiles{m_tiles}", t))
+        packed = assemble(xc)
+
+        factor = jax.jit(chol.tiled_cholesky)
+        t, _ = bench(factor, packed)
+        out(row(f"fig4/cholesky/n{n}/tiles{m_tiles}", t))
+        lp = factor(packed)
+
+        solves = jax.jit(
+            lambda lp, yc: triangular.backward_substitution(
+                lp, triangular.forward_substitution(lp, yc)
+            )
+        )
+        t, _ = bench(solves, lp, yc)
+        out(row(f"fig4/solves/n{n}/tiles{m_tiles}", t))
+        alpha = solves(lp, yc)
+
+        cross = jax.jit(lambda xtc, xc: pred.assemble_cross_tiles(xtc, xc, params, n_test, n))
+        t, _ = bench(cross, xtc, xc)
+        out(row(f"fig4/cross_assembly/n{n}/tiles{m_tiles}", t))
+        kstar = cross(xtc, xc)
+
+        mean = jax.jit(triangular.tiled_matvec)
+        t, _ = bench(mean, kstar, alpha)
+        out(row(f"fig4/mean/n{n}/tiles{m_tiles}", t))
+
+        def variance_stage(lp, kstar, xtc):
+            b_tiles = jnp.einsum("qiab->iqba", kstar)
+            v = triangular.forward_substitution_matrix(lp, b_tiles)
+            w = triangular.tiled_gram(v)
+            prior = pred.assemble_prior_tiles(xtc, params, n_test)
+            return prior - w
+
+        var = jax.jit(variance_stage)
+        t, _ = bench(var, lp, kstar, xtc)
+        out(row(f"fig4/uncertainty/n{n}/tiles{m_tiles}", t))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Fig. 7 analogue: Predict-with-Full-Covariance problem-size scaling.
+
+n_test = n_train as in the paper; tiled pipeline vs monolithic reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import bench, row
+from repro.core import predict as pred
+from repro.core.kernels_math import SEKernelParams
+
+
+def run(sizes=(128, 256, 512, 1024), out=print):
+    rng = np.random.default_rng(0)
+    params = SEKernelParams.paper_defaults()
+    d = 16
+    for n in sizes:
+        x = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+        y = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        xt = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+        mono = jax.jit(
+            lambda a, b, c: pred.predict_monolithic(a, b, c, params, full_cov=True)
+        )
+        t_m, _ = bench(mono, x, y, xt)
+        out(row(f"fig7/monolithic/n{n}", t_m))
+        m = max(n // 8, 64)
+        tiled = jax.jit(
+            lambda a, b, c, m=m: pred.predict(a, b, c, params, m, full_cov=True)
+        )
+        t_t, _ = bench(tiled, x, y, xt)
+        out(row(f"fig7/tiled/n{n}/m{m}", t_t, f"speedup={t_m/t_t:.3f}"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: one module per paper figure/table.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--n N]
+
+Emits ``name,us_per_call,derived`` CSV rows.  Sizes default to CPU-friendly
+values (paper sizes n=32768 target the TPU dry-run path, not this host —
+see EXPERIMENTS.md §Methodology).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1024, help="problem size for fig3/fig4")
+    ap.add_argument("--quick", action="store_true", help="smaller sweeps")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig3_streams_tiles,
+        fig4_breakdown,
+        fig5_schedule_trace,
+        fig6_cholesky_scaling,
+        fig7_predict_scaling,
+        mem_tiles,
+    )
+
+    print("name,us_per_call,derived")
+    n = min(args.n, 512) if args.quick else args.n
+    fig3_streams_tiles.run(n=n)
+    fig4_breakdown.run(n=n, n_test=n)
+    fig5_schedule_trace.run(m_tiles=32)
+    sizes = (128, 256, 512) if args.quick else (128, 256, 512, 1024, 2048)
+    fig6_cholesky_scaling.run(sizes=sizes)
+    psizes = (128, 256) if args.quick else (128, 256, 512, 1024)
+    fig7_predict_scaling.run(sizes=psizes)
+    mem_tiles.run(n=n)
+
+
+if __name__ == "__main__":
+    main()

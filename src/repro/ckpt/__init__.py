@@ -1,0 +1,5 @@
+"""Checkpointing substrate."""
+
+from repro.ckpt.checkpoint import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,59 @@
+"""Architecture registry: ``--arch <id>`` resolution for every driver."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    GPShapeConfig,
+    ModelConfig,
+    ShapeConfig,
+)
+
+_MODULES: Dict[str, str] = {
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "qwen1.5-0.5b": "repro.configs.qwen15_0_5b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_MODULES)
+
+# Sub-quadratic archs that run the long_500k decode cell; all others skip it
+# (pure full-attention — noted in DESIGN.md §4 / EXPERIMENTS.md).
+LONG_CONTEXT_ARCHS = ("mamba2-1.3b", "recurrentgemma-2b")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).SMOKE
+
+
+def shapes_for(arch: str) -> Tuple[ShapeConfig, ...]:
+    """The assigned shape cells for one architecture (long_500k gated)."""
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if arch in LONG_CONTEXT_ARCHS:
+        out.append(LONG_500K)
+    return tuple(out)
+
+
+def all_cells():
+    """Every (arch, shape) dry-run cell, long_500k included where applicable."""
+    for arch in ARCH_IDS:
+        for shape in shapes_for(arch):
+            yield arch, shape

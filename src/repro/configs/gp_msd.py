@@ -1,0 +1,23 @@
+"""The paper's own workload: tiled GP regression on mass-spring-damper SI data.
+
+Problem sizes mirror the paper's evaluation (n up to 32768 on one device;
+Fig. 3/4 use n=32768) plus the distributed sizes that motivate the multi-pod
+extension (n beyond single-chip HBM).
+"""
+
+from repro.configs.base import GPShapeConfig
+
+# Paper-scale single-device cells (Figs. 3, 4, 6, 7); tile sizes follow the
+# paper's best configs (32 tiles/dim at n=32768).
+GP_PAPER_32K = GPShapeConfig("gp_32k", n_train=32768, n_test=32768, tile_size=1024)
+GP_PAPER_16K = GPShapeConfig("gp_16k", n_train=16384, n_test=16384, tile_size=512)
+
+# Distributed cells (paper future work): K no longer fits one chip's HBM.
+#   n=262144: K = 275 GB f32  -> 256 chips;  n=524288: K = 1.1 TB -> 512 chips
+# Tile sizes keep the block-cyclic grid balanced: M = 16 × P rows so the
+# split-TRSM path stays active (Mp divisible by Q, see core/distributed.py).
+GP_DIST_32K = GPShapeConfig("gp_dist_32k", n_train=32768, n_test=16384, tile_size=128)
+GP_DIST_256K = GPShapeConfig("gp_256k", n_train=262144, n_test=16384, tile_size=1024)
+GP_DIST_512K = GPShapeConfig("gp_512k", n_train=524288, n_test=32768, tile_size=1024)
+
+ALL_GP_SHAPES = (GP_PAPER_16K, GP_PAPER_32K, GP_DIST_32K, GP_DIST_256K, GP_DIST_512K)

@@ -1,0 +1,187 @@
+"""Tiled right-looking Cholesky decomposition (paper Fig. 1) on packed tiles.
+
+The factorization runs on the packed symmetric-lower store of
+:mod:`repro.core.tiling` and emits, per step J:
+
+    POTRF(J,J);  TRSM(I,J) for I>J;  SYRK(I,I) & GEMM(I,K) for J<K<I
+
+Execution strategies (the CUDA-stream analogue, see DESIGN.md §2):
+
+* ``n_streams=None``  — whole-panel batching: all TRSMs of the column are one
+  batched triangular solve, the whole trailing update is one batched matmul.
+  This is the TPU-native limit (maximum exposed concurrency).
+* ``n_streams=s``     — each panel/update is issued in round-robin chunks of
+  at most ``s`` batched tasks, reproducing the paper's stream-pool sweep.
+* ``n_streams=1``     — fully sequential tile-by-tile tasks (paper's single
+  stream / pure dataflow-ordered baseline).
+
+Because XLA schedules on data dependencies (like HPX dataflow), chunks with no
+mutual dependencies may still overlap; ``n_streams`` controls the *batching
+granularity* the compiler sees, which is the knob that matters on TPU.
+
+Backends: ``jnp`` (XLA ops) or ``pallas`` (explicit VMEM-tiled kernels from
+:mod:`repro.kernels`).  ``update_dtype`` enables the paper's future-work mixed
+precision: trailing SYRK/GEMM updates accumulate through a lower-precision
+matmul while panels stay in the storage dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tiling
+
+
+# ---------------------------------------------------------------------------
+# Tile-level ops (jnp backend).  a/b are (m, m) tiles; batched via vmap.
+# ---------------------------------------------------------------------------
+
+
+def _potrf_jnp(a: jax.Array) -> jax.Array:
+    return jnp.linalg.cholesky(a)
+
+
+def _trsm_jnp(ljj: jax.Array, b: jax.Array) -> jax.Array:
+    # Solve X @ L_JJ^T = B  (right-looking panel update: L_IJ = K_IJ L_JJ^{-T})
+    return jax.lax.linalg.triangular_solve(
+        ljj, b, left_side=False, lower=True, transpose_a=True
+    )
+
+
+def _syrk_jnp(kii: jax.Array, lij: jax.Array, update_dtype=None) -> jax.Array:
+    a = lij if update_dtype is None else lij.astype(update_dtype)
+    upd = (a @ a.T).astype(kii.dtype)
+    return kii - upd
+
+
+def _gemm_jnp(kik: jax.Array, lij: jax.Array, lkj: jax.Array, update_dtype=None) -> jax.Array:
+    a, b = lij, lkj
+    if update_dtype is not None:
+        a, b = a.astype(update_dtype), b.astype(update_dtype)
+    upd = (a @ b.T).astype(kik.dtype)
+    return kik - upd
+
+
+def _get_ops(backend: str):
+    if backend == "jnp":
+        return _potrf_jnp, _trsm_jnp, _syrk_jnp, _gemm_jnp
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.potrf, kops.trsm, kops.syrk, kops.gemm
+    raise ValueError(f"unknown backend: {backend}")
+
+
+# ---------------------------------------------------------------------------
+# The tiled factorization.
+# ---------------------------------------------------------------------------
+
+
+def tiled_cholesky(
+    packed: jax.Array,
+    *,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    update_dtype=None,
+) -> jax.Array:
+    """Factor a packed symmetric-lower tile store in place: K -> L.
+
+    packed: (T, m, m) with T = M(M+1)/2 (see tiling.pack_lower).
+    Returns the packed Cholesky factor (diagonal tiles lower-triangular).
+    """
+    t, m, _ = packed.shape
+    m_tiles = int((np.sqrt(8 * t + 1) - 1) // 2)
+    if tiling.num_packed_tiles(m_tiles) != t:
+        raise ValueError(f"{t} is not a triangular number of tiles")
+    potrf, trsm, syrk, gemm = _get_ops(backend)
+    trsm_b = jax.vmap(trsm, in_axes=(None, 0))
+    syrk_b = jax.vmap(functools.partial(syrk, update_dtype=update_dtype))
+    gemm_b = jax.vmap(functools.partial(gemm, update_dtype=update_dtype))
+
+    for j in range(m_tiles):
+        dslot = tiling.packed_index(j, j, m_tiles)
+        ljj = potrf(packed[dslot])
+        packed = packed.at[dslot].set(ljj)
+        n_below = m_tiles - j - 1
+        if n_below == 0:
+            continue
+
+        # --- TRSM panel: tiles (j+1..M-1, j), contiguous slots ------------
+        lo, hi = dslot + 1, dslot + 1 + n_below
+        for c0, c1 in _chunks(n_below, n_streams):
+            sol = trsm_b(ljj, jax.lax.dynamic_slice_in_dim(packed, lo + c0, c1 - c0))
+            packed = jax.lax.dynamic_update_slice_in_dim(packed, sol, lo + c0, axis=0)
+        panel = packed[lo:hi]  # (n_below, m, m), rows j+1..M-1
+
+        # --- trailing update: SYRK on diagonals, GEMM off-diagonal --------
+        # SYRK: tile (i, i) -= L(i,j) L(i,j)^T      for i in j+1..M-1
+        syrk_slots = np.array(
+            [tiling.packed_index(i, i, m_tiles) for i in range(j + 1, m_tiles)]
+        )
+        for c0, c1 in _chunks(n_below, n_streams):
+            sl = syrk_slots[c0:c1]
+            packed = packed.at[sl].set(syrk_b(packed[sl], panel[c0:c1]))
+
+        # GEMM: tile (i, k) -= L(i,j) L(k,j)^T      for j < k < i < M
+        gi, gk, gslots = _gemm_indices(j, m_tiles)
+        for c0, c1 in _chunks(len(gslots), n_streams):
+            sl = gslots[c0:c1]
+            a = panel[gi[c0:c1] - (j + 1)]
+            b = panel[gk[c0:c1] - (j + 1)]
+            packed = packed.at[sl].set(gemm_b(packed[sl], a, b))
+    return packed
+
+
+@functools.lru_cache(maxsize=None)
+def _gemm_indices_cached(j: int, m_tiles: int):
+    gi, gk, gslots = [], [], []
+    for i in range(j + 1, m_tiles):
+        for k in range(j + 1, i):
+            gi.append(i)
+            gk.append(k)
+            gslots.append(tiling.packed_index(i, k, m_tiles))
+    return (np.array(gi, np.int32), np.array(gk, np.int32), np.array(gslots, np.int32))
+
+
+def _gemm_indices(j: int, m_tiles: int):
+    return _gemm_indices_cached(j, m_tiles)
+
+
+def _chunks(n: int, n_streams: Optional[int]):
+    """(start, stop) chunk bounds covering range(n) with width n_streams."""
+    if n <= 0:
+        return []
+    if n_streams is None or n_streams >= n:
+        return [(0, n)]
+    return [(i, min(i + n_streams, n)) for i in range(0, n, n_streams)]
+
+
+# ---------------------------------------------------------------------------
+# Convenience wrappers.
+# ---------------------------------------------------------------------------
+
+
+def cholesky_dense_via_tiles(
+    a: jax.Array,
+    m: int,
+    *,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    update_dtype=None,
+) -> jax.Array:
+    """Dense (n,n) SPD -> dense lower Cholesky factor, via the tiled path."""
+    packed = tiling.pack_lower(a, m)
+    lpacked = tiled_cholesky(
+        packed, n_streams=n_streams, backend=backend, update_dtype=update_dtype
+    )
+    return tiling.unpack_lower(lpacked, fill="lower")
+
+
+def monolithic_cholesky(a: jax.Array) -> jax.Array:
+    """The cuSOLVER-reference analogue: XLA's single-call Cholesky."""
+    return jnp.linalg.cholesky(a)

@@ -1,0 +1,622 @@
+"""Distributed tiled GP: block-cyclic Cholesky + solves via shard_map.
+
+This implements the paper's stated *future work* — "extend the library to
+distributed multi-GPU environments to overcome single-node memory limits" —
+on TPU meshes, scaling the tiled pipeline to 256-chip pods and 512-chip
+multi-pod meshes.
+
+Layout (ScaLAPACK-style 2-D block-cyclic):
+
+    process grid (P, Q) = (prod(row_axes), prod(col_axes)) over the mesh
+    tile (I, J) lives on process (I mod P, J mod Q), local slot (I//P, J//Q)
+    local store: (Mp, Mq, m, m) with Mp = M/P, Mq = M/Q
+
+Cyclic (not blocked) distribution keeps the trailing-submatrix update load
+balanced as the factorization shrinks — the classic ScaLAPACK argument; with
+a blocked layout the top-left processes idle after the first panels.
+
+Per step J the SPMD program does:
+  1. column broadcast:  psum-mask the K column J tiles across ``col_axes``
+  2. panel factor:      POTRF redundantly (m^3, negligible); TRSM split
+                        across process columns (Q-way) then re-gathered
+  3. panel all-gather:  full L panel to every process (``row_axes`` gather)
+  4. trailing update:   local batched GEMM/SYRK on owned tiles (masked)
+
+Two execution modes:
+  * ``unroll=False`` — ``lax.fori_loop`` body with full-grid masked updates;
+    compact HLO, used by correctness tests (small M; masking waste is small).
+  * ``unroll=True``  — trace-time loop with statically shrinking active
+    slices; near-zero wasted FLOPs, used by the dry-run / roofline path.
+
+The forward/backward substitutions for the predictive mean and the matrix
+solve for predictive variances follow the same pattern (see functions below).
+Everything is f32 by default (TPU has no f64 MXU; see DESIGN.md §2), with
+optional bf16 trailing updates (mixed precision, paper future work).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import kernels_math as km
+
+shard_map = jax.shard_map
+
+
+# ---------------------------------------------------------------------------
+# SPMD helpers.
+# ---------------------------------------------------------------------------
+
+
+def _axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _linear_index(axes: Sequence[str]):
+    """Linearized device index over possibly-multiple mesh axes."""
+    idx = lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def _gather_axes(x: jax.Array, axes: Sequence[str]) -> jax.Array:
+    """all_gather over multiple axes; leading dim ordered by linear index."""
+    for a in reversed(axes):
+        x = lax.all_gather(x, a, axis=0, tiled=False)
+    # after gathering a1 then a0 we have (S0, S1, ...) -> flatten
+    sizes = [lax.axis_size(a) for a in axes]
+    return x.reshape((int(np.prod(sizes)),) + x.shape[len(sizes):])
+
+
+def _psum(x, axes: Sequence[str]):
+    return lax.psum(x, tuple(axes))
+
+
+# ---------------------------------------------------------------------------
+# The distributed factorization (SPMD inner function).
+# ---------------------------------------------------------------------------
+
+
+def _panel_from_gather(col_gather: jax.Array, p: int) -> jax.Array:
+    """(P, Mp, m, m) row-gathered column -> (M, m, m) in global tile order."""
+    return jnp.swapaxes(col_gather, 0, 1).reshape(
+        (-1,) + col_gather.shape[2:]
+    )  # [ip, r] -> I = ip*P + r
+
+
+def _chol_step(
+    j,
+    local: jax.Array,
+    *,
+    m_tiles: int,
+    row_axes: Tuple[str, ...],
+    col_axes: Tuple[str, ...],
+    p: int,
+    q: int,
+    update_dtype=None,
+) -> jax.Array:
+    """One right-looking factorization step.
+
+    ``j`` may be traced (fori_loop path: full-size masked ops every step) or
+    a Python int (unrolled path: statically-shrinking active slices — the
+    trailing update and the panel gather touch only tile rows/cols ≥ j, the
+    §Perf hillclimb that removes the 3.2× masked-FLOP and 2× gather waste).
+    """
+    mp, mq, m, _ = local.shape
+    pr = _linear_index(row_axes)
+    pc = _linear_index(col_axes)
+    static = isinstance(j, int)
+    # conservative static bounds covering every device's active local slots
+    ip0 = (j // p) if static else 0          # local rows with glob >= j (some device)
+    kq0 = (j // q) if static else 0
+    # panel indexing below requires the active column range to start at or
+    # after the gathered row base; holds whenever q divides p (all meshes here)
+    assert not static or kq0 * q >= (j // p) * p, (p, q, j)
+    glob_i = jnp.arange(ip0, mp) * p + pr    # global row index of local slot
+    glob_k = jnp.arange(kq0, mq) * q + pc    # global col index of local slot
+    n_act = mp - ip0
+    jq = j // q
+    owner_q = j % q
+
+    # -- 1. broadcast (active rows of) column j across process columns ------
+    # mixed precision (paper future work): panel COMMUNICATION in the update
+    # dtype (bf16 halves the dominant wire term); the diagonal tile is
+    # re-broadcast in full precision for the POTRF/TRSM numerics.
+    comm_dtype = update_dtype if update_dtype is not None else local.dtype
+    col_local = lax.dynamic_slice_in_dim(local, jq, 1, axis=1)[ip0:, 0]   # (Na,m,m)
+    col_local = jnp.where(pc == owner_q, col_local, jnp.zeros_like(col_local))
+    col_bcast = _psum(col_local, col_axes)                                # (Na,m,m)
+    # NOTE: the panel stays in comm_dtype through all consumers (an immediate
+    # upcast would let the simplifier cancel the casts).  Backend caveat: the
+    # CPU backend lowers ALL collectives in f32 (converts around every
+    # all-gather — verified on a minimal case), so the wire saving is
+    # invisible in CPU-compiled HLO; on TPU bf16 collectives are native and
+    # the gather payload halves.  EXPERIMENTS.md §Perf accounts for this.
+    def _comm_cast(x):
+        if comm_dtype == local.dtype:
+            return x
+        return lax.optimization_barrier(x.astype(comm_dtype))
+
+    col_gather = _gather_axes(_comm_cast(col_bcast), row_axes)           # (P,Na,m,m)
+    orig_panel = _panel_from_gather(col_gather, p)
+    base = ip0 * p
+
+    # -- 2. panel factorization (redundant POTRF, split TRSM) ---------------
+    # the diagonal tile travels in full precision (4 MB psum — negligible
+    # wire) so POTRF/TRSM numerics are unaffected by bf16 panel comms
+    dslot = j // p - ip0
+    drow = (
+        col_bcast[dslot]
+        if static
+        else lax.dynamic_index_in_dim(col_bcast, dslot, keepdims=False)
+    )
+    diag = _psum(
+        jnp.where(pr == j % p, drow, jnp.zeros_like(drow)), row_axes
+    )
+    ljj = jnp.linalg.cholesky(diag)
+
+    def trsm(b):
+        return lax.linalg.triangular_solve(
+            ljj, b, left_side=False, lower=True, transpose_a=True
+        )
+
+    if n_act >= q:
+        # split the active rows across process columns, re-gather (padded to
+        # a multiple of q so every shard solves the same static size)
+        split = -(-n_act // q)
+        pad = split * q - n_act
+        col_pad = jnp.concatenate([col_bcast, col_bcast[:pad]], 0) if pad else col_bcast
+        my = lax.dynamic_slice_in_dim(col_pad, pc * split, split, axis=0)
+        solved = _comm_cast(jax.vmap(trsm)(my))
+        solved = _gather_axes(solved, col_axes).reshape(
+            (split * q,) + col_bcast.shape[1:]
+        )
+        solved = solved[:n_act]
+    else:
+        solved = _comm_cast(jax.vmap(trsm)(col_bcast))
+    sol_gather = _gather_axes(solved, row_axes)
+    sol_panel = _panel_from_gather(sol_gather, p)                         # (M-base,m,m)
+
+    gi = jnp.arange(base, m_tiles)
+    panel = jnp.where(
+        (gi > j)[:, None, None],
+        sol_panel,
+        jnp.where((gi == j)[:, None, None], ljj.astype(comm_dtype)[None], orig_panel),
+    )
+
+    # -- 3. trailing update on owned active tiles ----------------------------
+    a = panel[glob_i - base]                                              # (Na,m,m)
+    b = panel[glob_k - base]                                              # (Nk,m,m)
+    if update_dtype is not None:
+        upd = jnp.einsum(
+            "iab,kcb->ikac", a.astype(update_dtype), b.astype(update_dtype)
+        ).astype(local.dtype)
+    else:
+        upd = jnp.einsum("iab,kcb->ikac", a, b)
+    mask = (
+        (glob_i[:, None] > j) & (glob_k[None, :] > j) & (glob_i[:, None] >= glob_k[None, :])
+    )
+    local = local.at[ip0:, kq0:].add(-jnp.where(mask[:, :, None, None], upd, 0.0))
+
+    # -- 4. write back the factored column -----------------------------------
+    cur = lax.dynamic_slice_in_dim(local, jq, 1, 1)[ip0:, 0]
+    new_col = jnp.where(pc == owner_q, a, cur)
+    col_full = lax.dynamic_slice_in_dim(local, jq, 1, 1)[:, 0].at[ip0:].set(new_col)
+    local = lax.dynamic_update_slice_in_dim(local, col_full[:, None], jq, axis=1)
+    return local
+
+
+def _spmd_cholesky(
+    local: jax.Array,
+    *,
+    m_tiles: int,
+    row_axes: Tuple[str, ...],
+    col_axes: Tuple[str, ...],
+    p: int,
+    q: int,
+    unroll: bool,
+    update_dtype=None,
+) -> jax.Array:
+    """In-place factorization of the local block-cyclic tile store."""
+    step = functools.partial(
+        _chol_step,
+        m_tiles=m_tiles,
+        row_axes=row_axes,
+        col_axes=col_axes,
+        p=p,
+        q=q,
+        update_dtype=update_dtype,
+    )
+    if unroll:
+        for j in range(m_tiles):
+            local = step(j, local)
+        return local
+    return lax.fori_loop(0, m_tiles, step, local)
+
+
+def _spmd_forward_solve(local, y_rep, *, m_tiles, row_axes, col_axes, p, q):
+    """Solve L b = y with L block-cyclic local tiles; y replicated (M, m).
+
+    Sequential over tile rows; the inner reduction uses the already-solved
+    replicated prefix, so each step is: local partial matvec -> psum -> solve.
+    Returns replicated b (M, m).
+    """
+    mp, mq, m, _ = local.shape
+    pr = _linear_index(row_axes)
+    pc = _linear_index(col_axes)
+    glob_i = jnp.arange(mp) * p + pr
+    glob_k = jnp.arange(mq) * q + pc
+
+    def step(i, b):
+        # partial = sum over owned tiles (i, k) with k < i of L_ik @ b_k
+        row_sel = (glob_i == i)                                    # (Mp,)
+        col_sel = (glob_k < i)                                     # (Mq,)
+        mask = (row_sel[:, None] & col_sel[None, :]).astype(local.dtype)
+        contrib = jnp.einsum("ikab,kb,ik->a", local, b[glob_k], mask)
+        acc = _psum(contrib, tuple(row_axes) + tuple(col_axes))
+        # diagonal tile (i, i): owner broadcasts via psum-mask
+        own = ((glob_i == i)[:, None] & (glob_k == i)[None, :]).astype(local.dtype)
+        lii = _psum(jnp.einsum("ikab,ik->ab", local, own), tuple(row_axes) + tuple(col_axes))
+        rhs = b[i] - acc
+        bi = lax.linalg.triangular_solve(
+            lii, rhs[:, None], left_side=True, lower=True
+        )[:, 0]
+        return b.at[i].set(bi)
+
+    return lax.fori_loop(0, m_tiles, step, y_rep)
+
+
+def _spmd_backward_solve(local, b_rep, *, m_tiles, row_axes, col_axes, p, q):
+    """Solve L^T a = b; uses tiles (k, i) with k > i: (L^T)_{i,k} = L_{k,i}^T."""
+    mp, mq, m, _ = local.shape
+    pr = _linear_index(row_axes)
+    pc = _linear_index(col_axes)
+    glob_i = jnp.arange(mp) * p + pr
+    glob_k = jnp.arange(mq) * q + pc
+
+    def step(t, a):
+        i = m_tiles - 1 - t
+        row_sel = glob_i > i          # rows k > i (stored tiles L_{k,i})
+        col_sel = glob_k == i
+        mask = (row_sel[:, None] & col_sel[None, :]).astype(local.dtype)
+        contrib = jnp.einsum("ikba,ik,ib->a", local, mask, a[glob_i])
+        acc = _psum(contrib, tuple(row_axes) + tuple(col_axes))
+        own = ((glob_i == i)[:, None] & (glob_k == i)[None, :]).astype(local.dtype)
+        lii = _psum(jnp.einsum("ikab,ik->ab", local, own), tuple(row_axes) + tuple(col_axes))
+        rhs = a[i] - acc
+        ai = lax.linalg.triangular_solve(
+            lii, rhs[:, None], left_side=True, lower=True, transpose_a=True
+        )[:, 0]
+        return a.at[i].set(ai)
+
+    return lax.fori_loop(0, m_tiles, step, b_rep)
+
+
+def _spmd_assemble(
+    x_chunks: jax.Array,
+    params: km.SEKernelParams,
+    n_valid: int,
+    *,
+    row_axes,
+    col_axes,
+    p: int,
+    q: int,
+):
+    """Assemble the local block-cyclic lower tiles from replicated x chunks.
+
+    Only tiles with I >= K hold covariance; strictly-upper local tiles are
+    zeroed (they are never read).  Fewer kernel evaluations than a dense
+    assembly — the tiled-assembly saving the paper reports in Fig. 4.
+    """
+    m_tiles, m, _ = x_chunks.shape
+    pr = _linear_index(row_axes)
+    pc = _linear_index(col_axes)
+    mp, mq = m_tiles // p, m_tiles // q
+    glob_i = jnp.arange(mp) * p + pr
+    glob_k = jnp.arange(mq) * q + pc
+
+    def tile(i, k):
+        xa, xb = x_chunks[i], x_chunks[k]
+        kk = km.se_kernel(xa, xb, params)
+        gi = i * m + jnp.arange(m)[:, None]
+        gj = k * m + jnp.arange(m)[None, :]
+        on_diag = gi == gj
+        kk = kk + jnp.where(on_diag, params.noise, 0.0).astype(kk.dtype)
+        valid = (gi < n_valid) & (gj < n_valid)
+        kk = jnp.where(valid, kk, on_diag.astype(kk.dtype))
+        return jnp.where(i >= k, kk, jnp.zeros_like(kk))
+
+    return jax.vmap(lambda i: jax.vmap(lambda k: tile(i, k))(glob_k))(glob_i)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points.
+# ---------------------------------------------------------------------------
+
+
+def grid_shape(mesh: Mesh, row_axes=("data",), col_axes=("model",)) -> Tuple[int, int]:
+    return _axes_size(mesh, row_axes), _axes_size(mesh, col_axes)
+
+
+def local_tiles_sharding(mesh: Mesh, row_axes=("data",), col_axes=("model",)):
+    """Sharding for the (P*Mp, Q*Mq, m, m) global view of the cyclic store.
+
+    The global array is laid out (row_proc-major, see distribute/collect);
+    sharded on dims 0 and 1 so each device holds its (Mp, Mq, m, m) block.
+    """
+    return NamedSharding(mesh, P(tuple(row_axes), tuple(col_axes), None, None))
+
+
+def distributed_gp_predict_fn(
+    mesh: Mesh,
+    *,
+    m_tiles: int,
+    tile_size: int,
+    n_valid: int,
+    n_test_valid: int,
+    params: km.SEKernelParams,
+    row_axes: Tuple[str, ...] = ("data",),
+    col_axes: Tuple[str, ...] = ("model",),
+    unroll: bool = False,
+    update_dtype=None,
+    variances: bool = True,
+):
+    """Build the jit-able distributed GP predict program.
+
+    Inputs (replicated): x_chunks (M, m, D), y_chunks (M, m),
+    xt_chunks (Mt, m, D).  Output: mean (Mt, m) [, var (Mt, m)] replicated.
+
+    The covariance (the O(n^2) memory object) never exists unsharded; each
+    device assembles and factors only its block-cyclic tiles.
+    """
+    p, q = grid_shape(mesh, row_axes, col_axes)
+    if m_tiles % p or m_tiles % q:
+        raise ValueError(f"m_tiles={m_tiles} must divide process grid {(p, q)}")
+
+    def fn(x_chunks, y_chunks, xt_chunks):
+        local = _spmd_assemble(
+            x_chunks, params, n_valid, row_axes=row_axes, col_axes=col_axes, p=p, q=q
+        )
+        local = _spmd_cholesky(
+            local,
+            m_tiles=m_tiles,
+            row_axes=row_axes,
+            col_axes=col_axes,
+            p=p,
+            q=q,
+            unroll=unroll,
+            update_dtype=update_dtype,
+        )
+        beta = _spmd_forward_solve(
+            local, y_chunks, m_tiles=m_tiles, row_axes=row_axes, col_axes=col_axes, p=p, q=q
+        )
+        alpha = _spmd_backward_solve(
+            local, beta, m_tiles=m_tiles, row_axes=row_axes, col_axes=col_axes, p=p, q=q
+        )
+        # predictive mean: K_* @ alpha — test chunks replicated, cheap O(n n̂)
+        mean = _predict_mean(xt_chunks, x_chunks, alpha, params, n_test_valid, n_valid)
+        if not variances:
+            return mean
+        var = _spmd_variances(
+            local,
+            x_chunks,
+            xt_chunks,
+            params,
+            n_valid,
+            n_test_valid,
+            m_tiles=m_tiles,
+            row_axes=row_axes,
+            col_axes=col_axes,
+            p=p,
+            q=q,
+        )
+        return mean, var
+
+    in_specs = (P(), P(), P())
+    out_specs = (P(), P()) if variances else P()
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_vma=False)
+
+
+def _predict_mean(xt_chunks, x_chunks, alpha, params, nt_valid, n_valid):
+    mt, m, _ = xt_chunks.shape
+
+    def row(xa, r0):
+        def col(xb, c0):
+            kk = km.se_kernel(xa, xb, params)
+            gi = r0 + jnp.arange(m)[:, None]
+            gj = c0 + jnp.arange(m)[None, :]
+            return jnp.where((gi < nt_valid) & (gj < n_valid), kk, 0.0)
+
+        tiles = jax.vmap(col)(x_chunks, jnp.arange(x_chunks.shape[0]) * m)
+        return jnp.einsum("kab,kb->a", tiles, alpha)
+
+    return jax.vmap(row)(xt_chunks, jnp.arange(mt) * m)
+
+
+def _var_step(j, b, *, local, m_tiles, row_axes, col_axes, p, q):
+    """One row of the distributed matrix forward-solve L V = K_{X,X̂}."""
+    pc = _linear_index(col_axes)
+    jq = j // q
+    owner_q = j % q
+    col_local = lax.dynamic_slice_in_dim(local, jq, 1, axis=1)[:, 0]
+    col_local = jnp.where(pc == owner_q, col_local, jnp.zeros_like(col_local))
+    col_bcast = _psum(col_local, col_axes)
+    col_gather = _gather_axes(col_bcast, row_axes)
+    panel = _panel_from_gather(col_gather, p)          # (M, m, m) column j of L
+    ljj = lax.dynamic_index_in_dim(panel, j, keepdims=False)
+    vj = jax.vmap(
+        lambda bb: lax.linalg.triangular_solve(ljj, bb, left_side=True, lower=True)
+    )(lax.dynamic_index_in_dim(b, j, keepdims=False))  # (mtq, m, m)
+    b = lax.dynamic_update_index_in_dim(b, vj, j, axis=0)
+    # update rows i > j:  B_i -= L_ij @ V_j
+    gi = jnp.arange(m_tiles)
+    upd = jnp.einsum("iab,qbc->iqac", panel, vj)
+    b = b - jnp.where((gi > j)[:, None, None, None], upd, 0.0)
+    return b
+
+
+def _spmd_variances(
+    local, x_chunks, xt_chunks, params, n_valid, nt_valid, *, m_tiles, row_axes, col_axes, p, q
+):
+    """Predictive variances diag(K_t,t - V^T V) where L V = K_{X,X̂}.
+
+    V is column-partitioned over the process grid's *column* axis: each
+    process column owns n̂/Q test columns; rows are solved sequentially with
+    the same broadcast pattern as the cholesky.  Variances need only the
+    diagonal blocks of V^T V, which are local per column — a single final
+    all-gather returns the replicated result.
+    """
+    mp, mq, m, _ = local.shape
+    pr = _linear_index(row_axes)
+    pc = _linear_index(col_axes)
+    glob_i = jnp.arange(mp) * p + pr
+    glob_k = jnp.arange(mq) * q + pc
+    mt = xt_chunks.shape[0]
+    if mt % q:
+        raise ValueError(f"test tiles {mt} must divide process columns {q}")
+    mtq = mt // q
+    # local test chunk block: columns [pc*mtq, (pc+1)*mtq)
+    xt_loc = lax.dynamic_slice_in_dim(xt_chunks, pc * mtq, mtq, axis=0)
+    t0 = pc * mtq * m
+
+    # local RHS tiles B_{i, c} = K(x_i, xt_c): (M, mtq, m, m) — row-replicated,
+    # column-partitioned.  Solved in place into V.
+    def rhs_row(i):
+        def c(xb, cix):
+            kk = km.se_kernel(x_chunks[i], xb, params)
+            gi = i * m + jnp.arange(m)[:, None]
+            gj = t0 + cix * m + jnp.arange(m)[None, :]
+            return jnp.where((gi < n_valid) & (gj < nt_valid), kk, 0.0)
+
+        return jax.vmap(c)(xt_loc, jnp.arange(mtq))
+
+    b = jax.vmap(rhs_row)(jnp.arange(m_tiles))            # (M, mtq, m, m)
+    step = functools.partial(
+        _var_step, local=local, m_tiles=m_tiles, row_axes=row_axes,
+        col_axes=col_axes, p=p, q=q,
+    )
+    v = lax.fori_loop(0, m_tiles, step, b)                # (M, mtq, m, m)
+    # diagonal of W = V^T V for owned columns, then prior diag, then gather
+    w_diag = jnp.einsum("iqab,iqab->qb", v, v)            # (mtq, m)
+    gj = t0 + jnp.arange(mtq)[:, None] * m + jnp.arange(m)[None, :]
+    prior_diag = (params.vertical * jnp.ones_like(w_diag)).astype(w_diag.dtype)
+    var_loc = jnp.where(gj < nt_valid, prior_diag - w_diag, 0.0)
+    var = _gather_axes(var_loc, col_axes).reshape(mt, m)
+    # replicated across rows already identical; psum-average across rows not needed
+    return var
+
+
+def distributed_cholesky_fn(
+    mesh: Mesh,
+    *,
+    m_tiles: int,
+    row_axes: Tuple[str, ...] = ("data",),
+    col_axes: Tuple[str, ...] = ("model",),
+    unroll: bool = False,
+    update_dtype=None,
+):
+    """shard_map program: global cyclic tile store -> factored store.
+
+    The global array has shape (M, M, m, m) in *cyclic order*: element
+    [a, b] is the tile at grid position (a % P ... ) — callers should use
+    :func:`to_cyclic_layout` / :func:`from_cyclic_layout` to convert.
+    """
+    p, q = grid_shape(mesh, row_axes, col_axes)
+    if m_tiles % p or m_tiles % q:
+        raise ValueError(f"m_tiles={m_tiles} must divide grid {(p, q)}")
+
+    def fn(local):
+        return _spmd_cholesky(
+            local,
+            m_tiles=m_tiles,
+            row_axes=row_axes,
+            col_axes=col_axes,
+            p=p,
+            q=q,
+            unroll=unroll,
+            update_dtype=update_dtype,
+        )
+
+    spec = P(tuple(row_axes), tuple(col_axes), None, None)
+    return shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                     check_vma=False)
+
+
+def cholesky_step_probe_fn(
+    mesh: Mesh,
+    *,
+    m_tiles: int,
+    row_axes: Tuple[str, ...] = ("data",),
+    col_axes: Tuple[str, ...] = ("model",),
+    update_dtype=None,
+):
+    """One factorization step as a standalone shard_map program.
+
+    Used by the dry-run cost accounting: ``cost(step) × M`` corrects the
+    once-per-while-body undercount of ``cost_analysis`` on the fori_loop
+    program (step cost is j-independent in the masked formulation).
+    """
+    p, q = grid_shape(mesh, row_axes, col_axes)
+
+    def fn(local, j):
+        return _chol_step(
+            j, local, m_tiles=m_tiles, row_axes=row_axes, col_axes=col_axes,
+            p=p, q=q, update_dtype=update_dtype,
+        )
+
+    spec = P(tuple(row_axes), tuple(col_axes), None, None)
+    return shard_map(fn, mesh=mesh, in_specs=(spec, P()), out_specs=spec,
+                     check_vma=False)
+
+
+def variance_step_probe_fn(
+    mesh: Mesh,
+    *,
+    m_tiles: int,
+    row_axes: Tuple[str, ...] = ("data",),
+    col_axes: Tuple[str, ...] = ("model",),
+):
+    """One matrix-forward-solve step (the uncertainty pipeline) standalone."""
+    p, q = grid_shape(mesh, row_axes, col_axes)
+
+    def fn(local, b, j):
+        return _var_step(
+            j, b, local=local, m_tiles=m_tiles, row_axes=row_axes,
+            col_axes=col_axes, p=p, q=q,
+        )
+
+    spec = P(tuple(row_axes), tuple(col_axes), None, None)
+    return shard_map(fn, mesh=mesh, in_specs=(spec, P(), P()), out_specs=P(),
+                     check_vma=False)
+
+
+def to_cyclic_layout(tiles: jax.Array, p: int, q: int) -> jax.Array:
+    """(M, M, m, m) natural tile grid -> cyclic layout for the shard_map path.
+
+    Natural tile (I, J) moves to position (I % P * Mp + I // P,
+    J % Q * Mq + J // Q) so that a plain blocked PartitionSpec sharding puts
+    it on process (I % P, J % Q) at local slot (I // P, J // Q).
+    """
+    m_tiles = tiles.shape[0]
+    mp, mq = m_tiles // p, m_tiles // q
+    pos_r = np.array([(i % p) * mp + i // p for i in range(m_tiles)])
+    pos_c = np.array([(j % q) * mq + j // q for j in range(m_tiles)])
+    return tiles[np.argsort(pos_r)][:, np.argsort(pos_c)]
+
+
+def from_cyclic_layout(tiles: jax.Array, p: int, q: int) -> jax.Array:
+    m_tiles = tiles.shape[0]
+    mp, mq = m_tiles // p, m_tiles // q
+    pos_r = np.array([(i % p) * mp + i // p for i in range(m_tiles)])
+    pos_c = np.array([(j % q) * mq + j // q for j in range(m_tiles)])
+    return tiles[pos_r][:, pos_c]

@@ -1,0 +1,122 @@
+"""User-facing Gaussian-process API (GPRat-style).
+
+Mirrors the GPRat Python API surface: construct with data + hyperparameters,
+then ``predict`` / ``predict_with_uncertainty`` / ``predict_full_cov``.
+Backend selection:
+
+* ``pipeline="tiled"``      — the paper's tiled pipeline (default)
+* ``pipeline="monolithic"`` — the cuSOLVER-reference analogue
+
+* ``op_backend="jnp"``      — XLA ops per tile task
+* ``op_backend="pallas"``   — explicit Pallas VMEM kernels per tile task
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernels_math as km
+from repro.core import predict as pred
+
+
+@dataclasses.dataclass
+class GaussianProcess:
+    x_train: jax.Array
+    y_train: jax.Array
+    params: km.SEKernelParams = dataclasses.field(
+        default_factory=km.SEKernelParams.paper_defaults
+    )
+    tile_size: int = 256
+    n_streams: Optional[int] = None
+    pipeline: str = "tiled"
+    op_backend: str = "jnp"
+    update_dtype: Optional[object] = None
+    dtype: object = jnp.float32
+
+    def __post_init__(self):
+        self.x_train = jnp.atleast_2d(jnp.asarray(self.x_train, self.dtype))
+        if self.x_train.shape[0] == 1 and self.x_train.ndim == 2:
+            # allow (n,) inputs for 1-D problems
+            pass
+        self.y_train = jnp.asarray(self.y_train, self.dtype).reshape(-1)
+        if self.x_train.shape[0] != self.y_train.shape[0]:
+            self.x_train = self.x_train.T
+        assert self.x_train.shape[0] == self.y_train.shape[0]
+
+    # -- prediction ---------------------------------------------------------
+
+    def predict(self, x_test: jax.Array) -> jax.Array:
+        x_test = self._prep(x_test)
+        if self.pipeline == "monolithic":
+            return pred.predict_monolithic(
+                self.x_train, self.y_train, x_test, self.params, dtype=self.dtype
+            )
+        return pred.predict(
+            self.x_train,
+            self.y_train,
+            x_test,
+            self.params,
+            self.tile_size,
+            n_streams=self.n_streams,
+            backend=self.op_backend,
+            update_dtype=self.update_dtype,
+            dtype=self.dtype,
+        )
+
+    def predict_full_cov(self, x_test: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """The paper's *Predict with Full Covariance Matrix* operation."""
+        x_test = self._prep(x_test)
+        if self.pipeline == "monolithic":
+            return pred.predict_monolithic(
+                self.x_train,
+                self.y_train,
+                x_test,
+                self.params,
+                full_cov=True,
+                dtype=self.dtype,
+            )
+        return pred.predict(
+            self.x_train,
+            self.y_train,
+            x_test,
+            self.params,
+            self.tile_size,
+            full_cov=True,
+            n_streams=self.n_streams,
+            backend=self.op_backend,
+            update_dtype=self.update_dtype,
+            dtype=self.dtype,
+        )
+
+    def predict_with_uncertainty(self, x_test: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        mean, sigma = self.predict_full_cov(x_test)
+        return mean, jnp.diagonal(sigma)
+
+    # -- hyperparameters ----------------------------------------------------
+
+    def log_marginal_likelihood(self) -> jax.Array:
+        from repro.core import mll
+
+        return -mll.negative_log_marginal_likelihood(
+            self.x_train, self.y_train, self.params, dtype=self.dtype
+        )
+
+    def optimize(self, steps: int = 100, lr: float = 0.05) -> "GaussianProcess":
+        """Fit hyperparameters by Adam on the negative log marginal likelihood."""
+        from repro.core import mll
+
+        new_params, _ = mll.optimize_hyperparameters(
+            self.x_train, self.y_train, self.params, steps=steps, lr=lr, dtype=self.dtype
+        )
+        self.params = new_params
+        return self
+
+    def _prep(self, x_test: jax.Array) -> jax.Array:
+        x_test = jnp.asarray(x_test, self.dtype)
+        if x_test.ndim == 1:
+            x_test = x_test[:, None]
+        return x_test

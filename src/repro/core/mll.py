@@ -1,0 +1,89 @@
+"""GP hyperparameter optimization via the log marginal likelihood.
+
+Beyond the paper's scope (it fixes l=1, v=1, sigma^2=0.1) but part of the
+GPRat library proper; included for completeness (DESIGN.md §7).  The NLML is
+computed through the same Cholesky machinery and differentiated with JAX;
+hyperparameters are optimized in unconstrained log-space with Adam.
+
+    nlml = 0.5 * ( y^T alpha + log det K + n log 2 pi )
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cholesky as chol
+from repro.core import kernels_math as km
+
+
+def negative_log_marginal_likelihood(
+    x: jax.Array,
+    y: jax.Array,
+    params: km.SEKernelParams,
+    *,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Exact NLML through the monolithic Cholesky (differentiable)."""
+    x = x.astype(dtype)
+    y = y.astype(dtype)
+    n = y.shape[0]
+    k = km.assemble_covariance(x, params, dtype=dtype)
+    l = chol.monolithic_cholesky(k)
+    beta = jax.lax.linalg.triangular_solve(l, y[:, None], left_side=True, lower=True)
+    quad = jnp.sum(beta * beta)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(l)))
+    return 0.5 * (quad + logdet + n * math.log(2.0 * math.pi))
+
+
+def _unpack(raw: jax.Array) -> km.SEKernelParams:
+    # softplus keeps hyperparameters positive; raw is in R^3
+    sp = lambda z: jnp.logaddexp(z, 0.0)
+    return km.SEKernelParams(lengthscale=sp(raw[0]), vertical=sp(raw[1]), noise=sp(raw[2]))
+
+
+def _pack(params: km.SEKernelParams) -> jax.Array:
+    inv_sp = lambda p: jnp.log(jnp.expm1(jnp.maximum(jnp.asarray(p, jnp.float32), 1e-6)))
+    return jnp.stack(
+        [inv_sp(params.lengthscale), inv_sp(params.vertical), inv_sp(params.noise)]
+    )
+
+
+def optimize_hyperparameters(
+    x: jax.Array,
+    y: jax.Array,
+    init: km.SEKernelParams,
+    *,
+    steps: int = 100,
+    lr: float = 0.05,
+    dtype=jnp.float32,
+) -> Tuple[km.SEKernelParams, jax.Array]:
+    """Adam on the NLML in unconstrained space.  Returns (params, loss curve)."""
+
+    def loss(raw):
+        return negative_log_marginal_likelihood(x, y, _unpack(raw), dtype=dtype)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss))
+    raw = _pack(init)
+    m = jnp.zeros_like(raw)
+    v = jnp.zeros_like(raw)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    losses = []
+
+    @jax.jit
+    def update(raw, m, v, t):
+        val, g = grad_fn(raw)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1**t)
+        vhat = v / (1 - b2**t)
+        raw = raw - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return raw, m, v, val
+
+    for t in range(1, steps + 1):
+        raw, m, v, val = update(raw, m, v, jnp.asarray(t, jnp.float32))
+        losses.append(val)
+    return _unpack(raw), jnp.stack(losses)

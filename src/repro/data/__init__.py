@@ -1,0 +1,1 @@
+"""Data substrate: simulators, dataset builders, host→device pipelines."""

@@ -1,0 +1,139 @@
+"""Coupled mass-spring-damper simulator + NFIR dataset (paper Section 1).
+
+The paper's system-identification workload: a chain of masses coupled by
+springs and dampers; an input force u(t) drives the first mass and the
+observed output y(t) is the position of the last mass, which depends
+*non-linearly* on the force (a hardening cubic spring term provides the
+non-linearity, as is standard for MSD SI benchmarks).  Training/test data are
+input-output pairs sampled at a constant rate; the feature vector of an NFIR
+model is the window of the D most recent inputs (D "regressors" of lagged
+forces), the target is the current output position.
+
+GPRat ships an equivalent simulator ("Datasets of arbitrary size can be
+generated with GPRat's mass-spring-damper simulator"); this is its JAX/numpy
+port, integrated with a fixed-step RK4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MSDConfig:
+    n_masses: int = 3
+    mass: float = 1.0
+    spring: float = 5.0          # linear spring constant
+    spring_cubic: float = 1.0    # hardening non-linearity (source of non-linear SI)
+    damper: float = 1.5
+    dt: float = 0.5              # observation rate (constant, as in the paper)
+    substeps: int = 20           # RK4 integrator substeps per observation
+    n_regressors: int = 16       # D lagged inputs per NFIR feature vector
+    noise_std: float = 0.05     # observation noise on y
+    force_scale: float = 4.0
+    force_cutoff: float = 0.25   # low-pass smoothing factor of the random force
+
+
+def _accel(pos: np.ndarray, vel: np.ndarray, u: float, cfg: MSDConfig) -> np.ndarray:
+    """Chain dynamics: m q̈_i = spring forces + damping + external force on mass 0."""
+    nm = cfg.n_masses
+    # extension of spring i connects mass i-1 to mass i (spring 0 to the wall)
+    ext = np.empty(nm)
+    ext[0] = pos[0]
+    ext[1:] = pos[1:] - pos[:-1]
+    f_spring = -(cfg.spring * ext + cfg.spring_cubic * ext**3)
+    vel_ext = np.empty(nm)
+    vel_ext[0] = vel[0]
+    vel_ext[1:] = vel[1:] - vel[:-1]
+    f_damp = -cfg.damper * vel_ext
+    f = f_spring + f_damp
+    # reaction of the spring above (each spring also pulls its upper mass)
+    f[:-1] -= f_spring[1:] + f_damp[1:]
+    f[0] += u
+    return f / cfg.mass
+
+
+def simulate(
+    n_steps: int, cfg: MSDConfig = MSDConfig(), seed: int = 0
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Simulate the chain under a smoothed random force.
+
+    Returns (u, y): input force and output position of the last mass, both
+    (n_steps,) float64 observed at rate 1/dt.
+    """
+    rng = np.random.default_rng(seed)
+    pos = np.zeros(cfg.n_masses)
+    vel = np.zeros(cfg.n_masses)
+    u_seq = np.empty(n_steps)
+    y_seq = np.empty(n_steps)
+    u = 0.0
+    h = cfg.dt / cfg.substeps
+    for t in range(n_steps):
+        # smoothed random walk force (band-limited excitation)
+        u = (1 - cfg.force_cutoff) * u + cfg.force_cutoff * rng.normal(
+            0.0, cfg.force_scale
+        )
+        for _ in range(cfg.substeps):
+            # RK4 on (pos, vel) with constant u over the substep
+            k1v = _accel(pos, vel, u, cfg)
+            k1x = vel
+            k2v = _accel(pos + 0.5 * h * k1x, vel + 0.5 * h * k1v, u, cfg)
+            k2x = vel + 0.5 * h * k1v
+            k3v = _accel(pos + 0.5 * h * k2x, vel + 0.5 * h * k2v, u, cfg)
+            k3x = vel + 0.5 * h * k2v
+            k4v = _accel(pos + h * k3x, vel + h * k3v, u, cfg)
+            k4x = vel + h * k3v
+            pos = pos + (h / 6.0) * (k1x + 2 * k2x + 2 * k3x + k4x)
+            vel = vel + (h / 6.0) * (k1v + 2 * k2v + 2 * k3v + k4v)
+        u_seq[t] = u
+        y_seq[t] = pos[-1]
+    y_seq = y_seq + rng.normal(0.0, cfg.noise_std, size=n_steps)
+    return u_seq, y_seq
+
+
+def nfir_features(
+    u: np.ndarray, y: np.ndarray, n_regressors: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """NFIR feature matrix: x_t = [u_t, u_{t-1}, ..., u_{t-D+1}], target y_t."""
+    n = len(u) - n_regressors + 1
+    idx = np.arange(n)[:, None] + np.arange(n_regressors)[None, :]
+    x = u[idx][:, ::-1]                       # most recent input first
+    return np.ascontiguousarray(x), y[n_regressors - 1 :].copy()
+
+
+def make_dataset(
+    n_train: int,
+    n_test: int,
+    cfg: MSDConfig = MSDConfig(),
+    seed: int = 0,
+    dtype=np.float32,
+    normalize: bool = True,
+):
+    """Train/test NFIR datasets from independent simulator rollouts.
+
+    ``normalize`` z-scores inputs and targets with *training* statistics —
+    required for the paper's fixed hyperparameters (l=1, v=1, σ²=0.1) to be
+    in a sensible regime for arbitrary system scales.
+    """
+    d = cfg.n_regressors
+    u_tr, y_tr = simulate(n_train + d - 1, cfg, seed=seed)
+    u_te, y_te = simulate(n_test + d - 1, cfg, seed=seed + 1)
+    if normalize:
+        u_mu, u_sd = u_tr.mean(), u_tr.std() + 1e-12
+        y_mu, y_sd = y_tr.mean(), y_tr.std() + 1e-12
+        # feature scale: with D z-scored lags, E|x-x'|^2 = 2D; rescale so the
+        # paper's fixed lengthscale l=1 sees O(1) squared distances.
+        f_sd = u_sd * np.sqrt(2.0 * d)
+        u_tr, u_te = (u_tr - u_mu) / f_sd, (u_te - u_mu) / f_sd
+        y_tr, y_te = (y_tr - y_mu) / y_sd, (y_te - y_mu) / y_sd
+    x_train, yy_train = nfir_features(u_tr, y_tr, d)
+    x_test, yy_test = nfir_features(u_te, y_te, d)
+    return (
+        x_train.astype(dtype),
+        yy_train.astype(dtype),
+        x_test.astype(dtype),
+        yy_test.astype(dtype),
+    )

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the tiled GP hot spots.
+
+The paper optimizes covariance assembly with custom CUDA kernels and runs the
+tile BLAS through cuBLAS/cuSOLVER.  Here each tile-op class is an explicit
+VMEM-tiled Pallas kernel (validated in interpret mode on CPU, lowered through
+Mosaic on TPU):
+
+  cov_assembly.py     batched SE-kernel covariance tiles (+ diag/padding masks)
+  potrf_tile.py       single-tile Cholesky in VMEM
+  trsm_tile.py        tile triangular solve X·Lᵀ = B (+ panel-batched form)
+  trailing_update.py  fused batched SYRK/GEMM  C −= A·Bᵀ  (MXU-blocked)
+  flash_attention.py  forward flash attention (online softmax, GQA) — the
+                      identified fix for the prefill-cell memory roofline
+
+ops.py — jit'd wrappers / dispatch;  ref.py — pure-jnp oracles for tests.
+"""

@@ -1,0 +1,162 @@
+"""Pallas kernel: forward flash attention (online softmax, VMEM-blocked).
+
+The §Perf analysis (EXPERIMENTS.md) shows every prefill cell is bound by the
+(B, H, S, T) attention-score HBM traffic of the XLA implementation — S²-sized
+buffers stream through HBM even when q-chunked.  This kernel removes that
+traffic entirely: scores exist only as a (bq × bk) block in VMEM; HBM sees
+just Q, K, V, O (4·S·hd per head instead of S²).
+
+Canonical online-softmax recurrence over kv blocks (k innermost grid dim,
+running stats in VMEM scratch):
+
+    m' = max(m, rowmax(S_blk));  c = exp(m − m')
+    l  = l·c + rowsum(exp(S_blk − m'))
+    acc = acc·c + exp(S_blk − m') @ V_blk
+    output (last block) = acc / l
+
+Causality is handled per-block: fully-masked blocks are skipped via the
+grid's lower-triangular structure check inside the kernel (`pl.when`).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0**30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, bq: int, bk: int, nk: int, softcap,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (not causal) or (j * bk <= i * bq + bq - 1)  # any unmasked entry?
+    if causal:
+        run_pred = j * bk <= i * bq + (bq - 1)
+    else:
+        run_pred = True
+
+    @pl.when(run_pred)
+    def _block():
+        q = q_ref[...].astype(jnp.float32)              # (bq, hd)
+        k = k_ref[...].astype(jnp.float32)              # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                        # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        if causal:
+            rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])                  # (bq, bk)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[...].astype(jnp.float32)               # (bk, hd)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_single(
+    q: jax.Array,       # (S, hd)
+    k: jax.Array,       # (T, hd)
+    v: jax.Array,       # (T, hd)
+    *,
+    causal: bool = True,
+    softcap=None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """One head: O(S·hd) HBM traffic, scores only ever block-resident."""
+    s, hd = q.shape
+    t = k.shape[0]
+    bq, bk = min(block_q, s), min(block_k, t)
+    if s % bq or t % bk:
+        raise ValueError(f"seq {s}/{t} must divide blocks {bq}/{bk}")
+    nq, nk = s // bq, t // bk
+    kern = functools.partial(
+        _flash_kernel,
+        scale=1.0 / math.sqrt(hd),
+        causal=causal,
+        bq=bq,
+        bk=bk,
+        nk=nk,
+        softcap=softcap,
+    )
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kern,
+        grid=(nq, nk),
+        in_specs=[
+            pl.BlockSpec((bq, hd), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, hd), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, hd), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, hd), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention(
+    q: jax.Array,       # (B, S, H, hd)
+    k: jax.Array,       # (B, T, KV, hd)
+    v: jax.Array,       # (B, T, KV, hd)
+    *,
+    causal: bool = True,
+    softcap=None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched GQA wrapper: maps heads onto their KV group."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+
+    fn = functools.partial(
+        flash_attention_single,
+        causal=causal,
+        softcap=softcap,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    # vmap over batch, kv-head, and group dims
+    inner = jax.vmap(fn, in_axes=(0, None, None))            # group
+    per_kv = jax.vmap(inner, in_axes=(0, 0, 0))              # kv head
+    per_b = jax.vmap(per_kv, in_axes=(0, 0, 0))              # batch
+    out = per_b(
+        qg.transpose(0, 2, 3, 1, 4),                          # (B,KV,G,S,hd)
+        k.transpose(0, 2, 1, 3),                              # (B,KV,T,hd)
+        v.transpose(0, 2, 1, 3),
+    )                                                         # (B,KV,G,S,hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)

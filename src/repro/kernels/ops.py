@@ -1,0 +1,147 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Exposes the same per-tile signatures as the jnp backend in
+``repro.core.cholesky`` (so the level scheduler can vmap them uniformly) plus
+the batched entry points and the covariance-assembly routines used by
+``repro.core.predict``.
+
+``interpret=True`` is selected automatically off-TPU: the kernel bodies
+execute in Python on CPU, which is how this container validates them; on a
+real TPU the same `pallas_call`s lower through Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tiling
+from repro.kernels import cov_assembly as _cov
+from repro.kernels import potrf_tile as _potrf
+from repro.kernels import trailing_update as _trail
+from repro.kernels import trsm_tile as _trsm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Per-tile ops (vmap-compatible, mirror repro.core.cholesky jnp backend).
+# ---------------------------------------------------------------------------
+
+
+def potrf(a: jax.Array) -> jax.Array:
+    return _potrf.potrf(a, interpret=_interpret())
+
+
+def trsm(ljj: jax.Array, b: jax.Array) -> jax.Array:
+    return _trsm.trsm(ljj, b, interpret=_interpret())
+
+
+def _cast(x, dt):
+    return x if dt is None else x.astype(dt)
+
+
+def syrk(kii: jax.Array, lij: jax.Array, update_dtype=None) -> jax.Array:
+    out = _trail.trailing_update(
+        kii[None],
+        _cast(lij, update_dtype)[None],
+        _cast(lij, update_dtype)[None],
+        block=_pick_block(kii.shape[-1]),
+        interpret=_interpret(),
+    )[0]
+    return out.astype(kii.dtype)
+
+
+def gemm(kik: jax.Array, lij: jax.Array, lkj: jax.Array, update_dtype=None) -> jax.Array:
+    out = _trail.trailing_update(
+        kik[None],
+        _cast(lij, update_dtype)[None],
+        _cast(lkj, update_dtype)[None],
+        block=_pick_block(kik.shape[-1]),
+        interpret=_interpret(),
+    )[0]
+    return out.astype(kik.dtype)
+
+
+def _pick_block(m: int) -> int:
+    # largest power-of-two block <= min(m, 256); MXU-aligned when m >= 128
+    b = 1
+    while b * 2 <= min(m, 256):
+        b *= 2
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Batched entry points (one kernel launch per scheduler level).
+# ---------------------------------------------------------------------------
+
+
+def trsm_panel(ljj: jax.Array, b_stack: jax.Array) -> jax.Array:
+    return _trsm.trsm_batched(ljj, b_stack, interpret=_interpret())
+
+
+def trailing_update_batch(c_stack, a_stack, b_stack, *, update_dtype=None):
+    return _trail.trailing_update(
+        c_stack,
+        _cast(a_stack, update_dtype),
+        _cast(b_stack, update_dtype),
+        block=_pick_block(c_stack.shape[-1]),
+        interpret=_interpret(),
+    ).astype(c_stack.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Covariance assembly (paper's custom CUDA kernels → Pallas).
+# ---------------------------------------------------------------------------
+
+
+def assemble_packed_covariance(x_chunks: jax.Array, params, n_valid: int) -> jax.Array:
+    """(M, m, D) padded chunks -> packed lower covariance tiles (T, m, m).
+
+    Hyperparameters must be concrete (the Pallas path bakes them in as
+    compile-time constants; use the jnp backend for NLML differentiation).
+    """
+    m_tiles, m, _ = x_chunks.shape
+    rows, cols = tiling._packed_coords(m_tiles)
+    return _cov.cov_tiles(
+        x_chunks[rows],
+        x_chunks[cols],
+        jnp.asarray(rows * m, jnp.int32),
+        jnp.asarray(cols * m, jnp.int32),
+        lengthscale=float(params.lengthscale),
+        vertical=float(params.vertical),
+        noise=float(params.noise),
+        n_valid_r=int(n_valid),
+        n_valid_c=int(n_valid),
+        symmetric=True,
+        interpret=_interpret(),
+    )
+
+
+def assemble_cross_tiles(
+    xt_chunks: jax.Array, x_chunks: jax.Array, params, nt_valid: int, n_valid: int
+) -> jax.Array:
+    """K_{X̂,X} tile grid (Mhat, M, m, m) via one batched kernel launch."""
+    mh, m, _ = xt_chunks.shape
+    mt = x_chunks.shape[0]
+    rows = np.repeat(np.arange(mh), mt)
+    cols = np.tile(np.arange(mt), mh)
+    flat = _cov.cov_tiles(
+        xt_chunks[rows],
+        x_chunks[cols],
+        jnp.asarray(rows * m, jnp.int32),
+        jnp.asarray(cols * m, jnp.int32),
+        lengthscale=float(params.lengthscale),
+        vertical=float(params.vertical),
+        noise=float(params.noise),
+        n_valid_r=int(nt_valid),
+        n_valid_c=int(n_valid),
+        symmetric=False,
+        interpret=_interpret(),
+    )
+    return flat.reshape(mh, mt, m, m)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the corresponding kernel is tested
+against (tests/test_kernels_*.py sweep shapes and dtypes and assert allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_cov_tile(
+    xa: jax.Array,
+    xb: jax.Array,
+    row0: int,
+    col0: int,
+    *,
+    lengthscale: float,
+    vertical: float,
+    noise: float,
+    n_valid_r: int,
+    n_valid_c: int,
+    symmetric: bool,
+) -> jax.Array:
+    """One (m, mb) covariance tile of the padded SE kernel matrix.
+
+    symmetric=True: training matrix semantics — +noise on the global
+    diagonal, identity on the padded region.  False: cross-covariance —
+    padded region is zero.
+    """
+    d2 = (
+        jnp.sum(xa * xa, -1)[:, None]
+        + jnp.sum(xb * xb, -1)[None, :]
+        - 2.0 * (xa @ xb.T)
+    )
+    d2 = jnp.maximum(d2, 0.0)
+    k = vertical * jnp.exp(-0.5 / lengthscale * d2)
+    gi = row0 + jnp.arange(xa.shape[0])[:, None]
+    gj = col0 + jnp.arange(xb.shape[0])[None, :]
+    on_diag = gi == gj
+    valid = (gi < n_valid_r) & (gj < n_valid_c)
+    if symmetric:
+        k = k + jnp.where(on_diag, noise, 0.0).astype(k.dtype)
+        return jnp.where(valid, k, on_diag.astype(k.dtype))
+    return jnp.where(valid, k, jnp.zeros((), k.dtype))
+
+
+def ref_potrf(a: jax.Array) -> jax.Array:
+    """Lower Cholesky factor of one SPD tile."""
+    return jnp.linalg.cholesky(a)
+
+
+def ref_trsm(ljj: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve X @ L^T = B with L lower triangular (right-looking panel op)."""
+    return jax.lax.linalg.triangular_solve(
+        ljj, b, left_side=False, lower=True, transpose_a=True
+    )
+
+
+def ref_trailing_update(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched C_i <- C_i - A_i @ B_i^T (SYRK when a is b)."""
+    return c - jnp.einsum("bik,bjk->bij", a, b)

@@ -1,0 +1,74 @@
+"""Pallas kernel: fused trailing-submatrix update (batched SYRK/GEMM).
+
+The MXU-critical operation of the tiled Cholesky: for every trailing tile
+(I, K) of step J,   C_IK ← C_IK − L_IJ · L_KJᵀ.   The level scheduler batches
+all updates of one step into a single `pallas_call` whose grid is
+
+    (batch, m/bm, m/bn, m/bk)
+
+with a canonical K-innermost accumulation: the output block stays resident in
+VMEM across the k steps (block revisiting), operand blocks stream HBM→VMEM,
+and each inner step is one (bm × bk)·(bk × bn)ᵀ MXU contraction.  Block sizes
+default to 256 (multiples of the 128-wide MXU); operands at bm=bn=bk=256 use
+3 · 256 KiB of VMEM — far below the ~16 MiB budget, leaving room for
+double-buffered pipelining by the Mosaic compiler.
+
+SYRK (diagonal tiles) reuses the same kernel with A == B; the symmetric
+half-FLOP saving is intentionally not exploited (uniform batched shape beats
+a divergent special case on the MXU — see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _update_kernel(c_ref, a_ref, b_ref, o_ref, *, nk: int, out_dtype):
+    k = pl.program_id(3)
+    upd = jax.lax.dot_general(
+        a_ref[0],
+        b_ref[0],
+        (((1,), (1,)), ((), ())),            # contract on dim 1 of both: A·Bᵀ
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[0] = (c_ref[0].astype(jnp.float32) - upd).astype(out_dtype)
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[0] = (o_ref[0].astype(jnp.float32) - upd).astype(out_dtype)
+
+
+def trailing_update(
+    c_stack: jax.Array,     # (B, m, m) trailing tiles C_IK
+    a_stack: jax.Array,     # (B, m, m) panel tiles L_IJ
+    b_stack: jax.Array,     # (B, m, m) panel tiles L_KJ
+    *,
+    block: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched C − A·Bᵀ with VMEM-blocked MXU accumulation."""
+    bsz, m, _ = c_stack.shape
+    bm = bn = bk = min(block, m)
+    if m % bm:
+        raise ValueError(f"tile size {m} must divide block {bm}")
+    nk = m // bk
+    kern = functools.partial(_update_kernel, nk=nk, out_dtype=c_stack.dtype)
+    return pl.pallas_call(
+        kern,
+        grid=(bsz, m // bm, m // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
+            pl.BlockSpec((1, bm, bk), lambda b, i, j, k: (b, i, k)),
+            pl.BlockSpec((1, bn, bk), lambda b, i, j, k: (b, j, k)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct(c_stack.shape, c_stack.dtype),
+        interpret=interpret,
+    )(c_stack, a_stack, b_stack)

@@ -1,0 +1,72 @@
+"""Pallas kernel: tile triangular solve  X · Lᵀ = B  (right-looking TRSM).
+
+This is the panel operation of the tiled Cholesky: given the freshly factored
+diagonal tile L (lower) and a sub-diagonal tile B, compute
+X = B · L^{-T}, i.e. column j of X is
+
+    X[:, j] = ( B[:, j] − Σ_{k<j} X[:, k] · L[j, k] ) / L[j, j]
+
+Both operands live in VMEM; each step does one (m × m)·(m,) masked matvec on
+the VPU/MXU plus a scale — no scalar code.  The batched form used by the
+level scheduler maps the tile batch onto the leading grid dimension.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _trsm_kernel(l_ref, b_ref, o_ref):
+    l = l_ref[...].astype(jnp.float32)          # (m, m) lower
+    b = b_ref[0].astype(jnp.float32)            # (m, m) RHS
+    m = l.shape[0]
+    idx = lax.iota(jnp.int32, m)
+    x0 = jnp.zeros_like(b)
+
+    def body(j, x):
+        lrow = lax.dynamic_slice_in_dim(l, j, 1, axis=0)[0]           # (m,)
+        ljj = lax.dynamic_index_in_dim(lrow, j, keepdims=False)
+        lrow = jnp.where(idx < j, lrow, 0.0)                          # k < j
+        s = x @ lrow                                                  # (m,)
+        bcol = lax.dynamic_slice_in_dim(b, j, 1, axis=1)[:, 0]
+        col = (bcol - s) / ljj
+        return lax.dynamic_update_slice_in_dim(x, col[:, None], j, axis=1)
+
+    x = lax.fori_loop(0, m, body, x0)
+    o_ref[0] = x.astype(o_ref.dtype)
+
+
+def trsm(ljj: jax.Array, b: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Solve X @ Lᵀ = B for one tile; ljj (m, m) lower, b (m, m)."""
+    m = ljj.shape[-1]
+    return pl.pallas_call(
+        _trsm_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m, m), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, m), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, m, m), b.dtype),
+        interpret=interpret,
+    )(ljj, b[None])[0]
+
+
+def trsm_batched(ljj: jax.Array, b_stack: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Solve X_i @ Lᵀ = B_i for a stack of tiles: the whole TRSM panel of one
+    factorization step as a single kernel launch (level-batched execution)."""
+    t, m, _ = b_stack.shape
+    return pl.pallas_call(
+        _trsm_kernel,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m, m), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, m), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, m, m), b_stack.dtype),
+        interpret=interpret,
+    )(ljj, b_stack)

@@ -1,0 +1,321 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell.
+
+The FIRST TWO LINES above must stay first: jax locks the device count on
+first init, and the dry-run needs 512 placeholder CPU devices to build the
+production meshes.  (Never set that flag globally — smoke tests and benches
+must see the single real device.)
+
+Per cell this driver:
+  1. builds the production mesh ((16,16) or (2,16,16) with a ``pod`` axis),
+  2. builds the jitted step with the full sharding rules,
+  3. ``lower(**input_specs()).compile()`` — ShapeDtypeStructs only, nothing
+     is allocated,
+  4. prints ``compiled.memory_analysis()`` (proves the cell fits) and
+     ``compiled.cost_analysis()``,
+  5. parses the collective schedule from the compiled HLO,
+  6. (single-pod) lowers the loop-body probes and emits trip-count-corrected
+     FLOP/byte/collective totals (see launch/hlo_analysis.py for why),
+  7. appends a JSON record under --out for the roofline stage.
+
+Usage:
+  python -m repro.launch.dryrun                      # all LM cells, both meshes
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --gp                 # the paper's GP cells
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+
+def _record_path(out_dir, name):
+    return os.path.join(out_dir, f"{name}.json")
+
+
+def _analyze(compiled, devices):
+    from repro.launch import hlo_analysis as ha
+
+    coll = ha.parse_collectives(compiled.as_text(), devices)
+    return {
+        "memory": ha.memory_summary(compiled),
+        "cost": ha.cost_summary(compiled),
+        "collectives": {
+            "ops": coll.ops,
+            "operand_bytes": coll.operand_bytes,
+            "wire_bytes": coll.wire_bytes,
+            "total_wire_bytes": coll.total_wire_bytes,
+        },
+    }
+
+
+def _lower_compile(fn, *args, label=""):
+    t0 = time.time()
+    lowered = fn.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    print(f"    [{label}] lower {t1-t0:.1f}s compile {t2-t1:.1f}s")
+    return compiled, {"lower_s": t1 - t0, "compile_s": t2 - t1}
+
+
+def pick_optimizer(cfg):
+    from repro.optim import Adafactor, Adam
+
+    if cfg.param_count() > 2e10:
+        return Adafactor(learning_rate=1e-3), "adafactor"
+    return Adam(learning_rate=1e-4), "adam"
+
+
+def run_lm_cell(arch, shape, multi_pod, out_dir, probes=True, force=False):
+    from repro import configs
+    from repro.launch import specs as sp
+    from repro.launch.mesh import make_production_mesh
+    from repro.train.serve_step import make_decode_step, make_prefill_step
+    from repro.train.train_step import make_train_step
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    name = f"{arch}__{shape.name}__{mesh_name}"
+    path = _record_path(out_dir, name)
+    if os.path.exists(path) and not force:
+        print(f"  [skip] {name} (cached)")
+        return json.load(open(path))
+    print(f"  [cell] {name}")
+    cfg = configs.get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    jax.set_mesh(mesh)  # mesh context for activation sharding constraints
+    devices = int(len(mesh.devices.reshape(-1)))
+    rec = {
+        "kind": "lm",
+        "arch": arch,
+        "shape": dataclasses.asdict(shape),
+        "mesh": mesh_name,
+        "devices": devices,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "ok": False,
+    }
+    try:
+        ins = sp.input_specs(cfg, shape)
+        if shape.kind == "train":
+            opt, opt_name = pick_optimizer(cfg)
+            rec["optimizer"] = opt_name
+            fn, _ = make_train_step(cfg, opt, mesh, shape, donate=False)
+            ps = sp.params_shape(cfg)
+            os_shape = jax.eval_shape(opt.init, ps)
+            compiled, times = _lower_compile(
+                fn, ps, os_shape, ins["inputs"], ins["labels"], label="full"
+            )
+            rec["model_flops"] = 6.0 * cfg.active_param_count() * shape.tokens
+        elif shape.kind == "prefill":
+            fn, _ = make_prefill_step(cfg, mesh, shape)
+            compiled, times = _lower_compile(fn, sp.params_shape(cfg), ins["inputs"], label="full")
+            rec["model_flops"] = 2.0 * cfg.active_param_count() * shape.tokens
+        else:  # decode
+            fn, _ = make_decode_step(cfg, mesh, shape)
+            compiled, times = _lower_compile(
+                fn, sp.params_shape(cfg), ins["token"], ins["pos"], ins["caches"],
+                label="full",
+            )
+            rec["model_flops"] = 2.0 * cfg.active_param_count() * shape.global_batch
+        rec["times"] = times
+        rec["full"] = _analyze(compiled, devices)
+        ms = compiled.memory_analysis()
+        print(f"    memory_analysis: {ms}")
+        ca = compiled.cost_analysis()
+        print(
+            "    cost_analysis: flops/device=%.3e bytes/device=%.3e"
+            % (ca.get("flops", 0.0), ca.get("bytes accessed", 0.0))
+        )
+        rec["fits_16gb"] = rec["full"]["memory"]["peak_bytes"] < 16e9
+
+        if probes and not multi_pod:
+            rec["probes"] = _run_probes(cfg, shape, mesh, devices)
+            rec["corrected"] = _corrected_costs(rec)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record per-cell failures, keep going
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"    [FAIL] {rec['error']}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def _run_probes(cfg, shape, mesh, devices):
+    from repro.launch import specs as sp
+
+    out = {}
+    # layer-cycle probe
+    fn, args, shardings, trips = sp.cycle_probe(cfg, shape, mesh)
+    jfn = jax.jit(fn, in_shardings=shardings)
+    compiled, times = _lower_compile(jfn, *args, label="cycle")
+    out["cycle"] = {**_analyze(compiled, devices), "trips": trips, "times": times}
+    # head probe
+    fn, args, shardings, trips = sp.head_probe(cfg, shape, mesh)
+    jfn = jax.jit(fn, in_shardings=shardings)
+    compiled, times = _lower_compile(jfn, *args, label="head")
+    out["head"] = {**_analyze(compiled, devices), "trips": trips, "times": times}
+    # optimizer probe (train only)
+    if shape.kind == "train":
+        opt, _ = pick_optimizer(cfg)
+        fn, args, shardings, trips = sp.optimizer_probe(cfg, opt, mesh)
+        jfn = jax.jit(fn, in_shardings=shardings)
+        compiled, times = _lower_compile(jfn, *args, label="opt")
+        out["optimizer"] = {**_analyze(compiled, devices), "trips": trips, "times": times}
+    return out
+
+
+def _corrected_costs(rec):
+    """Trip-count-corrected per-device totals from the probes."""
+    probes = rec["probes"]
+    tot = {"flops": 0.0, "bytes": 0.0, "wire_bytes": 0.0}
+    for p in probes.values():
+        t = p["trips"]
+        tot["flops"] += p["cost"]["flops"] * t
+        tot["bytes"] += p["cost"]["bytes"] * t
+        tot["wire_bytes"] += p["collectives"]["total_wire_bytes"] * t
+    return tot
+
+
+def run_gp_cell(gp_shape, multi_pod, out_dir, probes=True, force=False):
+    from repro.configs.base import GPShapeConfig
+    from repro.core import distributed as dist
+    from repro.core.kernels_math import SEKernelParams
+    from repro.launch.mesh import make_production_mesh
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    name = f"gp__{gp_shape.name}__{mesh_name}"
+    path = _record_path(out_dir, name)
+    if os.path.exists(path) and not force:
+        print(f"  [skip] {name} (cached)")
+        return json.load(open(path))
+    print(f"  [cell] {name}")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    devices = int(len(mesh.devices.reshape(-1)))
+    row_axes = ("pod", "data") if multi_pod else ("data",)
+    col_axes = ("model",)
+    n, m = gp_shape.n_train, gp_shape.tile_size
+    m_tiles = n // m
+    nt = gp_shape.n_test
+    d_feat = 16  # msd NFIR regressors
+    rec = {
+        "kind": "gp",
+        "arch": "gp-tiled-cholesky",
+        "shape": dataclasses.asdict(gp_shape),
+        "mesh": mesh_name,
+        "devices": devices,
+        "m_tiles": m_tiles,
+        "ok": False,
+        # cholesky n^3/3 + solves 2n^2 + V-solve n^2*nt + gram nt*... mean 2*n*nt
+        "model_flops": n**3 / 3.0 + 2.0 * n * n + float(n) * n * nt + 2.0 * n * nt,
+    }
+    try:
+        params = SEKernelParams.paper_defaults()
+        fn = dist.distributed_gp_predict_fn(
+            mesh,
+            m_tiles=m_tiles,
+            tile_size=m,
+            n_valid=n,
+            n_test_valid=nt,
+            params=params,
+            row_axes=row_axes,
+            col_axes=col_axes,
+        )
+        xc = jax.ShapeDtypeStruct((m_tiles, m, d_feat), jnp.float32)
+        yc = jax.ShapeDtypeStruct((m_tiles, m), jnp.float32)
+        xtc = jax.ShapeDtypeStruct((nt // m, m, d_feat), jnp.float32)
+        compiled, times = _lower_compile(jax.jit(fn), xc, yc, xtc, label="full")
+        rec["times"] = times
+        rec["full"] = _analyze(compiled, devices)
+        print(f"    memory_analysis: {compiled.memory_analysis()}")
+        ca = compiled.cost_analysis()
+        print(
+            "    cost_analysis: flops/device=%.3e bytes/device=%.3e"
+            % (ca.get("flops", 0.0), ca.get("bytes accessed", 0.0))
+        )
+        rec["fits_16gb"] = rec["full"]["memory"]["peak_bytes"] < 16e9
+        if probes:
+            p, q = dist.grid_shape(mesh, row_axes, col_axes)
+            local_sds = jax.ShapeDtypeStruct(
+                (m_tiles, m_tiles, m, m), jnp.float32
+            )
+            j_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            cf = dist.cholesky_step_probe_fn(
+                mesh, m_tiles=m_tiles, row_axes=row_axes, col_axes=col_axes
+            )
+            c_comp, _ = _lower_compile(jax.jit(cf), local_sds, j_sds, label="chol-step")
+            vf = dist.variance_step_probe_fn(
+                mesh, m_tiles=m_tiles, row_axes=row_axes, col_axes=col_axes
+            )
+            b_sds = jax.ShapeDtypeStruct((m_tiles, nt // m // q, m, m), jnp.float32)
+            v_comp, _ = _lower_compile(jax.jit(vf), local_sds, b_sds, j_sds, label="var-step")
+            rec["probes"] = {
+                "chol_step": {**_analyze(c_comp, devices), "trips": m_tiles},
+                "var_step": {**_analyze(v_comp, devices), "trips": m_tiles},
+            }
+            rec["corrected"] = _corrected_costs(rec)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"    [FAIL] {rec['error']}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    from repro import configs
+    from repro.configs import gp_msd
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--gp", action="store_true", help="run the paper's GP cells")
+    ap.add_argument("--gp-shape", action="append", default=None)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results = []
+    if args.gp:
+        shapes = [
+            s for s in gp_msd.ALL_GP_SHAPES
+            if args.gp_shape is None or s.name in args.gp_shape
+        ]
+        for multi in meshes:
+            for s in shapes:
+                results.append(run_gp_cell(s, multi, args.out, not args.no_probes, args.force))
+    else:
+        archs = args.arch or list(configs.ARCH_IDS)
+        for multi in meshes:
+            for arch in archs:
+                for shape in configs.shapes_for(arch):
+                    if args.shape and shape.name not in args.shape:
+                        continue
+                    results.append(
+                        run_lm_cell(arch, shape, multi, args.out, not args.no_probes, args.force)
+                    )
+    ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n== dry-run: {ok}/{len(results)} cells OK ==")
+    for r in results:
+        if not r.get("ok"):
+            print(f"  FAILED: {r.get('arch')}/{r['shape'].get('name')}/{r['mesh']}: {r.get('error')}")
+    return 0 if ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

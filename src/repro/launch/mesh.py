@@ -1,0 +1,56 @@
+"""Production mesh construction + TPU v5e hardware model.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+``xla_force_host_platform_device_count`` before first jax init, and smoke
+tests / benches must keep seeing the single real device.
+
+Recommended real-TPU flags (documented here; harmless on CPU):
+  --xla_tpu_enable_latency_hiding_scheduler=true   overlap collectives/compute
+  --xla_tpu_enable_async_collective_fusion=true
+  --xla_tpu_enable_async_all_gather=true
+These are what "overlap compute/comm" resolves to on the XLA/TPU stack: the
+scheduler hoists collective-starts above independent compute and sinks the
+dones below it — the pjit programs in this repo are written so the relevant
+collectives are hoistable (no false dependencies through donated buffers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(4, 2), axes=("data", "model")):
+    """Small mesh for the 8-device subprocess tests."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    """TPU v5e chip model used for the roofline terms."""
+
+    peak_flops_bf16: float = 197e12       # FLOP/s per chip
+    hbm_bandwidth: float = 819e9          # B/s per chip
+    ici_link_bandwidth: float = 50e9      # B/s per link (per-chip wire rate)
+    hbm_bytes: float = 16e9               # capacity per chip
+
+    def compute_seconds(self, flops_per_device: float) -> float:
+        return flops_per_device / self.peak_flops_bf16
+
+    def memory_seconds(self, bytes_per_device: float) -> float:
+        return bytes_per_device / self.hbm_bandwidth
+
+    def collective_seconds(self, wire_bytes_per_device: float) -> float:
+        return wire_bytes_per_device / self.ici_link_bandwidth
+
+
+V5E = Hardware()

@@ -1,0 +1,120 @@
+"""Roofline report: three terms per (arch × shape × mesh) from the dry-run.
+
+Reads the JSON records written by launch/dryrun.py and emits the
+EXPERIMENTS.md tables:
+
+  compute_s    = corrected FLOPs/device   / 197 TFLOP/s
+  memory_s     = corrected bytes/device   / 819 GB/s
+  collective_s = corrected wire bytes/dev / 50 GB/s per link
+
+``corrected`` = probe-cost × trip-count accounting (launch/hlo_analysis.py);
+cells without probes (multi-pod) fall back to the raw once-counted numbers,
+flagged in the table.  MODEL_FLOPS = 6·N(_active)·D for train, 2·N·D for
+serving; the useful-compute ratio MODEL/HLO exposes remat & routing waste.
+
+Usage:  python -m repro.launch.roofline [--dir experiments/dryrun] [--csv out.csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.launch.mesh import V5E
+
+
+def load_records(d: str) -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def derive(rec: Dict) -> Dict:
+    dev = rec["devices"]
+    if rec.get("corrected"):
+        flops = rec["corrected"]["flops"]
+        bytes_ = rec["corrected"]["bytes"]
+        wire = rec["corrected"]["wire_bytes"]
+        basis = "probes"
+    else:
+        flops = rec["full"]["cost"]["flops"]
+        bytes_ = rec["full"]["cost"]["bytes"]
+        wire = rec["full"]["collectives"]["total_wire_bytes"]
+        basis = "raw(once)"
+    compute_s = V5E.compute_seconds(flops)
+    memory_s = V5E.memory_seconds(bytes_)
+    coll_s = V5E.collective_seconds(wire)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model = rec.get("model_flops", 0.0) / dev
+    useful = model / flops if flops else 0.0
+    # roofline fraction: useful model-compute time over the binding term
+    frac = (model / V5E.peak_flops_bf16) / bound if bound else 0.0
+    return {
+        "cell": f"{rec['arch']}×{rec['shape']['name']}",
+        "mesh": rec["mesh"],
+        "ok": rec.get("ok", False),
+        "basis": basis,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops_dev": model,
+        "useful_ratio": useful,
+        "roofline_frac": frac,
+        "peak_gb": rec["full"]["memory"]["peak_bytes"] / 1e9 if rec.get("full") else None,
+        "fits_16gb": rec.get("fits_16gb"),
+        "error": rec.get("error"),
+    }
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = (
+        "| cell | mesh | compute_s | memory_s | collective_s | dominant | "
+        "useful MODEL/HLO | roofline frac | peak GB/dev | fits | basis |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        if not r["ok"]:
+            lines.append(f"| {r['cell']} | {r['mesh']} | — | — | — | FAILED: {r['error']} | | | | | |")
+            continue
+        lines.append(
+            f"| {r['cell']} | {r['mesh']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** | {r['useful_ratio']:.3f} "
+            f"| {r['roofline_frac']:.3f} | {r['peak_gb']:.2f} | "
+            f"{'✓' if r['fits_16gb'] else '✗'} | {r['basis']} |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--mesh", default=None, help="filter: pod16x16 | pod2x16x16")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    rows = [derive(r) for r in recs]
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    rows.sort(key=lambda r: (r["mesh"], r["cell"]))
+    print(markdown_table(rows))
+    if args.csv:
+        import csv
+
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+        print(f"wrote {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

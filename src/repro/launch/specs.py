@@ -1,0 +1,202 @@
+"""ShapeDtypeStruct input specs + probe programs for the dry-run.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable stand-ins
+for every input of the lowered step — nothing is ever allocated.
+
+Probe builders return (jitted_fn, arg_specs, trip_count_weight) for the
+structured cost accounting described in launch/hlo_analysis.py: the loop
+bodies (layer cycle, loss head, optimizer) are lowered standalone and their
+costs scaled by known trip counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import sharding as shard_rules
+from repro.models import transformer as tf
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _act_dtype(cfg: ModelConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.activation_dtype]
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: tf.init_model(k, cfg), jax.random.PRNGKey(0))
+
+
+def caches_shape(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: tf.init_caches(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, object]:
+    """Model-input stand-ins for one (arch × shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.input_mode == "embeddings":
+            inputs = SDS((b, s, cfg.d_model), _act_dtype(cfg))
+        else:
+            inputs = SDS((b, s), jnp.int32)
+        return {"inputs": inputs, "labels": SDS((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.input_mode == "embeddings":
+            return {"inputs": SDS((b, s, cfg.d_model), _act_dtype(cfg))}
+        return {"inputs": SDS((b, s), jnp.int32)}
+    if shape.kind == "decode":
+        return {
+            "token": SDS((b, 1), jnp.int32),
+            "pos": SDS((), jnp.int32),
+            "caches": caches_shape(cfg, b, s),
+        }
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Probe programs (loop bodies lowered standalone).
+# ---------------------------------------------------------------------------
+
+
+def _cycle_slice_shape(cfg: ModelConfig):
+    ps = params_shape(cfg)
+    return [jax.tree.map(lambda a: SDS(a.shape[1:], a.dtype), g) for g in ps["groups"]]
+
+
+def _nofold(cfg: ModelConfig) -> ModelConfig:
+    """Loop-free variant for probes: full attention, unchunked loss (same
+    FLOPs/collectives as the chunked production program; memory is taken from
+    the full compile, not from probes)."""
+    return dataclasses.replace(cfg, attn_chunk=0, loss_chunk=0)
+
+
+def cycle_probe(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """One pattern-cycle body (fwd for serve, fwd+bwd for train).
+
+    Returns (fn, args_specs, in_shardings, trips).
+    """
+    pcfg = _nofold(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    dt = _act_dtype(cfg)
+    cyc = _cycle_slice_shape(cfg)
+    trips = cfg.n_layers / len(cfg.pattern)
+
+    if shape.kind in ("train", "prefill"):
+        x_sds = SDS((b, s, cfg.d_model), dt)
+        pos_sds = SDS((b, s), jnp.int32)
+
+        def fwd(cycle_params, x, positions):
+            for i, kind in enumerate(pcfg.pattern):
+                x, _ = tf.apply_block(
+                    cycle_params[i], kind, x, positions, pcfg, mode="train"
+                )
+            return x
+
+        if shape.kind == "train":
+            def fn(cycle_params, x, positions):
+                out, grads = jax.value_and_grad(
+                    lambda cp, xx: jnp.sum(fwd(cp, xx, positions).astype(jnp.float32) ** 2),
+                    argnums=(0, 1),
+                )(cycle_params, x)
+                return grads
+        else:
+            fn = fwd
+        args = (cyc, x_sds, pos_sds)
+        shardings = (
+            [shard_rules.param_shardings(c, mesh) for c in cyc],
+            NamedSharding(mesh, shard_rules.batch_spec(mesh, b, None, None)),
+            NamedSharding(mesh, shard_rules.batch_spec(mesh, b, None)),
+        )
+        # tuple-ify: param_shardings returns list matching cyc list
+        return fn, args, shardings, trips
+
+    # decode: one cycle step with a cache slice
+    full_caches = caches_shape(cfg, b, s)
+    cache_slice = [
+        jax.tree.map(lambda a: SDS(a.shape[1:], a.dtype), g) for g in full_caches["groups"]
+    ]
+    x_sds = SDS((b, 1, cfg.d_model), dt)
+    pos_sds = SDS((), jnp.int32)
+
+    def fn(cycle_params, x, pos, cache):
+        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        new_caches = []
+        for i, kind in enumerate(pcfg.pattern):
+            x, nc = tf.apply_block(
+                cycle_params[i], kind, x, positions, pcfg,
+                mode="step", cache=cache[i], pos=pos,
+            )
+            new_caches.append(nc)
+        return x, new_caches
+
+    args = (cyc, x_sds, pos_sds, cache_slice)
+    shardings = (
+        [shard_rules.param_shardings(c, mesh) for c in cyc],
+        NamedSharding(mesh, shard_rules.batch_spec(mesh, b, None, None)),
+        NamedSharding(mesh, P()),
+        [shard_rules.cache_shardings(cfg, b, mesh, c) for c in cache_slice],
+    )
+    return fn, args, shardings, trips
+
+
+def head_probe(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Embedding + final head (+ full-vocab CE loss and backward for train)."""
+    pcfg = _nofold(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    dt = _act_dtype(cfg)
+    ps = params_shape(cfg)
+    head_params = {"embed": ps["embed"]}
+    if not cfg.tie_embeddings:
+        head_params["lm_head"] = ps["lm_head"]
+    hp_sh = shard_rules.param_shardings(head_params, mesh)
+
+    if shape.kind == "train":
+        x_sds = SDS((b, s, cfg.d_model), dt)
+        lab_sds = SDS((b, s), jnp.int32)
+
+        def loss_head(hp, x, labels):
+            logits = tf._logits(hp, pcfg, x).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+            return jnp.mean(lse - gold)
+
+        def fn(hp, x, labels):
+            return jax.value_and_grad(loss_head, argnums=(0, 1))(hp, x, labels)
+
+        args = (head_params, x_sds, lab_sds)
+        shardings = (
+            hp_sh,
+            NamedSharding(mesh, shard_rules.batch_spec(mesh, b, None, None)),
+            NamedSharding(mesh, shard_rules.batch_spec(mesh, b, None)),
+        )
+        return fn, args, shardings, 1.0
+
+    # serving: last-position (prefill) or single-token (decode) logits
+    def fn(hp, x):
+        return tf._logits(hp, pcfg, x)
+
+    x_sds = SDS((b, cfg.d_model), dt)
+    args = (head_params, x_sds)
+    shardings = (hp_sh, NamedSharding(mesh, shard_rules.batch_spec(mesh, b, None)))
+    return fn, args, shardings, 1.0
+
+
+def optimizer_probe(cfg: ModelConfig, optimizer, mesh: Mesh):
+    """The optimizer update on full parameter shapes (no loops inside)."""
+    ps = params_shape(cfg)
+    p_sh = shard_rules.param_shardings(ps, mesh)
+    opt_shape = jax.eval_shape(optimizer.init, ps)
+    o_sh = shard_rules.opt_state_shardings(opt_shape, ps, mesh)
+
+    def fn(grads, opt_state, params):
+        return optimizer.update(grads, opt_state, params)
+
+    args = (ps, opt_shape, ps)
+    shardings = (p_sh, o_sh, p_sh)
+    return fn, args, shardings, 1.0

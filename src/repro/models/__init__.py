@@ -1,0 +1,1 @@
+"""Model substrate: layers, attention, MoE, recurrent blocks, backbones."""

@@ -1,0 +1,199 @@
+"""Attention: MHA/GQA/MQA, global & sliding-window, softcap, chunked, decode.
+
+One implementation covers the zoo's variants:
+
+  * grouped-query attention (n_kv_heads < n_heads), MQA (=1), MHA (=heads)
+  * global (causal) and local (sliding-window) masks — gemma2 alternates,
+    recurrentgemma uses local-only attention layers
+  * gemma2 attention-logit softcapping
+  * optional QKV biases (qwen1.5 / chatglm3) and q/k head RMS norm (qwen3)
+  * partial-rotary RoPE (chatglm3: fraction 0.5)
+  * q-chunked execution (``attn_chunk``) bounding score memory to
+    (B, KV, G, chunk, T) for long-sequence prefill
+  * single-token decode against a KV cache; local layers use a ring-buffer
+    cache of window size so a 500k-step decode keeps O(window) state
+
+Softmax and score accumulation are float32; score matmuls run in the
+activation dtype (bf16 on TPU) feeding the MXU.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm, apply_rope, softcap, trunc_normal
+
+NEG_INF = -2.0**30
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": trunc_normal(ks[0], (d, h, hd), s, dtype),
+        "wk": trunc_normal(ks[1], (d, kv, hd), s, dtype),
+        "wv": trunc_normal(ks[2], (d, kv, hd), s, dtype),
+        "wo": trunc_normal(ks[3], (h, hd, d), 1.0 / math.sqrt(h * hd), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.zeros((hd,), dtype)}
+        p["k_norm"] = {"scale": jnp.zeros((hd,), dtype)}
+    return p
+
+
+def _project_qkv(p: dict, x: jax.Array, positions, cfg: ModelConfig):
+    from repro.models.layers import DP, constrain
+
+    # Megatron-style: model-shard projections on the heads dim where it
+    # divides (constrain auto-drops otherwise; small-KV GQA tensors stay
+    # replicated across `model`, which is cheap)
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), DP, None, "model", None)
+    k = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), DP, None, "model", None)
+    v = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wv"]), DP, None, "model", None)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def _scores_softmax_out(q, k, v, mask, cfg: ModelConfig):
+    """q (B,Sq,H,hd), k/v (B,T,KV,hd), mask (B?,Sq,T) bool -> (B,Sq,H,hd).
+
+    Scores stay in the activation dtype (bf16 on TPU) so the (B,H,Sq,T)
+    buffer is half-size; the softmax itself upcasts to f32 element-wise —
+    XLA fuses the upcast/exp/normalize chain so no f32 score buffer is ever
+    materialized in HBM.  (A Pallas flash-attention kernel would avoid the
+    HBM score buffer entirely; see EXPERIMENTS.md §Perf.)
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) * jnp.asarray(scale, q.dtype)
+    scores = softcap(scores, cfg.attn_softcap)
+    neg = jnp.asarray(NEG_INF, scores.dtype)
+    scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+    # softmax with activation-dtype buffers; upcasts live INSIDE the
+    # reductions (max is exact in bf16; the sum uses an f32 accumulator via
+    # the reduce dtype) so no (B,H,Sq,T) f32 score copy is ever materialized.
+    # Flash-style VMEM blocking is the Pallas follow-up — EXPERIMENTS §Perf.
+    mx = jax.lax.stop_gradient(jnp.max(scores, axis=-1, keepdims=True))
+    ex = jnp.exp(scores - mx)
+    denom = jnp.sum(ex, axis=-1, keepdims=True, dtype=jnp.float32)
+    probs = ex * (1.0 / denom).astype(ex.dtype)  # big buffers stay bf16
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _causal_mask(q_pos: jax.Array, k_pos: jax.Array, window: Optional[int]):
+    """(B,Sq),(B,T) position ids -> (B,Sq,T) bool mask."""
+    m = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        m &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    return m
+
+
+def attend_full(
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    local: bool,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Training / prefill attention over the full sequence.
+
+    Returns (output, (k, v)) so prefill can seed the decode cache.
+    """
+    from repro.models.layers import DP, constrain
+
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    window = cfg.window if local else None
+    if cfg.attn_chunk and x.shape[1] > cfg.attn_chunk:
+        out = _attend_chunked(q, k, v, positions, cfg, window)
+    else:
+        mask = _causal_mask(positions, positions, window)
+        out = _scores_softmax_out(q, k, v, mask, cfg)
+    y = constrain(jnp.einsum("bshk,hkd->bsd", out, p["wo"]), DP, None, None)
+    return y, (k, v)
+
+
+def _attend_chunked(q, k, v, positions, cfg: ModelConfig, window):
+    """lax.scan over query chunks — bounds score memory for 32k+ prefill."""
+    b, s, h, hd = q.shape
+    c = cfg.attn_chunk
+    assert s % c == 0, f"seq {s} must divide attn_chunk {c}"
+    nq = s // c
+    qc = q.reshape(b, nq, c, h, hd).transpose(1, 0, 2, 3, 4)        # (nq,B,c,H,hd)
+    pc = positions.reshape(b, nq, c).transpose(1, 0, 2)             # (nq,B,c)
+
+    @jax.checkpoint  # recompute chunk scores in backward: peak = one chunk
+    def chunk(qi, pi):
+        mask = _causal_mask(pi, positions, window)
+        return _scores_softmax_out(qi, k, v, mask, cfg)
+
+    def body(_, qp):
+        return None, chunk(*qp)
+
+    _, outs = jax.lax.scan(body, None, (qc, pc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, KV cache).  Local layers use a ring buffer of window
+# slots; global layers a full-length cache.
+# ---------------------------------------------------------------------------
+
+
+def cache_shape(cfg: ModelConfig, batch: int, max_len: int, local: bool):
+    w = min(cfg.window, max_len) if local else max_len
+    return (batch, w, cfg.n_kv_heads, cfg.head_dim_)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, local: bool, dtype):
+    shp = cache_shape(cfg, batch, max_len, local)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def attend_decode(
+    p: dict,
+    x: jax.Array,            # (B, 1, d)
+    pos: jax.Array,          # scalar int32 — current position
+    cache: dict,
+    cfg: ModelConfig,
+    *,
+    local: bool,
+) -> Tuple[jax.Array, dict]:
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    w = cache["k"].shape[1]
+    slot = pos % w
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    # position held by ring slot t:  largest p' <= pos with p' % w == t
+    t = jnp.arange(w)
+    k_pos = pos - (pos - t) % w                                  # (w,)
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    if local:
+        valid &= k_pos > pos - cfg.window
+    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, w))
+    out = _scores_softmax_out(q, ck, cv, mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": ck, "v": cv}

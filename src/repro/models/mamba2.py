@@ -1,0 +1,189 @@
+"""Mamba-2 block: the SSD (state-space duality) chunked algorithm.
+
+Implements the Mamba-2 mixer (arXiv:2405.21060): input projection to
+(z, x, B, C, dt), short causal conv on (x, B, C), scalar-identity SSM with
+per-head decay a_t = exp(Δ_t·A), evaluated with the chunked SSD algorithm:
+
+  * intra-chunk: quadratic "masked attention" form — (c × c) decay-masked
+    C·Bᵀ scores per chunk, all MXU einsums;
+  * inter-chunk: per-chunk final states carried by an associative scan.
+
+Sequence mode returns the final SSM state so prefill can seed decoding;
+decode mode is a constant-memory single step (the long_500k cell).  All
+decay/exp math runs in float32; contraction operands stay in the activation
+dtype for the MXU.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import trunc_normal
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_headdim
+    return d_in, heads, cfg.ssm_headdim, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in, h, p_, n = _dims(cfg)
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    a_init = jax.random.uniform(ks[4], (h,), minval=1.0, maxval=16.0)
+    dt0 = jnp.exp(
+        jax.random.uniform(ks[5], (h,)) * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "w_in": trunc_normal(ks[0], (d, 2 * d_in + 2 * n + h), s, dtype),
+        "conv_w": trunc_normal(ks[1], (cw, d_in + 2 * n), 1.0 / math.sqrt(cw), dtype),
+        "conv_b": jnp.zeros((d_in + 2 * n,), dtype),
+        "a_log": jnp.log(a_init).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "w_out": trunc_normal(ks[2], (d_in, d), 1.0 / math.sqrt(d_in), dtype),
+    }
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    from repro.models.layers import DP, constrain
+
+    d_in, h, _, n = _dims(cfg)
+    proj = x @ p["w_in"]
+    if proj.ndim == 3:
+        proj = constrain(proj, DP, None, "model")
+    z, xc, bm, cm, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    return z, xc, bm, cm, dt
+
+
+def _gated_out(p, y, z, cfg: ModelConfig):
+    """RMSNorm(y * silu(z)) @ w_out."""
+    g = (y * jax.nn.silu(z)).astype(jnp.float32)
+    g = g * jax.lax.rsqrt(jnp.mean(g * g, -1, keepdims=True) + 1e-6)
+    return (g.astype(y.dtype) * p["norm_scale"]) @ p["w_out"]
+
+
+def _causal_conv(x, w, b):
+    cw = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[i]
+    return jax.nn.silu(out + b)
+
+
+def apply_mamba2_seq(p: dict, x_in: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """x_in (B, S, d) -> (out (B, S, d), state for decode continuation)."""
+    b, s, _ = x_in.shape
+    d_in, h, pd, n = _dims(cfg)
+    c = min(cfg.ssm_chunk, s)
+    if s % c:  # fall back to the largest divisor of s (chunk size is perf-only)
+        c = max(d for d in range(1, c + 1) if s % d == 0)
+    nc = s // c
+
+    z, xc, bm, cm, dt_raw = _split_proj(p, x_in, cfg)
+    xbc_pre = jnp.concatenate([xc, bm, cm], -1)          # pre-conv (decode state)
+    xbc = _causal_conv(xbc_pre, p["conv_w"], p["conv_b"])
+    xc, bm, cm = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    xh = xc.reshape(b, s, h, pd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    da = -jnp.exp(p["a_log"]) * dt                                      # (B,S,H) <= 0
+
+    # chunk views
+    xz = xh.reshape(b, nc, c, h, pd)
+    dtz = dt.reshape(b, nc, c, h)
+    daz = da.reshape(b, nc, c, h)
+    bz = bm.reshape(b, nc, c, n)
+    cz = cm.reshape(b, nc, c, n)
+    cs = jnp.cumsum(daz, axis=2)                                        # (B,NC,c,H)
+
+    # ---- intra-chunk (quadratic, decay-masked attention form) ----------
+    li = cs[:, :, :, None, :] - cs[:, :, None, :, :]                    # (B,NC,i,j,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    lmask = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)    # f32
+    scores = jnp.einsum("bzin,bzjn->bzij", cz, bz)
+    dtx = xz * dtz[..., None].astype(xz.dtype)                          # (B,NC,c,H,P)
+    y_diag = jnp.einsum(
+        "bzij,bzijh,bzjhp->bzihp",
+        scores.astype(jnp.float32),
+        lmask,
+        dtx.astype(jnp.float32),
+    )
+
+    # ---- chunk states + inter-chunk recurrence -------------------------
+    decay_states = jnp.exp(cs[:, :, -1:, :] - cs)                       # (B,NC,c,H)
+    sstates = jnp.einsum(
+        "bzjn,bzjh,bzjhp->bzhnp", bz.astype(jnp.float32), (decay_states * dtz), xz.astype(jnp.float32)
+    )                                                                   # (B,NC,H,N,P)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                              # (B,NC,H)
+
+    def combine(l, r):
+        al, hl = l
+        ar, hr = r
+        return al * ar, ar[..., None, None] * hl + hr
+
+    _, h_inc = jax.lax.associative_scan(combine, (chunk_decay, sstates), axis=1)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_inc[:, :1]), h_inc[:, :-1]], axis=1
+    )                                                                   # exclusive
+    y_off = jnp.einsum(
+        "bzin,bzhnp->bzihp", cz.astype(jnp.float32), h_prev
+    ) * jnp.exp(cs)[..., None]
+
+    y = (y_diag + y_off).reshape(b, s, h, pd)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.astype(x_in.dtype).reshape(b, s, d_in)
+    out = _gated_out(p, y, z, cfg)
+    state = {
+        "h": h_inc[:, -1],                                              # (B,H,N,P) f32
+        "conv": xbc_pre[:, -(cfg.conv_width - 1) :],
+    }
+    return out, state
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_in, h, pd, n = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, h, n, pd), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * n), dtype),
+    }
+
+
+def apply_mamba2_step(
+    p: dict, x_in: jax.Array, state: dict, cfg: ModelConfig
+) -> Tuple[jax.Array, dict]:
+    """Single-token decode: x_in (B, 1, d); O(H·N·P) state update."""
+    b = x_in.shape[0]
+    d_in, h, pd, n = _dims(cfg)
+    z, xc, bm, cm, dt_raw = _split_proj(p, x_in, cfg)
+    xbc_new = jnp.concatenate([xc, bm, cm], -1)                         # (B,1,·)
+    window = jnp.concatenate([state["conv"], xbc_new], axis=1)          # (B,cw,·)
+    # window is [oldest..newest]; seq conv applies w[0] to the newest tap
+    xbc = jax.nn.silu(
+        jnp.einsum("bcw,cw->bw", window, p["conv_w"][::-1]) + p["conv_b"]
+    )
+    xc1, bm1, cm1 = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    xh = xc1.reshape(b, h, pd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(p["a_log"]) * dt)                              # (B,H)
+    hnew = a[..., None, None] * state["h"] + jnp.einsum(
+        "bn,bhp->bhnp", bm1.astype(jnp.float32), xh * dt[..., None]
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cm1.astype(jnp.float32), hnew)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x_in.dtype)
+    out = _gated_out(p, y, z, cfg)
+    return out, {"h": hnew, "conv": window[:, 1:]}

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity.
+
+Routing is GShard/Switch-style token-choice with a capacity limit, but the
+dispatch uses index tables (scatter/gather) instead of one-hot einsums: the
+einsum formulation costs O(T·E·C·d) FLOPs — orders of magnitude above the
+useful expert FLOPs — while the table formulation is a pure data-movement
+gather + batched expert GEMMs of exactly O(k·cf·T·d·ff).  On TPU the batched
+(E, C, d)·(E, d, ff) contraction maps onto the MXU with experts sharded over
+the ``model`` axis (expert parallelism); GSPMD inserts the all-to-all.
+
+Tokens are routed in groups of ``router_group_size`` (sharded over batch/data)
+so capacity is enforced per group and the index tables stay small.
+
+`arctic`-style dense residual: a dense FFN runs in parallel with the MoE and
+both outputs are summed (config flag ``dense_residual``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_mlp, trunc_normal
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(ff)
+    p = {
+        "router": trunc_normal(ks[0], (d, e), s_in, jnp.float32),
+        "w_gate": trunc_normal(ks[1], (e, d, ff), s_in, dtype),
+        "w_up": trunc_normal(ks[2], (e, d, ff), s_in, dtype),
+        "w_down": trunc_normal(ks[3], (e, ff, d), s_out, dtype),
+    }
+    if cfg.dense_residual:
+        p["dense"] = init_mlp(ks[4], cfg.mlp, d, cfg.d_ff, dtype)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(cfg.experts_per_token * tokens * cfg.capacity_factor / cfg.n_experts)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def _route_group(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """One routing group: x (T, d) -> y (T, d)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    cap = _capacity(t, cfg)
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                     # (T, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # position of each (token, choice) inside its expert's capacity buffer;
+    # k passes of a (T, E) one-hot cumsum keep peak memory at T*E.
+    positions = []
+    counts = jnp.zeros((e,), jnp.int32)
+    for i in range(k):
+        oh = jax.nn.one_hot(expert_idx[:, i], e, dtype=jnp.int32)       # (T, E)
+        pos_i = jnp.take_along_axis(
+            jnp.cumsum(oh, axis=0) - 1 + counts[None, :], expert_idx[:, i : i + 1], 1
+        )[:, 0]
+        counts = counts + jnp.sum(oh, axis=0)
+        positions.append(pos_i)
+    position = jnp.stack(positions, axis=1)                             # (T, k)
+
+    keep = position < cap
+    dest = jnp.where(keep, expert_idx * cap + position, e * cap)        # sentinel
+
+    # scatter token ids into the (E*C,) source table (sentinel row T = zeros)
+    table = jnp.full((e * cap + 1,), t, jnp.int32)
+    token_ids = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k))
+    table = table.at[dest.reshape(-1)].set(token_ids.reshape(-1), mode="drop")
+    table = table[: e * cap]
+
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    # groups are (data × model)-sharded (see apply_moe): the dispatch gather
+    # and the expert FFN run device-local; expert weights arrive via a
+    # weight-sized all-gather
+    expert_in = x_pad[table].reshape(e, cap, d)
+
+    # batched expert FFN (MXU)
+    act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+    g = act(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"]))
+    h = g * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(e * cap, d)
+    out = jnp.concatenate([out, jnp.zeros((1, d), out.dtype)], axis=0)
+
+    gathered = out[jnp.where(keep, dest, e * cap)]                      # (T, k, d)
+    w = (gate_vals * keep).astype(x.dtype)
+    return jnp.einsum("tkd,tk->td", gathered, w)
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x (B, S, d) -> (B, S, d); groups of router_group_size tokens.
+
+    Sharding note (EXPERIMENTS.md §Perf, hillclimb #2): three dispatch
+    layouts were measured on qwen3-moe-235b — (a) groups over data, expert
+    dim unconstrained [58.7 GB wire/cycle], (b) explicit E-over-model
+    constraints [65.9 GB], (c) groups over data×model with weight gathering
+    [185 GB, GSPMD replicates the combine gather].  (a) wins under the
+    current partitioner and is used here; a manual shard_map all-to-all
+    dispatch is the identified path below GSPMD's floor."""
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    g = min(cfg.router_group_size, b * s)
+    if (b * s) % g:
+        g = b * s  # fall back to a single group for odd token counts
+    groups = flat.reshape(-1, g, d)
+    y = jax.vmap(lambda xx: _route_group(p, xx, cfg))(groups)
+    y = y.reshape(b, s, d)
+    if cfg.dense_residual:
+        from repro.models.layers import apply_mlp
+
+        y = y + apply_mlp(p["dense"], x, cfg.mlp)
+    return y
+
+
+def aux_load_balance_loss(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Switch-style auxiliary load-balance loss (fraction·probability dot)."""
+    logits = (x.reshape(-1, x.shape[-1]).astype(jnp.float32)) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    _, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    frac = jnp.mean(
+        jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32), axis=(0, 1)
+    )
+    imp = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)

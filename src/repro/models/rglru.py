@@ -1,0 +1,117 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The Griffin recurrent block: two parallel projections of the input — a GeLU
+gate branch and a recurrence branch that passes through a short causal
+depthwise conv and the Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(x_t W_a + b_a)            recurrence gate
+    i_t = sigmoid(x_t W_x + b_x)            input gate
+    a_t = exp(-c * softplus(Λ) * r_t)       per-channel decay (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Sequence mode evaluates the linear recurrence with an associative scan
+(log-depth on TPU); decode mode is a single fused step carrying (h, conv
+state), which is what makes the 500k-token decode cell O(1) per step.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import trunc_normal
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+    d, w, cw = cfg.d_model, cfg.rnn_width_, cfg.conv_width
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d)
+    sw = 1.0 / math.sqrt(w)
+    # Λ init so that a ∈ (0.9, 0.999) at r = 1 (Griffin appendix)
+    u = jax.random.uniform(ks[6], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))
+    return {
+        "w_gate_branch": trunc_normal(ks[0], (d, w), s, dtype),
+        "w_x_branch": trunc_normal(ks[1], (d, w), s, dtype),
+        "conv_w": trunc_normal(ks[2], (cw, w), 1.0 / math.sqrt(cw), dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": trunc_normal(ks[3], (w, w), sw, dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": trunc_normal(ks[4], (w, w), sw, dtype),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lambda": lam.astype(jnp.float32),
+        "w_out": trunc_normal(ks[5], (w, d), sw, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B, S, W), w (cw, W)."""
+    cw = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[i]
+    return out + b
+
+
+def _gates(p: dict, xb: jax.Array):
+    r = jax.nn.sigmoid(xb.astype(jnp.float32) @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xb.astype(jnp.float32) @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xb.astype(jnp.float32))
+    return a, b
+
+
+def apply_rglru_seq(p: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """x (B, S, d) -> (out (B, S, d), final state for decode continuation)."""
+    from repro.models.layers import DP, constrain
+
+    gate = jax.nn.gelu(constrain(x @ p["w_gate_branch"], DP, None, "model"), approximate=True)
+    xb = _causal_conv(constrain(x @ p["w_x_branch"], DP, None, "model"),
+                      p["conv_w"], p["conv_b"])
+    a, b = _gates(p, xb)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    out = (gate * h) @ p["w_out"]
+    state = {
+        "h": h[:, -1].astype(jnp.float32),
+        "conv": (x @ p["w_x_branch"])[:, -(cfg.conv_width - 1) :],
+    }
+    return out, state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.rnn_width_
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def apply_rglru_step(
+    p: dict, x: jax.Array, state: dict, cfg: ModelConfig
+) -> Tuple[jax.Array, dict]:
+    """Single-token decode: x (B, 1, d)."""
+    gate = jax.nn.gelu(x @ p["w_gate_branch"], approximate=True)      # (B,1,w)
+    xproj = x @ p["w_x_branch"]                                        # (B,1,w)
+    window = jnp.concatenate([state["conv"], xproj], axis=1)           # (B,cw,w)
+    # window is [oldest..newest]; seq conv applies w[0] to the newest tap
+    xb = jnp.einsum("bcw,cw->bw", window, p["conv_w"][::-1]) + p["conv_b"]
+    a, b = _gates(p, xb)
+    h = a * state["h"] + b
+    out = (gate[:, 0] * h.astype(x.dtype)) @ p["w_out"]
+    new_state = {"h": h, "conv": window[:, 1:]}
+    return out[:, None, :], new_state

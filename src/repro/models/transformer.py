@@ -1,0 +1,374 @@
+"""Generic decoder backbone covering the whole architecture zoo.
+
+A model is a cycled ``pattern`` of block kinds — e.g. ("global",) for plain
+transformers, ("local", "global") for gemma2, ("rglru", "rglru", "local")
+for recurrentgemma, ("mamba2",) for mamba2 — stacked ``n_layers`` deep.
+
+Layers are grouped by full pattern cycles and executed with ``lax.scan``
+over stacked parameters (one traced cycle regardless of depth: a 94-layer
+MoE compiles as fast as a 2-layer one) with optional remat for training.
+The cycle remainder (e.g. recurrentgemma's 26 = 8×3 + 2) runs unrolled.
+
+Three entry modes:
+  * train  : full sequence, no caches, chunked-vocab cross-entropy loss
+  * prefill: full sequence, returns last-position logits + decode caches
+  * step   : single-token decode against caches (KV ring buffers for
+             attention, recurrent states for RG-LRU / Mamba-2)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    init_mlp,
+    init_norm,
+    sinusoidal_pos_emb,
+    softcap,
+    trunc_normal,
+)
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+from repro.models.layers import constrain as _constrain  # shared activation rules
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply.
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, kind: str, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": init_norm(cfg.norm, cfg.d_model, dtype)}
+    if kind in ("global", "local"):
+        p["attn"] = attn.init_attention(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["rec"] = rg.init_rglru(ks[0], cfg, dtype)
+    elif kind == "mamba2":
+        p["ssm"] = m2.init_mamba2(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    has_ffn = kind != "mamba2" and cfg.d_ff > 0
+    if has_ffn:
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        if cfg.n_experts and kind in ("global", "local"):
+            p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.mlp, cfg.d_model, cfg.d_ff, dtype)
+    if cfg.post_norm:
+        p["post_norm1"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        if has_ffn:
+            p["post_norm2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+    return p
+
+
+def apply_block(
+    p: dict,
+    kind: str,
+    x: jax.Array,
+    positions,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    cache=None,
+    pos=None,
+):
+    """Returns (x, new_cache) — new_cache is None in train mode."""
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    new_cache = None
+    if kind in ("global", "local"):
+        local = kind == "local"
+        if mode == "step":
+            h, new_cache = attn.attend_decode(p["attn"], h, pos, cache, cfg, local=local)
+        else:
+            h, kv = attn.attend_full(p["attn"], h, positions, cfg, local=local)
+            if mode == "prefill":
+                new_cache = _kv_to_ring(kv, cfg, local)
+    elif kind == "rglru":
+        if mode == "step":
+            h, new_cache = rg.apply_rglru_step(p["rec"], h, cache, cfg)
+        else:
+            h, state = rg.apply_rglru_seq(p["rec"], h, cfg)
+            if mode == "prefill":
+                new_cache = state
+    elif kind == "mamba2":
+        if mode == "step":
+            h, new_cache = m2.apply_mamba2_step(p["ssm"], h, cache, cfg)
+        else:
+            h, state = m2.apply_mamba2_seq(p["ssm"], h, cfg)
+            if mode == "prefill":
+                new_cache = state
+    if cfg.post_norm:
+        h = apply_norm(p["post_norm1"], h, cfg.norm)
+    x = x + h
+    if "mlp" in p or "moe" in p:
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        if "moe" in p:
+            h = moe_mod.apply_moe(p["moe"], h, cfg)
+        else:
+            h = apply_mlp(p["mlp"], h, cfg.mlp)
+        if cfg.post_norm:
+            h = apply_norm(p["post_norm2"], h, cfg.norm)
+        x = x + h
+    return x, new_cache
+
+
+def _kv_to_ring(kv, cfg: ModelConfig, local: bool, cache_len: Optional[int] = None):
+    """Prefill (k, v) of shape (B, S, KV, hd) -> ring-buffer decode cache.
+
+    ``cache_len`` sizes the global-attention cache (default S+1 so one new
+    token can be appended without evicting position 0); local layers always
+    use a window-sized ring.
+    """
+    k, v = kv
+    s = k.shape[1]
+    if local:
+        w = min(cfg.window, s)
+    else:
+        w = cache_len if cache_len is not None else s + 1
+    keep = min(w, s)
+    idx = (jnp.arange(s - keep, s)) % w
+    ck = jnp.zeros((k.shape[0], w) + k.shape[2:], k.dtype).at[:, idx].set(k[:, s - keep :])
+    cv = jnp.zeros((v.shape[0], w) + v.shape[2:], v.dtype).at[:, idx].set(v[:, s - keep :])
+    return {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Model init.
+# ---------------------------------------------------------------------------
+
+
+def _cycles(cfg: ModelConfig) -> Tuple[int, int]:
+    plen = len(cfg.pattern)
+    return cfg.n_layers // plen, cfg.n_layers % plen
+
+
+def init_model(key, cfg: ModelConfig) -> dict:
+    dtype = _dtype(cfg.param_dtype)
+    n_cycles, rem = _cycles(cfg)
+    keys = jax.random.split(key, 3 + len(cfg.pattern) + rem)
+    params: dict = {
+        "embed": trunc_normal(
+            keys[0], (cfg.vocab_size, cfg.d_model), 1.0 / math.sqrt(cfg.d_model), dtype
+        ),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = trunc_normal(
+            keys[1], (cfg.d_model, cfg.vocab_size), 1.0 / math.sqrt(cfg.d_model), dtype
+        )
+    groups = []
+    for i, kind in enumerate(cfg.pattern):
+        ck = jax.random.split(keys[2 + i], n_cycles)
+        groups.append(jax.vmap(lambda kk: init_block(kk, kind, cfg, dtype))(ck))
+    params["groups"] = groups
+    tail = []
+    for j in range(rem):
+        kind = cfg.pattern[j]
+        tail.append(init_block(keys[2 + len(cfg.pattern) + j], kind, cfg, dtype))
+    params["tail"] = tail
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches.
+# ---------------------------------------------------------------------------
+
+
+def _block_cache_template(kind: str, cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if kind in ("global", "local"):
+        return attn.init_cache(cfg, batch, max_len, kind == "local", dtype)
+    if kind == "rglru":
+        return rg.init_rglru_state(cfg, batch, dtype)
+    if kind == "mamba2":
+        return m2.init_mamba2_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = _dtype(cfg.activation_dtype)
+    n_cycles, rem = _cycles(cfg)
+    groups = []
+    for kind in cfg.pattern:
+        tmpl = _block_cache_template(kind, cfg, batch, max_len, dtype)
+        groups.append(
+            jax.tree.map(lambda t: jnp.zeros((n_cycles,) + t.shape, t.dtype), tmpl)
+        )
+    tail = [
+        _block_cache_template(cfg.pattern[j], cfg, batch, max_len, dtype)
+        for j in range(rem)
+    ]
+    return {"groups": groups, "tail": tail}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes.
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(params, cfg: ModelConfig, inputs, positions):
+    dtype = _dtype(cfg.activation_dtype)
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        # gather from the d-sharded table (see dist/sharding.py): both the
+        # lookup and its scatter-add gradient partition cleanly on d.
+        x = jnp.take(params["embed"], inputs, axis=0).astype(dtype)
+        x = _constrain(x, ("pod", "data"), None, None)
+    else:
+        x = inputs.astype(dtype)  # modality-stub embeddings (vlm / audio)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_pos_emb(positions, cfg.d_model).astype(dtype)
+    return x
+
+
+def _backbone(params, cfg: ModelConfig, x, positions, *, mode, caches=None, pos=None, remat=False):
+    n_cycles, rem = _cycles(cfg)
+    plen = len(cfg.pattern)
+
+    def cycle_body(x, cycle_params, cycle_caches):
+        new_caches = []
+        for i, kind in enumerate(cfg.pattern):
+            c = None if cycle_caches is None else cycle_caches[i]
+            x, nc = apply_block(
+                cycle_params[i], kind, x, positions, cfg, mode=mode, cache=c, pos=pos
+            )
+            new_caches.append(nc)
+        if mode == "train":
+            # sequence-shard the scan carry (Megatron-SP): the per-cycle
+            # residual stacks saved for backward are the dominant train-cell
+            # memory (e.g. llava-34b: (60,16,4096,7168)·bf16 ≈ 56 GB/device
+            # replicated over `model`); S-sharding divides them by 16.
+            x = _constrain(x, ("pod", "data"), "model", None)
+        return x, new_caches
+
+    body = cycle_body
+    if remat:
+        body = jax.checkpoint(cycle_body)
+
+    if n_cycles > 0:
+        if mode == "train":
+            def scan_fn(x, cp):
+                x, _ = body(x, cp, None)
+                return x, None
+
+            x, _ = jax.lax.scan(scan_fn, x, tuple(params["groups"]))
+            new_group_caches = None
+        elif mode == "prefill":
+            def scan_fn(x, cp):
+                x, ncs = body(x, cp, None)
+                return x, tuple(ncs)
+
+            x, new_group_caches = jax.lax.scan(scan_fn, x, tuple(params["groups"]))
+        else:  # step
+            def scan_fn(x, cp_cc):
+                cp, cc = cp_cc
+                x, ncs = body(x, cp, cc)
+                return x, tuple(ncs)
+
+            x, new_group_caches = jax.lax.scan(
+                scan_fn, x, (tuple(params["groups"]), tuple(caches["groups"]))
+            )
+    else:
+        new_group_caches = [] if mode != "train" else None
+
+    new_tail = []
+    for j in range(rem):
+        kind = cfg.pattern[j]
+        c = None if caches is None else caches["tail"][j]
+        x, nc = apply_block(
+            params["tail"][j], kind, x, positions, cfg, mode=mode, cache=c, pos=pos
+        )
+        new_tail.append(nc)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    new_caches = (
+        None if mode == "train" else {"groups": list(new_group_caches), "tail": new_tail}
+    )
+    return x, new_caches
+
+
+def _logits(params, cfg: ModelConfig, x):
+    # einsum, never .T: transposing a sharded table defeats the SPMD
+    # partitioner ("involuntary full rematerialization") — the contraction
+    # form partitions cleanly for both the forward and the cotangent.
+    if cfg.tie_embeddings:
+        # the stored table is d-sharded (gather-friendly); the head wants a
+        # vocab-sharded operand.  The constraint is the explicit reshard
+        # point (one cheap all-to-all) in BOTH directions — without it the
+        # partitioner all-gathers the full-vocab f32 dlogits instead.
+        emb_head = _constrain(params["embed"].astype(x.dtype), "model", None)
+        logits = jnp.einsum("...d,vd->...v", x, emb_head)
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["lm_head"].astype(x.dtype))
+    # vocab dim of the logits is model-sharded (the table itself is not
+    # vocab-sharded — see dist/sharding.py); batch over the DP axes.
+    if logits.ndim == 3:
+        logits = _constrain(logits, ("pod", "data"), None, "model")
+    else:
+        logits = _constrain(logits, ("pod", "data"), "model")
+    return softcap(logits, cfg.final_softcap)
+
+
+def loss_fn(params, cfg: ModelConfig, inputs, labels) -> jax.Array:
+    """Mean next-token cross entropy; vocab-chunked over the sequence."""
+    b, s = labels.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x = _embed_in(params, cfg, inputs, positions)
+    x, _ = _backbone(params, cfg, x, positions, mode="train", remat=True)
+    c = cfg.loss_chunk if cfg.loss_chunk and s % cfg.loss_chunk == 0 else s
+    nc = s // c
+    xc = x.reshape(b, nc, c, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint  # recompute chunk logits in backward: peak = one chunk
+    def chunk_ce(xx, ll):
+        logits = _logits(params, cfg, xx).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot contraction keeps the vocab dim sharded (a take_along_axis
+        # gather would force GSPMD to all-gather the full logits)
+        oh = jax.nn.one_hot(ll, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("bsv,bsv->bs", logits, oh)
+        return jnp.sum(lse - gold)
+
+    def chunk_loss(carry, xl):
+        xx, ll = xl
+        return carry + chunk_ce(xx, ll), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (b * s)
+
+
+def prefill_fn(params, cfg: ModelConfig, inputs):
+    """Full-sequence forward: returns (last-position logits (B, V), caches)."""
+    b, s = inputs.shape[0], inputs.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x = _embed_in(params, cfg, inputs, positions)
+    x, caches = _backbone(params, cfg, x, positions, mode="prefill")
+    return _logits(params, cfg, x[:, -1]), caches
+
+
+def decode_fn(params, cfg: ModelConfig, token, pos, caches):
+    """One decode step: token (B, 1) ids (or (B, 1, d) embeds), scalar pos."""
+    b = token.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    x = _embed_in(params, cfg, token, positions)
+    x, new_caches = _backbone(
+        params, cfg, x, positions, mode="step", caches=caches, pos=pos
+    )
+    return _logits(params, cfg, x[:, 0]), new_caches

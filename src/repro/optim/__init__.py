@@ -1,0 +1,7 @@
+"""Optimizers and distributed-optimization utilities."""
+
+from repro.optim.adam import Adam
+from repro.optim.adafactor import Adafactor
+from repro.optim.schedules import cosine_warmup
+
+__all__ = ["Adam", "Adafactor", "cosine_warmup"]

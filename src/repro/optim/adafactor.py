@@ -1,0 +1,86 @@
+"""Adafactor (factored second moments) — the 480B-scale memory-frugal choice.
+
+For a (r, c) parameter the second moment is stored as a rank-1 factorization
+(row means + col means): O(r + c) instead of O(r·c).  Higher-rank tensors
+factor over their two largest dims.  1-D params fall back to full moments.
+No momentum by default (beta1=0 saves another full-size buffer) — this is
+what makes arctic-480b trainable in 16 GB/chip (see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored_dims(shape) -> Optional[Tuple[int, int]]:
+    if len(shape) < 2:
+        return None
+    dims = sorted(range(len(shape)), key=lambda i: shape[i])[-2:]
+    return min(dims), max(dims)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-2
+    decay: float = 0.8            # t^-decay running-average schedule
+    eps: float = 1e-30
+    clip_threshold: float = 1.0   # RMS update clipping
+    min_dim_size_to_factor: int = 32
+
+    def init(self, params) -> dict:
+        def leaf(p):
+            fd = _factored_dims(p.shape)
+            if fd is not None and min(p.shape[fd[0]], p.shape[fd[1]]) >= self.min_dim_size_to_factor:
+                r_shape = tuple(s for i, s in enumerate(p.shape) if i != fd[1])
+                c_shape = tuple(s for i, s in enumerate(p.shape) if i != fd[0])
+                return {
+                    "vr": jnp.zeros(r_shape, jnp.float32),
+                    "vc": jnp.zeros(c_shape, jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree.map(leaf, params, is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, step):
+        return self.learning_rate(step) if callable(self.learning_rate) else self.learning_rate
+
+    def update(self, grads, state, params) -> Tuple[Any, dict]:
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-self.decay)
+        lr = self._lr(step)
+
+        def upd(p, g, v):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + self.eps
+            fd = _factored_dims(p.shape)
+            if "vr" in v:
+                r, c = fd
+                vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=c)
+                vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=r)
+                denom_r = jnp.expand_dims(vr / jnp.mean(vr, axis=r, keepdims=True), c)
+                denom_c = jnp.expand_dims(vc, r)
+                u = g32 * jax.lax.rsqrt(denom_r * denom_c + self.eps)
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = beta2 * v["v"] + (1 - beta2) * g2
+                u = g32 * jax.lax.rsqrt(vv + self.eps)
+                new_v = {"v": vv}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_v = tdef.unflatten([o[1] for o in out])
+        return new_params, {"v": new_v, "step": step}

@@ -1,0 +1,65 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Int8 uniform quantization with a per-tensor-chunk max-abs scale.  The
+quantization residual is carried in a local *error-feedback* buffer and added
+to the next step's gradient, which is what keeps compressed SGD/Adam
+convergent (Seide et al. 2014; Karimireddy et al. 2019).
+
+Two entry points:
+
+* ``compress``/``decompress`` — the pure quantizer (unit-tested, bounded
+  error: |g − deq(q(g))| ≤ scale/2 elementwise).
+* ``compressed_psum`` — a shard_map building block: quantize local grads,
+  all_gather the int8 payload + scales over the DP axis (4× less wire volume
+  than an fp32 all-reduce ring transfer), dequantize and average locally.
+
+The manual-DP train-step variant in ``repro.train.train_step`` uses this on
+the ``pod`` axis — the slow cross-DCI hop — which is where 4× compression
+buys real wall-clock at multi-pod scale.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def compress(g: jax.Array, chunk: int = 4096) -> Tuple[jax.Array, jax.Array]:
+    """g (any shape) -> (int8 payload (n_chunks, chunk), f32 scales (n_chunks,))."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % chunk
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(-1, chunk)
+    scale = jnp.max(jnp.abs(chunks), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(chunks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array, shape, size: int) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+def compress_with_feedback(g: jax.Array, err: jax.Array, chunk: int = 4096):
+    """Error-feedback wrapper: returns (q, scale, new_err)."""
+    g_corr = g.astype(jnp.float32) + err
+    q, scale = compress(g_corr, chunk)
+    deq = decompress(q, scale, g.shape, g.size)
+    return q, scale, g_corr - deq
+
+
+def compressed_psum(g: jax.Array, err: jax.Array, axis: str, chunk: int = 4096):
+    """Mean of g over mesh axis `axis` via int8 all-gather; error feedback.
+
+    Call inside shard_map.  Returns (g_mean, new_err).
+    """
+    q, scale, new_err = compress_with_feedback(g, err, chunk)
+    qs = lax.all_gather(q, axis, axis=0)                 # (P, n_chunks, chunk)
+    ss = lax.all_gather(scale, axis, axis=0)             # (P, n_chunks)
+    total = jnp.einsum("pnc,pn->nc", qs.astype(jnp.float32), ss)
+    n = lax.psum(1, axis)
+    mean = (total / n).reshape(-1)[: g.size].reshape(g.shape)
+    return mean.astype(g.dtype), new_err

@@ -1,0 +1,20 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(peak: float, warmup: int, total: int, floor: float = 0.1):
+    """Linear warmup to ``peak`` then cosine decay to ``floor * peak``."""
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(math.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return schedule

@@ -1,0 +1,1 @@
+"""Training / serving step factories and the fault-tolerant trainer loop."""

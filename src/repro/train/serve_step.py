@@ -1,0 +1,58 @@
+"""Serving step factories: prefill and decode, mesh-aware.
+
+``make_prefill_step``: full-context forward producing last-token logits and
+the decode caches.  ``make_decode_step``: one token for every sequence in
+the batch against the caches (KV ring buffers / recurrent states).  These are
+the programs the decode_32k / long_500k dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import sharding as shard_rules
+from repro.models import transformer as tf
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                      shape: Optional[ShapeConfig] = None):
+    def prefill(params, inputs):
+        return tf.prefill_fn(params, cfg, inputs)
+
+    if mesh is None:
+        return jax.jit(prefill), None
+    jax.set_mesh(mesh)  # mesh context for activation sharding constraints
+    params_shape = jax.eval_shape(lambda k: tf.init_model(k, cfg), jax.random.PRNGKey(0))
+    p_sh = shard_rules.param_shardings(params_shape, mesh)
+    in_sh, _ = shard_rules.input_shardings(cfg, shape, mesh)
+    fn = jax.jit(prefill, in_shardings=(p_sh, in_sh))
+    return fn, {"params": p_sh, "inputs": in_sh}
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                     shape: Optional[ShapeConfig] = None, donate_cache: bool = True):
+    def decode(params, token, pos, caches):
+        return tf.decode_fn(params, cfg, token, pos, caches)
+
+    if mesh is None:
+        return jax.jit(decode, donate_argnums=(3,) if donate_cache else ()), None
+    assert shape is not None
+    jax.set_mesh(mesh)  # mesh context for activation sharding constraints
+    b = shape.global_batch
+    params_shape = jax.eval_shape(lambda k: tf.init_model(k, cfg), jax.random.PRNGKey(0))
+    p_sh = shard_rules.param_shardings(params_shape, mesh)
+    caches_shape = jax.eval_shape(lambda: tf.init_caches(cfg, b, shape.seq_len))
+    c_sh = shard_rules.cache_shardings(cfg, b, mesh, caches_shape)
+    tok_sh = NamedSharding(mesh, shard_rules.batch_spec(mesh, b, None))
+    pos_sh = NamedSharding(mesh, P())
+    fn = jax.jit(
+        decode,
+        in_shardings=(p_sh, tok_sh, pos_sh, c_sh),
+        donate_argnums=(3,) if donate_cache else (),
+    )
+    return fn, {"params": p_sh, "token": tok_sh, "caches": c_sh}

@@ -1,0 +1,116 @@
+"""Fault-tolerant training loop.
+
+Production posture implemented single-host (mechanisms, not mocks):
+
+* **checkpoint/restart** — atomic CheckpointManager saves every
+  ``ckpt_every`` steps (async by default); on construction the trainer
+  auto-resumes from the newest valid checkpoint, so a killed process
+  relaunched with the same command continues exactly where it stopped
+  (validated by tests/test_trainer_fault.py which SIGKILLs mid-run).
+* **elastic restart** — checkpoints are host-complete, so a restart may use
+  a different mesh/device count; shardings are re-derived from the new mesh.
+* **straggler mitigation** — per-step wall times are tracked; steps slower
+  than ``straggler_factor ×`` the running median are counted and logged.  At
+  multi-pod scale this signal drives the re-shard/evict decision; here it
+  feeds the step-time report (and is unit-tested via an injected delay).
+* **data determinism across restarts** — the synthetic pipeline is seeded by
+  step index, so a resumed run sees the identical batch stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps: int = 0
+    last_loss: float = float("nan")
+    losses: list = dataclasses.field(default_factory=list)
+    step_times: list = dataclasses.field(default_factory=list)
+    stragglers: int = 0
+    resumed_from: Optional[int] = None
+
+    def median_step_time(self) -> float:
+        return float(np.median(self.step_times)) if self.step_times else float("nan")
+
+
+class Trainer:
+    def __init__(
+        self,
+        step_fn: Callable,                 # (params, opt, inputs, labels) -> (params, opt, loss)
+        params,
+        opt_state,
+        data_fn: Callable[[int], tuple],   # step index -> (inputs, labels)
+        *,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 50,
+        ckpt_async: bool = True,
+        keep: int = 3,
+        straggler_factor: float = 3.0,
+        log_every: int = 10,
+        log_fn: Callable[[str], None] = print,
+    ):
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.data_fn = data_fn
+        self.ckpt_every = ckpt_every
+        self.ckpt_async = ckpt_async
+        self.straggler_factor = straggler_factor
+        self.log_every = log_every
+        self.log = log_fn
+        self.report = TrainerReport()
+        self.start_step = 0
+        self.mgr = CheckpointManager(ckpt_dir, keep=keep) if ckpt_dir else None
+        if self.mgr is not None and self.mgr.latest_step() is not None:
+            state_tmpl = {"params": self.params, "opt": self.opt_state}
+            step, state = self.mgr.restore(state_tmpl)
+            self.params, self.opt_state = state["params"], state["opt"]
+            self.start_step = step
+            self.report.resumed_from = step
+            self.log(f"[trainer] resumed from checkpoint step {step}")
+
+    def run(self, num_steps: int) -> TrainerReport:
+        end = self.start_step + num_steps
+        for step in range(self.start_step, end):
+            inputs, labels = self.data_fn(step)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, loss = self.step_fn(
+                self.params, self.opt_state, inputs, labels
+            )
+            loss = jax.block_until_ready(loss)
+            dt = time.perf_counter() - t0
+            self.report.step_times.append(dt)
+            self.report.steps = step + 1
+            self.report.last_loss = float(loss)
+            self.report.losses.append(float(loss))
+            med = self.report.median_step_time()
+            if len(self.report.step_times) > 5 and dt > self.straggler_factor * med:
+                self.report.stragglers += 1
+                self.log(
+                    f"[trainer] straggler at step {step}: {dt*1e3:.1f} ms vs "
+                    f"median {med*1e3:.1f} ms"
+                )
+            if self.log_every and (step + 1) % self.log_every == 0:
+                self.log(
+                    f"[trainer] step {step+1}/{end} loss={float(loss):.4f} "
+                    f"({dt*1e3:.1f} ms/step)"
+                )
+            if self.mgr is not None and (step + 1) % self.ckpt_every == 0:
+                self.mgr.save(
+                    step + 1,
+                    {"params": self.params, "opt": self.opt_state},
+                    blocking=not self.ckpt_async,
+                )
+        if self.mgr is not None:
+            self.mgr.save(end, {"params": self.params, "opt": self.opt_state})
+            self.mgr.wait()
+        return self.report

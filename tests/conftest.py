@@ -1,0 +1,26 @@
+"""Shared test helpers.  NOTE: no XLA_FLAGS here — tests must see the single
+real device; multi-device tests spawn subprocesses (see _subproc.py)."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_spd(rng, n, dtype=np.float32, jitter=None):
+    a = rng.standard_normal((n, n)).astype(dtype)
+    k = a @ a.T + (n if jitter is None else jitter) * np.eye(n, dtype=dtype)
+    return k
+
+
+@pytest.fixture
+def spd():
+    return make_spd

@@ -1,0 +1,74 @@
+"""Checkpointing: atomicity, retention, async, elastic restore."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+
+
+def _state(x=1.0):
+    return {
+        "params": {"w": jnp.full((4, 4), x), "b": jnp.arange(3.0)},
+        "opt": {"m": {"w": jnp.zeros((4, 4)), "b": jnp.zeros((3,))}, "step": jnp.int32(7)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = _state(3.5)
+    mgr.save(10, state)
+    step, restored = mgr.restore(_state(0.0))
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]), 3.5)
+    assert int(restored["opt"]["step"]) == 7
+
+
+def test_latest_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(float(s)))
+    assert mgr.latest_step() == 4
+    assert mgr.all_steps() == [3, 4]
+    _, restored = mgr.restore(_state())
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]), 4.0)
+
+
+def test_no_tmp_left_behind(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, _state())
+    assert not [d for d in os.listdir(tmp_path) if d.startswith("tmp.")]
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state(1.0), blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state())
+    with pytest.raises((ValueError, KeyError)):
+        mgr.restore({"other": jnp.zeros((2,))})
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state())
+    bad = _state()
+    bad["params"]["w"] = jnp.zeros((5, 5))
+    with pytest.raises(ValueError):
+        mgr.restore(bad)
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    for s in (1, 2, 3):
+        mgr.save(s, _state(float(s)))
+    step, restored = mgr.restore(_state(), step=2)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]), 2.0)

@@ -1,0 +1,114 @@
+"""Distributed tiled GP on an 8-device subprocess mesh: block-cyclic
+Cholesky, end-to-end predict, and the compressed-DP train step."""
+
+import pytest
+
+from _subproc import run_with_devices
+
+pytestmark = pytest.mark.slow
+
+
+def test_distributed_cholesky_and_predict():
+    out = run_with_devices(
+        r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.core import distributed as dist, tiling, predict as pred
+from repro.core.kernels_math import SEKernelParams
+
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+rng = np.random.default_rng(2)
+n, m = 128, 16
+A = rng.standard_normal((n, n)).astype(np.float32)
+K = A @ A.T + n*np.eye(n, dtype=np.float32)
+tiles = tiling.tile_dense(jnp.asarray(K), m)
+cyc = dist.to_cyclic_layout(tiles, 4, 2)
+for unroll in (False, True):
+    fn = dist.distributed_cholesky_fn(mesh, m_tiles=8, unroll=unroll)
+    cycL = jax.jit(fn)(jax.device_put(cyc, dist.local_tiles_sharding(mesh)))
+    L = np.tril(np.asarray(tiling.untile_dense(dist.from_cyclic_layout(cycL, 4, 2))))
+    assert np.abs(L - np.linalg.cholesky(K)).max() < 1e-3, unroll
+
+ntr, nte = 128, 32
+X = rng.standard_normal((ntr, 3)).astype(np.float32)
+Y = rng.standard_normal(ntr).astype(np.float32)
+Xt = rng.standard_normal((nte, 3)).astype(np.float32)
+params = SEKernelParams.paper_defaults()
+pfn = dist.distributed_gp_predict_fn(mesh, m_tiles=8, tile_size=m, n_valid=ntr,
+                                     n_test_valid=nte, params=params)
+mu, var = jax.jit(pfn)(pred.pad_features(jnp.asarray(X), m),
+                       pred.pad_vector(jnp.asarray(Y), m),
+                       pred.pad_features(jnp.asarray(Xt), m))
+mu_ref, cov_ref = pred.predict(jnp.asarray(X), jnp.asarray(Y), jnp.asarray(Xt),
+                               params, m, full_cov=True)
+assert np.allclose(np.asarray(mu).reshape(-1)[:nte], np.asarray(mu_ref), atol=1e-3)
+assert np.allclose(np.asarray(var).reshape(-1)[:nte],
+                   np.diagonal(np.asarray(cov_ref)), atol=1e-3)
+print("DIST_GP_OK")
+""",
+        n_devices=8,
+    )
+    assert "DIST_GP_OK" in out
+
+
+def test_mixed_precision_distributed_cholesky():
+    out = run_with_devices(
+        r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.core import distributed as dist, tiling
+mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+rng = np.random.default_rng(0)
+n, m = 64, 8
+A = rng.standard_normal((n, n)).astype(np.float32)
+K = A @ A.T + n*np.eye(n, dtype=np.float32)
+tiles = tiling.tile_dense(jnp.asarray(K), m)
+cyc = dist.to_cyclic_layout(tiles, 2, 2)
+fn = dist.distributed_cholesky_fn(mesh, m_tiles=8, update_dtype=jnp.bfloat16)
+cycL = jax.jit(fn)(jax.device_put(cyc, dist.local_tiles_sharding(mesh)))
+L = np.tril(np.asarray(tiling.untile_dense(dist.from_cyclic_layout(cycL, 2, 2))))
+rel = np.abs(L - np.linalg.cholesky(K)).max() / np.abs(L).max()
+assert rel < 0.02, rel
+print("MP_OK")
+""",
+        n_devices=8,
+    )
+    assert "MP_OK" in out
+
+
+def test_compressed_dp_step_matches_uncompressed():
+    out = run_with_devices(
+        r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro import configs
+from repro.models import transformer as tf
+from repro.optim import Adam
+from repro.train.train_step import make_train_step, make_compressed_dp_step
+
+mesh = jax.make_mesh((2, 4, 1), ("pod", "data", "model"), axis_types=(AxisType.Auto,)*3)
+cfg = configs.get_smoke_config("olmo-1b")
+params = tf.init_model(jax.random.PRNGKey(0), cfg)
+opt = Adam(learning_rate=1e-3)
+opt_state = opt.init(params)
+key = jax.random.PRNGKey(1)
+B, S = 8, 16
+tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+labels = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+plain, _ = make_train_step(cfg, opt, donate=False)
+p1, o1, loss1 = plain(params, opt_state, tokens, labels)
+
+comp, init_err = make_compressed_dp_step(cfg, opt, mesh, compress_axis="pod")
+err = init_err(params)
+p2, o2, err, loss2 = comp(params, opt_state, err, tokens, labels)
+
+assert abs(float(loss1) - float(loss2)) < 1e-2, (float(loss1), float(loss2))
+d = max(float(jnp.abs(a - b).max()) for a, b in
+        zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+assert d < 5e-2, d   # int8 quantization error on one Adam step is small
+print("COMPRESSED_OK")
+""",
+        n_devices=8,
+    )
+    assert "COMPRESSED_OK" in out

@@ -1,0 +1,75 @@
+"""Reduced-mesh dry-run: lower+compile representative arch×shape cells on an
+8-device subprocess mesh — exercises the exact production code path of
+launch/dryrun.py without the 512-device compile times."""
+
+import pytest
+
+from _subproc import run_with_devices
+
+pytestmark = pytest.mark.slow
+
+
+def test_train_prefill_decode_cells_compile():
+    out = run_with_devices(
+        r"""
+import dataclasses, jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro import configs
+from repro.launch import specs as sp
+from repro.train.train_step import make_train_step
+from repro.train.serve_step import make_decode_step, make_prefill_step
+from repro.optim import Adam
+from repro.configs.base import ShapeConfig
+
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+jax.set_mesh(mesh)
+shape_train = ShapeConfig("t", 64, 8, "train")
+shape_dec = ShapeConfig("d", 64, 8, "decode")
+
+for arch in ("olmo-1b", "gemma2-2b", "qwen3-moe-235b-a22b", "mamba2-1.3b",
+             "recurrentgemma-2b"):
+    cfg = dataclasses.replace(configs.get_smoke_config(arch),
+                              router_group_size=64)
+    ins = sp.input_specs(cfg, shape_train)
+    fn, _ = make_train_step(cfg, Adam(1e-3), mesh, shape_train, donate=False)
+    ps = sp.params_shape(cfg)
+    oss = jax.eval_shape(Adam(1e-3).init, ps)
+    c = fn.lower(ps, oss, ins["inputs"], ins["labels"]).compile()
+    assert c.cost_analysis().get("flops", 0) > 0
+    dfn, _ = make_decode_step(cfg, mesh, shape_dec)
+    ins_d = sp.input_specs(cfg, shape_dec)
+    c2 = dfn.lower(ps, ins_d["token"], ins_d["pos"], ins_d["caches"]).compile()
+    print(arch, "OK")
+print("DRYRUN_SMALL_OK")
+""",
+        n_devices=8,
+        timeout=900,
+    )
+    assert "DRYRUN_SMALL_OK" in out
+
+
+def test_gp_cell_compiles_multiaxis():
+    out = run_with_devices(
+        r"""
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.core import distributed as dist
+from repro.core.kernels_math import SEKernelParams
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(AxisType.Auto,)*3)
+m_tiles, m, n, nt = 8, 16, 128, 32
+fn = dist.distributed_gp_predict_fn(
+    mesh, m_tiles=m_tiles, tile_size=m, n_valid=n, n_test_valid=nt,
+    params=SEKernelParams.paper_defaults(),
+    row_axes=("pod", "data"), col_axes=("model",))
+xc = jax.ShapeDtypeStruct((m_tiles, m, 3), jnp.float32)
+yc = jax.ShapeDtypeStruct((m_tiles, m), jnp.float32)
+xtc = jax.ShapeDtypeStruct((nt // m, m, 3), jnp.float32)
+c = jax.jit(fn).lower(xc, yc, xtc).compile()
+txt = c.as_text()
+assert "all-gather" in txt or "all-reduce" in txt
+print("GP_MULTIAXIS_OK")
+""",
+        n_devices=8,
+    )
+    assert "GP_MULTIAXIS_OK" in out

@@ -1,0 +1,84 @@
+"""Flash-attention kernel vs the materialized-softmax reference."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels.flash_attention import flash_attention, flash_attention_single
+from repro.models.attention import _causal_mask, _scores_softmax_out
+
+
+def _ref_single(q, k, v, causal=True, softcap=None):
+    s = (np.asarray(q, np.float64) @ np.asarray(k, np.float64).T) / np.sqrt(q.shape[-1])
+    if softcap is not None:
+        s = softcap * np.tanh(s / softcap)
+    if causal:
+        mask = np.tril(np.ones(s.shape, bool))
+        s = np.where(mask, s, -1e30)
+    p = np.exp(s - s.max(1, keepdims=True))
+    p /= p.sum(1, keepdims=True)
+    return p @ np.asarray(v, np.float64)
+
+
+@pytest.mark.parametrize("shape", [(64, 64, 16), (128, 128, 32), (96, 192, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_single_shapes(rng, shape, causal):
+    s, t, hd = shape
+    q = jnp.asarray(rng.standard_normal((s, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((t, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((t, hd)).astype(np.float32))
+    out = flash_attention_single(q, k, v, causal=causal, block_q=32, block_k=32)
+    ref = _ref_single(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=5e-5)
+
+
+def test_flash_softcap(rng):
+    s, hd = 64, 32
+    q = jnp.asarray(rng.standard_normal((s, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((s, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((s, hd)).astype(np.float32))
+    out = flash_attention_single(q, k, v, causal=True, softcap=10.0, block_q=32, block_k=32)
+    ref = _ref_single(q, k, v, causal=True, softcap=10.0)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=5e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_gqa_matches_xla_attention(rng, dtype):
+    b, s, h, kv, hd = 2, 64, 8, 4, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, hd)), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    cfg = configs.get_smoke_config("olmo-1b")
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    ref = _scores_softmax_out(q, k, v, _causal_mask(pos, pos, None), cfg)
+    tol = 5e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
+def test_flash_removes_score_traffic():
+    """The whole point: HBM bytes scale with S·hd, not S² (compare the
+    compiled cost-analysis bytes of flash vs materialized attention)."""
+    s, hd = 512, 64
+    q = jax.ShapeDtypeStruct((s, hd), jnp.float32)
+
+    def mat(q, k, v):
+        sc = q @ k.T / np.sqrt(hd)
+        sc = jnp.where(jnp.tril(jnp.ones((s, s), bool)), sc, -1e30)
+        return jax.nn.softmax(sc, axis=-1) @ v
+
+    c_mat = jax.jit(mat).lower(q, q, q).compile()
+    flash = lambda q, k, v: flash_attention_single(q, k, v, causal=True)
+    c_fl = jax.jit(flash).lower(q, q, q).compile()
+    b_mat = c_mat.cost_analysis()["bytes accessed"]
+    b_fl = c_fl.cost_analysis()["bytes accessed"]
+    # interpret-mode custom calls under-report compute bytes, but the S²
+    # buffers must be visible in the materialized path and absent here
+    assert b_mat > 4 * s * s, b_mat
+    assert b_fl < b_mat, (b_fl, b_mat)

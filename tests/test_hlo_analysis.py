@@ -1,0 +1,70 @@
+"""Collective parser: shapes, group sizes, wire-byte model."""
+
+from repro.launch.hlo_analysis import CollectiveStats, _shape_bytes, parse_collectives
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,256]{1,0}") == 16 * 256 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(f32[4], bf16[2,2]{1,0})") == 16 + 8
+    assert _shape_bytes("pred[7]") == 7
+    assert _shape_bytes("f32[]") == 4
+
+
+def test_parse_allreduce_iota_groups():
+    hlo = (
+        "%all-reduce = f32[16,256]{1,0} all-reduce(%dot), channel_id=1, "
+        "replica_groups=[4,2]<=[8], use_global_device_ids=true, to_apply=%add\n"
+    )
+    st = parse_collectives(hlo, 8)
+    assert st.ops == {"all-reduce": 1}
+    b = 16 * 256 * 4
+    assert st.operand_bytes["all-reduce"] == b
+    assert st.wire_bytes["all-reduce"] == 2 * b * (2 - 1) / 2
+
+
+def test_parse_allgather_and_permute():
+    hlo = (
+        "%all-gather = bf16[32,64]{1,0} all-gather(%x), channel_id=2, "
+        "replica_groups=[2,4]<=[8], dimensions={0}\n"
+        "%collective-permute = f32[8,8]{1,0} collective-permute(%y), "
+        "source_target_pairs={{0,1},{1,0}}\n"
+    )
+    st = parse_collectives(hlo, 8)
+    assert st.ops == {"all-gather": 1, "collective-permute": 1}
+    ag = 32 * 64 * 2
+    assert st.wire_bytes["all-gather"] == ag * 3 / 4
+    assert st.wire_bytes["collective-permute"] == 8 * 8 * 4
+
+
+def test_fusion_lines_not_counted():
+    hlo = "%wrapped = f32[1,8]{1,0} fusion(%all-reduce, %c), kind=kLoop\n"
+    st = parse_collectives(hlo, 8)
+    assert st.ops == {}
+
+
+def test_explicit_group_list():
+    hlo = (
+        "%rs = f32[4,4]{1,0} reduce-scatter(%x), "
+        "replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}\n"
+    )
+    st = parse_collectives(hlo, 8)
+    b = 4 * 4 * 4
+    assert st.wire_bytes["reduce-scatter"] == b * 3
+
+
+def test_start_ops_counted_once():
+    hlo = (
+        "%ag = bf16[16]{0} all-gather-start(%x), replica_groups=[1,8]<=[8]\n"
+        "%agd = bf16[16]{0} all-gather-done(%ag)\n"
+    )
+    st = parse_collectives(hlo, 8)
+    assert st.ops == {"all-gather": 1}
+
+
+def test_merged_scaling():
+    a = CollectiveStats({"all-reduce": 1}, {"all-reduce": 10.0}, {"all-reduce": 20.0})
+    b = CollectiveStats({"all-reduce": 2}, {"all-reduce": 5.0}, {"all-reduce": 7.0})
+    m = a.merged(b, scale=3.0)
+    assert m.ops["all-reduce"] == 7
+    assert m.wire_bytes["all-reduce"] == 20.0 + 21.0

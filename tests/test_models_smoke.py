@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step with shape + finiteness asserts, plus prefill↔decode cache consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as tf
+
+B, S = 2, 32
+
+
+def _inputs(cfg, key):
+    if cfg.input_mode == "embeddings":
+        return jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    return jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_train_step_finite(arch):
+    cfg = configs.get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = tf.init_model(key, cfg)
+    inputs = _inputs(cfg, jax.random.PRNGKey(1))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    loss, grads = jax.value_and_grad(tf.loss_fn)(params, cfg, inputs, labels)
+    assert np.isfinite(float(loss))
+    gn = np.sqrt(sum(float(jnp.sum(g.astype(jnp.float32) ** 2)) for g in jax.tree.leaves(grads)))
+    assert np.isfinite(gn) and gn > 0.0
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_prefill_and_decode_shapes(arch):
+    cfg = configs.get_smoke_config(arch)
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    inputs = _inputs(cfg, jax.random.PRNGKey(1))
+    logits, caches = tf.prefill_fn(params, cfg, inputs)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits2, caches2 = tf.decode_fn(params, cfg, tok, jnp.int32(S), caches)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "qwen1.5-0.5b", "mamba2-1.3b",
+                                  "recurrentgemma-2b", "gemma2-2b"])
+def test_decode_matches_prefill(arch):
+    """Decoding token t+1 with prefilled caches must match a full forward
+    over the extended sequence — the strongest cache-correctness check."""
+    cfg = configs.get_smoke_config(arch)
+    if cfg.input_mode == "embeddings":
+        pytest.skip("token-path check")
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(3)
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    # full forward over S+1 tokens: logits at the last position
+    logits_full, _ = tf.prefill_fn(params, cfg, toks)
+    # prefill S tokens then decode token S
+    _, caches = tf.prefill_fn(params, cfg, toks[:, :S])
+    logits_dec, _ = tf.decode_fn(params, cfg, toks[:, S:], jnp.int32(S), caches)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32),
+        np.asarray(logits_full, np.float32),
+        atol=5e-2, rtol=5e-2,
+    )
+
+
+def test_mamba2_seq_matches_steps():
+    """SSD chunked sequence mode == sequential single-step recurrence."""
+    from repro.models import mamba2 as m2
+
+    cfg = configs.get_smoke_config("mamba2-1.3b")
+    p = m2.init_mamba2(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model)) * 0.3
+    out_seq, _ = m2.apply_mamba2_seq(p, x, cfg)
+    state = m2.init_mamba2_state(cfg, 1, jnp.float32)
+    outs = []
+    for t in range(16):
+        o, state = m2.apply_mamba2_step(p, x[:, t : t + 1], state, cfg)
+        outs.append(o)
+    out_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(out_seq), np.asarray(out_step), atol=2e-3, rtol=2e-2
+    )
+
+
+def test_rglru_seq_matches_steps():
+    from repro.models import rglru as rg
+
+    cfg = configs.get_smoke_config("recurrentgemma-2b")
+    p = rg.init_rglru(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model)) * 0.3
+    out_seq, _ = rg.apply_rglru_seq(p, x, cfg)
+    state = rg.init_rglru_state(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(12):
+        o, state = rg.apply_rglru_step(p, x[:, t : t + 1], state, cfg)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(out_seq), np.asarray(jnp.concatenate(outs, 1)), atol=2e-4
+    )
+
+
+def test_local_attention_masks_window():
+    """A token far outside the local window must not influence the output."""
+    cfg = configs.get_smoke_config("gemma2-2b")  # window 16, pattern local/global
+    from repro.models import attention as attn
+
+    p = attn.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (1, S))
+    y1, _ = attn.attend_full(p, x, pos, cfg, local=True)
+    x2 = x.at[:, 0].set(x[:, 0] + 100.0)  # outside window of the last token
+    y2, _ = attn.attend_full(p, x2, pos, cfg, local=True)
+    np.testing.assert_allclose(
+        np.asarray(y1[:, -1]), np.asarray(y2[:, -1]), atol=1e-4
+    )
+
+
+def test_param_counts_match_configs():
+    """Full configs should land near their nominal sizes."""
+    expected = {
+        "gemma2-2b": (2.0e9, 3.5e9),
+        "olmo-1b": (0.9e9, 1.5e9),
+        "qwen1.5-0.5b": (0.3e9, 0.7e9),
+        "chatglm3-6b": (5.5e9, 7.5e9),
+        # real rg-2b is 2.7B; the RG-LRU gate parameterization is impl-defined
+        # (dense a/i gates here) — band covers both
+        "recurrentgemma-2b": (1.6e9, 3.6e9),
+        "qwen3-moe-235b-a22b": (2.0e11, 2.6e11),
+        "arctic-480b": (4.3e11, 5.2e11),
+        "llava-next-34b": (3.0e10, 3.9e10),
+        "musicgen-large": (2.0e9, 3.6e9),
+        "mamba2-1.3b": (1.0e9, 1.6e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = configs.get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_active_params_below_total():
+    cfg = configs.get_config("qwen3-moe-235b-a22b")
+    assert cfg.active_param_count() < 0.15 * cfg.param_count()

@@ -1,0 +1,100 @@
+"""End-to-end tiled GP prediction vs the monolithic reference pipeline."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GaussianProcess, SEKernelParams
+from repro.core import predict as pred
+
+
+@pytest.fixture
+def data(rng):
+    n, nt, d = 100, 37, 4   # deliberately NOT tile multiples (padding path)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    xt = rng.standard_normal((nt, d)).astype(np.float32)
+    return x, y, xt
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_tiled_vs_monolithic(data, backend):
+    x, y, xt = data
+    p = SEKernelParams.paper_defaults()
+    mu_t, cov_t = pred.predict(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(xt), p, 16,
+        full_cov=True, backend=backend,
+    )
+    mu_m, cov_m = pred.predict_monolithic(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(xt), p, full_cov=True
+    )
+    np.testing.assert_allclose(np.asarray(mu_t), np.asarray(mu_m), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(cov_t), np.asarray(cov_m), atol=1e-3)
+
+
+def test_padding_invariance(data):
+    """Results must be identical for any tile size (different padding)."""
+    x, y, xt = data
+    p = SEKernelParams.paper_defaults()
+    mus = [
+        np.asarray(pred.predict(jnp.asarray(x), jnp.asarray(y), jnp.asarray(xt), p, m))
+        for m in (8, 16, 25, 50)
+    ]
+    for mu in mus[1:]:
+        np.testing.assert_allclose(mu, mus[0], atol=2e-3)
+
+
+def test_posterior_covariance_is_psd(data):
+    x, y, xt = data
+    p = SEKernelParams.paper_defaults()
+    _, cov = pred.predict(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(xt), p, 16, full_cov=True
+    )
+    evals = np.linalg.eigvalsh(np.asarray(cov, np.float64))
+    assert evals.min() > -1e-3, evals.min()
+
+
+def test_variances_positive_and_bounded(data):
+    x, y, xt = data
+    gp = GaussianProcess(x, y, tile_size=16)
+    _, var = gp.predict_with_uncertainty(xt)
+    var = np.asarray(var)
+    assert (var > -1e-4).all()
+    # posterior variance cannot exceed the prior (v = 1)
+    assert (var <= 1.0 + 1e-4).all()
+
+
+def test_gp_class_pipelines_agree(data):
+    x, y, xt = data
+    gp_t = GaussianProcess(x, y, tile_size=16)
+    gp_m = GaussianProcess(x, y, pipeline="monolithic")
+    np.testing.assert_allclose(
+        np.asarray(gp_t.predict(xt)), np.asarray(gp_m.predict(xt)), atol=1e-3
+    )
+
+
+def test_interpolation_of_noiseless_points(rng):
+    """GP mean should pass near training targets when noise is tiny."""
+    x = np.linspace(-2, 2, 20)[:, None].astype(np.float32)
+    y = np.sin(x[:, 0]).astype(np.float32)
+    gp = GaussianProcess(
+        x, y, params=SEKernelParams(lengthscale=0.5, vertical=1.0, noise=1e-4),
+        tile_size=8,
+    )
+    mu = np.asarray(gp.predict(x))
+    assert np.abs(mu - y).max() < 1e-2
+
+
+def test_mll_optimization_improves(rng):
+    from repro.core import mll
+
+    x = rng.uniform(-3, 3, (64, 1)).astype(np.float32)
+    y = (np.sin(2 * x[:, 0]) + 0.1 * rng.standard_normal(64)).astype(np.float32)
+    init = SEKernelParams.paper_defaults()
+    before = mll.negative_log_marginal_likelihood(jnp.asarray(x), jnp.asarray(y), init)
+    opt, losses = mll.optimize_hyperparameters(
+        jnp.asarray(x), jnp.asarray(y), init, steps=40, lr=0.1
+    )
+    after = mll.negative_log_marginal_likelihood(jnp.asarray(x), jnp.asarray(y), opt)
+    assert float(after) < float(before)
+    assert float(losses[-1]) <= float(losses[0])

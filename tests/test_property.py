@@ -1,0 +1,95 @@
+"""Hypothesis property-based tests on the system's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cholesky as chol
+from repro.core import predict as pred
+from repro.core import tiling
+from repro.core.kernels_math import SEKernelParams, se_kernel
+
+_settings = dict(max_examples=20, deadline=None)
+
+
+@given(
+    n=st.integers(4, 40),
+    d=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+    l=st.floats(0.3, 3.0),
+    v=st.floats(0.3, 3.0),
+)
+@settings(**_settings)
+def test_se_kernel_matrix_is_psd(n, d, seed, l, v):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    p = SEKernelParams(l, v, 0.0)
+    k = np.asarray(se_kernel(jnp.asarray(x), jnp.asarray(x), p), np.float64)
+    evals = np.linalg.eigvalsh((k + k.T) / 2)
+    assert evals.min() > -1e-4 * v * n
+
+
+@given(
+    m_tiles=st.integers(1, 6),
+    m=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+    n_streams=st.sampled_from([None, 1, 3]),
+)
+@settings(**_settings)
+def test_tiled_cholesky_reconstructs(m_tiles, m, seed, n_streams):
+    n = m_tiles * m
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    k = a @ a.T + n * np.eye(n, dtype=np.float32)
+    l = np.asarray(
+        chol.cholesky_dense_via_tiles(jnp.asarray(k), m, n_streams=n_streams)
+    )
+    np.testing.assert_allclose(l @ l.T, k, rtol=5e-2, atol=5e-2 * n)
+    assert np.allclose(np.triu(l, 1), 0.0)
+
+
+@given(
+    n=st.integers(3, 50),
+    m=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**_settings)
+def test_padding_never_changes_predictions(n, m, seed):
+    """Any (n, tile) combination gives the same result as the dense path."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 2)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    xt = rng.standard_normal((5, 2)).astype(np.float32)
+    p = SEKernelParams.paper_defaults()
+    mu_t = np.asarray(pred.predict(jnp.asarray(x), jnp.asarray(y), jnp.asarray(xt), p, m))
+    mu_m = np.asarray(
+        pred.predict_monolithic(jnp.asarray(x), jnp.asarray(y), jnp.asarray(xt), p)
+    )
+    np.testing.assert_allclose(mu_t, mu_m, atol=5e-3)
+
+
+@given(m_tiles=st.integers(1, 12))
+@settings(**_settings)
+def test_packed_tile_count(m_tiles):
+    assert tiling.num_packed_tiles(m_tiles) == m_tiles * (m_tiles + 1) // 2
+    rows, cols = tiling._packed_coords(m_tiles)
+    assert len(rows) == tiling.num_packed_tiles(m_tiles)
+    assert (rows >= cols).all()
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    chunk=st.sampled_from([64, 256, 1024]),
+    size=st.integers(10, 5000),
+)
+@settings(**_settings)
+def test_compression_error_bound(seed, chunk, size):
+    from repro.optim.compression import compress, decompress
+
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(size).astype(np.float32) * 10)
+    q, s = compress(g, chunk=chunk)
+    d = decompress(q, s, g.shape, g.size)
+    # per-chunk error bound: half a quantization step
+    err = np.abs(np.asarray(d) - np.asarray(g)).max()
+    assert err <= float(s.max()) / 2 + 1e-6

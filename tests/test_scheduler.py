@@ -1,0 +1,56 @@
+"""Tile-task DAG scheduler: counts, dependencies, critical path, chunking."""
+
+import pytest
+
+from repro.core import scheduler as sch
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 5, 8, 16])
+def test_task_counts(m):
+    s = sch.build_schedule(m)
+    assert s.op_counts() == sch.theoretical_task_counts(m)
+    assert s.n_tasks == sum(sch.theoretical_task_counts(m).values())
+
+
+@pytest.mark.parametrize("m", [2, 4, 8, 16])
+def test_critical_path(m):
+    # right-looking tiled Cholesky ASAP critical path is 3M - 2 levels
+    assert sch.build_schedule(m).critical_path == 3 * m - 2
+
+
+def test_levels_are_antichains():
+    """No task may depend on another task in its own level."""
+    m = 6
+    s = sch.build_schedule(m)
+    for level in s.levels:
+        level_set = set(level)
+        for t in level:
+            for d in sch._deps(t, m):
+                assert d not in level_set, (t, d)
+
+
+def test_dependencies_respect_level_order():
+    m = 5
+    s = sch.build_schedule(m)
+    level_of = {t: i for i, lvl in enumerate(s.levels) for t in lvl}
+    for t, lv in level_of.items():
+        for d in sch._deps(t, m):
+            assert level_of[d] < lv
+
+
+@pytest.mark.parametrize("n_streams", [1, 2, 3, None])
+def test_chunking(n_streams):
+    tasks = list(range(7))
+    chunks = sch.chunk_tasks(tasks, n_streams)
+    flat = [t for c in chunks for t in c]
+    assert flat == tasks
+    if n_streams is not None:
+        assert all(len(c) <= n_streams for c in chunks)
+    else:
+        assert len(chunks) == 1
+
+
+def test_max_width_grows_with_m():
+    w4 = sch.build_schedule(4).max_width()
+    w8 = sch.build_schedule(8).max_width()
+    assert w8 > w4  # more tiles -> more exposed concurrency (paper Fig. 3)

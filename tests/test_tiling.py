@@ -1,0 +1,66 @@
+"""Tile layouts: pack/unpack, memory-saving claim, cyclic layout."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tiling
+from repro.core.distributed import from_cyclic_layout, to_cyclic_layout
+
+
+def test_pack_unpack_roundtrip(rng):
+    n, m = 48, 8
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    a = a + a.T
+    packed = tiling.pack_lower(jnp.asarray(a), m)
+    assert packed.shape == (tiling.num_packed_tiles(n // m), m, m)
+    back = tiling.unpack_lower(packed, fill="symmetric")
+    np.testing.assert_allclose(np.asarray(back), a, rtol=1e-6)
+
+
+def test_unpack_lower_zeroes_upper(rng):
+    n, m = 32, 8
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    a = a @ a.T + n * np.eye(n, dtype=np.float32)
+    l_ref = np.linalg.cholesky(a)
+    packed = tiling.pack_lower(jnp.asarray(np.tril(l_ref) + np.triu(np.ones_like(a), 1)), m)
+    out = np.asarray(tiling.unpack_lower(packed, fill="lower"))
+    assert np.allclose(np.triu(out, 1), 0.0)
+
+
+@pytest.mark.parametrize("m_tiles", [2, 4, 8, 32])
+def test_memory_saving_claim(m_tiles):
+    """Paper §4.2: packed storage needs 50-75 % of the dense matrix."""
+    m = 16
+    n = m_tiles * m
+    ratio = tiling.packed_bytes(m_tiles, m) / tiling.dense_bytes(n)
+    assert 0.5 < ratio <= 0.75
+    assert ratio == pytest.approx((m_tiles + 1) / (2 * m_tiles))
+
+
+def test_packed_index_column_slices():
+    m_tiles = 6
+    seen = set()
+    for j in range(m_tiles):
+        lo, hi = tiling.column_slice(j, m_tiles)
+        idxs = list(range(lo, hi))
+        assert idxs[0] == tiling.packed_index(j, j, m_tiles)
+        for off, i in enumerate(range(j, m_tiles)):
+            assert tiling.packed_index(i, j, m_tiles) == lo + off
+        seen.update(idxs)
+    assert seen == set(range(tiling.num_packed_tiles(m_tiles)))
+
+
+def test_cyclic_layout_roundtrip(rng):
+    m_tiles, m, p, q = 8, 4, 4, 2
+    tiles = jnp.asarray(rng.standard_normal((m_tiles, m_tiles, m, m)).astype(np.float32))
+    cyc = to_cyclic_layout(tiles, p, q)
+    back = from_cyclic_layout(cyc, p, q)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(tiles))
+
+
+def test_tile_vector_roundtrip(rng):
+    v = rng.standard_normal(64).astype(np.float32)
+    chunks = tiling.tile_vector(jnp.asarray(v), 16)
+    assert chunks.shape == (4, 16)
+    np.testing.assert_array_equal(np.asarray(tiling.untile_vector(chunks)), v)

@@ -1,0 +1,98 @@
+"""Fault tolerance: kill a training run mid-flight, restart, verify resume.
+Also: straggler detection and data determinism across restarts."""
+
+import os
+import signal
+import subprocess
+import sys
+import time
+
+from _subproc import SRC
+
+SCRIPT = r"""
+import sys, jax, jax.numpy as jnp
+from repro import configs
+from repro.models import transformer as tf
+from repro.optim import Adam
+from repro.train.train_step import make_train_step
+from repro.train.trainer import Trainer
+from repro.data.synthetic import token_batches
+
+ckdir, steps = sys.argv[1], int(sys.argv[2])
+cfg = configs.get_smoke_config("qwen1.5-0.5b")
+params = tf.init_model(jax.random.PRNGKey(0), cfg)
+opt = Adam(learning_rate=1e-3)
+step_fn, _ = make_train_step(cfg, opt, donate=False)
+
+def data_fn(step):
+    t, l = next(token_batches(cfg.vocab_size, 4, 16, seed=step))
+    return jnp.asarray(t), jnp.asarray(l)
+
+tr = Trainer(step_fn, params, opt.init(params), data_fn,
+             ckpt_dir=ckdir, ckpt_every=5, ckpt_async=False, log_every=0)
+print(f"RESUMED_FROM={tr.report.resumed_from}", flush=True)
+rep = tr.run(steps)
+print(f"FINAL_STEP={rep.steps} LOSS={rep.last_loss:.4f}", flush=True)
+"""
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def test_kill_and_resume(tmp_path):
+    ck = str(tmp_path / "ck")
+    # start a 60-step run and kill it after the first checkpoints appear
+    proc = subprocess.Popen(
+        [sys.executable, "-c", SCRIPT, ck, "60"],
+        env=_env(), stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+    )
+    deadline = time.time() + 300
+    killed = False
+    while time.time() < deadline:
+        if os.path.isdir(ck) and any(d.startswith("step_") for d in os.listdir(ck)):
+            time.sleep(0.5)
+            proc.send_signal(signal.SIGKILL)
+            killed = True
+            break
+        if proc.poll() is not None:
+            break
+        time.sleep(0.2)
+    proc.wait(timeout=60)
+    assert killed, "run finished before a checkpoint appeared — lower ckpt_every"
+
+    # restart: must resume from the persisted step (> 0) and complete
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, ck, "10"],
+        env=_env(), capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    resumed = [l for l in out.stdout.splitlines() if l.startswith("RESUMED_FROM=")]
+    assert resumed and resumed[0] != "RESUMED_FROM=None", out.stdout
+    step = int(resumed[0].split("=")[1])
+    assert step >= 5
+    final = [l for l in out.stdout.splitlines() if l.startswith("FINAL_STEP=")]
+    assert final and int(final[0].split()[0].split("=")[1]) == step + 10
+
+
+def test_straggler_detection():
+    import jax.numpy as jnp
+
+    from repro.train.trainer import Trainer
+
+    calls = {"n": 0}
+
+    def slow_step(params, opt, x, y):
+        calls["n"] += 1
+        if calls["n"] == 12:
+            time.sleep(0.3)  # injected straggler
+        return params, opt, jnp.float32(1.0)
+
+    tr = Trainer(
+        slow_step, {}, {}, lambda s: (None, None),
+        straggler_factor=3.0, log_every=0,
+    )
+    rep = tr.run(20)
+    assert rep.stragglers >= 1
