@@ -1,10 +1,17 @@
 """Fig. 3 analogue: tiled Cholesky runtime vs stream count and tile count.
 
 The paper sweeps CUDA streams × tiles at n=32768 on an A30.  Here the same
-sweep runs the level-batched schedule on the host CPU (single XLA device):
-``n_streams`` is the batching-granularity knob (DESIGN.md §2) and tiles per
-dimension sweeps M.  The monolithic single-call Cholesky is the cuSOLVER
-reference analogue.  Sizes are scaled to CPU (default n=1024; use --n).
+sweep runs on the host CPU (single XLA device) and compares three execution
+strategies (DESIGN.md §2–3):
+
+* ``monolithic``  — single-call Cholesky (the cuSOLVER reference analogue)
+* ``column_loop`` — the legacy per-column loop (TRSM -> SYRK -> GEMM
+  serialized inside each column; ``schedule=False``)
+* ``executor``    — the schedule-driven level-batched executor
+  (``schedule=True``; wavefront plan for finite ``n_streams``)
+
+``n_streams`` is the batching-granularity knob and tiles per dimension
+sweeps M.  Sizes are scaled to CPU (default n=1024; use --n).
 """
 
 from __future__ import annotations
@@ -17,7 +24,7 @@ from benchmarks.common import bench, row
 from repro.core import cholesky as chol
 
 
-def run(n: int = 1024, out=print):
+def run(n: int = 1024, tile_counts=(4, 8, 16), streams=(1, 4, 16, None), out=print):
     rng = np.random.default_rng(0)
     a = rng.standard_normal((n, n)).astype(np.float32)
     k = jnp.asarray(a @ a.T + n * np.eye(n, dtype=np.float32))
@@ -27,19 +34,22 @@ def run(n: int = 1024, out=print):
     out(row(f"fig3/monolithic/n{n}", t, f"ci={ci:.2e}"))
     base = t
 
-    for m_tiles in (4, 8, 16, 32):
+    for m_tiles in tile_counts:
         m = n // m_tiles
-        for ns in (1, 4, 16, None):
-            fn = jax.jit(
-                lambda kk, m=m, ns=ns: chol.cholesky_dense_via_tiles(kk, m, n_streams=ns)
-            )
-            t, ci = bench(fn, k)
+        for ns in streams:
             tag = "inf" if ns is None else str(ns)
-            out(row(
-                f"fig3/tiled/n{n}/tiles{m_tiles}/streams{tag}",
-                t,
-                f"speedup_vs_monolithic={base/t:.3f}",
-            ))
+            for strategy, sched in (("executor", True), ("column_loop", False)):
+                fn = jax.jit(
+                    lambda kk, m=m, ns=ns, sched=sched: chol.cholesky_dense_via_tiles(
+                        kk, m, n_streams=ns, schedule=sched
+                    )
+                )
+                t, ci = bench(fn, k)
+                out(row(
+                    f"fig3/{strategy}/n{n}/tiles{m_tiles}/streams{tag}",
+                    t,
+                    f"speedup_vs_monolithic={base/t:.3f}",
+                ))
 
 
 if __name__ == "__main__":

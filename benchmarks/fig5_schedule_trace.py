@@ -1,14 +1,19 @@
 """Fig. 5 analogue: schedule occupancy trace.
 
 The paper shows an NVVP timeline of overlapping kernels.  Without a hardware
-profiler, the equivalent structural artifact is the level schedule itself:
-tasks per level, op mix, and the width/critical-path summary — this is what
-bounds the achievable overlap on any backend.
+profiler, the equivalent structural artifact is the schedule itself: tasks
+per level, op mix, width/critical-path summary — plus, since the Schedule is
+now the real execution plan, the *executor's* per-level batch counts (which
+must match ``Schedule.levels`` exactly) and the wavefront stream-pool
+occupancy for finite ``n_streams`` (the static analogue of the paper's
+timeline: how full the pool is per wave, and how often a wave co-issues
+tasks of different columns).
 """
 
 from __future__ import annotations
 
 from benchmarks.common import row
+from repro.core import executor
 from repro.core import scheduler as sch
 
 
@@ -29,6 +34,40 @@ def run(m_tiles: int = 16, out=print):
     out(row(f"fig5/level_widths/tiles{m_tiles}", 0.0, f"first12={head}"))
     avg = s.n_tasks / s.critical_path
     out(row(f"fig5/avg_parallelism/tiles{m_tiles}", 0.0, f"avg={avg:.2f}"))
+
+    # -- executor plan: the schedule as the execution plan ------------------
+    plan = executor.cholesky_plan(m_tiles, None)
+    match = plan.level_task_counts() == widths
+    out(row(
+        f"fig5/executor_levels/tiles{m_tiles}", 0.0,
+        f"match_schedule={match};levels={len(plan.levels)};batches={plan.n_batches}",
+    ))
+    assert match, "executor per-level batch counts diverged from Schedule.levels"
+
+    # -- wavefront stream-pool occupancy (finite pools) ---------------------
+    for ns in (1, 4, 16):
+        wplan = executor.cholesky_plan(m_tiles, ns)
+        waves = wplan.level_task_counts()
+        occ = sum(waves) / (len(waves) * ns)
+        cross = sum(
+            1 for lvl in wplan.levels
+            if len({t[2] for b in lvl for t in b.tasks}) > 1
+        )
+        out(row(
+            f"fig5/wavefront/tiles{m_tiles}/streams{ns}", 0.0,
+            f"waves={len(waves)};occupancy={occ:.3f};"
+            f"cross_column_waves={cross};batches={wplan.n_batches}",
+        ))
+
+    # -- triangular-solve DAGs (the rest of the pipeline) -------------------
+    for kind, lower in (("forward", True), ("backward", False)):
+        ss = sch.build_solve_schedule(m_tiles, lower=lower)
+        splan = executor.solve_plan(m_tiles, lower=lower, n_streams=None)
+        match = splan.level_task_counts() == [len(l) for l in ss.levels]
+        out(row(
+            f"fig5/solve_{kind}/tiles{m_tiles}", 0.0,
+            f"tasks={ss.n_tasks};levels={ss.critical_path};match_schedule={match}",
+        ))
 
 
 if __name__ == "__main__":

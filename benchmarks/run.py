@@ -17,6 +17,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=1024, help="problem size for fig3/fig4")
     ap.add_argument("--quick", action="store_true", help="smaller sweeps")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="minimal CI smoke run: tiny sizes, every figure module imported",
+    )
     args = ap.parse_args()
 
     from benchmarks import (
@@ -29,6 +34,12 @@ def main() -> None:
     )
 
     print("name,us_per_call,derived")
+    if args.smoke:
+        fig3_streams_tiles.run(n=128, tile_counts=(4,), streams=(2, None))
+        fig5_schedule_trace.run(m_tiles=8)
+        fig6_cholesky_scaling.run(sizes=(128,))
+        mem_tiles.run(n=256)
+        return
     n = min(args.n, 512) if args.quick else args.n
     fig3_streams_tiles.run(n=n)
     fig4_breakdown.run(n=n, n_test=n)

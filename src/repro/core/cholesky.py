@@ -1,17 +1,23 @@
 """Tiled right-looking Cholesky decomposition (paper Fig. 1) on packed tiles.
 
 The factorization runs on the packed symmetric-lower store of
-:mod:`repro.core.tiling` and emits, per step J:
+:mod:`repro.core.tiling`.  Two execution strategies exist (DESIGN.md §2–3):
 
-    POTRF(J,J);  TRSM(I,J) for I>J;  SYRK(I,I) & GEMM(I,K) for J<K<I
+* ``schedule=True`` (default) — the level-batched executor: the ASAP level
+  schedule from :mod:`repro.core.scheduler` is compiled by
+  :mod:`repro.core.executor` into one batched kernel per (level, op,
+  stream-chunk).  Independent tasks from *different* columns batch together
+  (e.g. the GEMM tail of column j with the TRSM panel of column j+1) —
+  the cross-column overlap HPX dataflow achieves with its stream pool.
+* ``schedule=False`` — the legacy per-column loop, kept as a benchmark
+  baseline: TRSM -> SYRK -> GEMM serialized within each column.
 
-Execution strategies (the CUDA-stream analogue, see DESIGN.md §2):
+``n_streams`` is the CUDA-stream-pool analogue in both modes:
 
-* ``n_streams=None``  — whole-panel batching: all TRSMs of the column are one
-  batched triangular solve, the whole trailing update is one batched matmul.
-  This is the TPU-native limit (maximum exposed concurrency).
-* ``n_streams=s``     — each panel/update is issued in round-robin chunks of
-  at most ``s`` batched tasks, reproducing the paper's stream-pool sweep.
+* ``n_streams=None``  — whole-level (resp. whole-panel) batching: the
+  TPU-native limit (maximum exposed concurrency).
+* ``n_streams=s``     — round-robin chunks of at most ``s`` batched tasks,
+  reproducing the paper's stream-pool sweep.
 * ``n_streams=1``     — fully sequential tile-by-tile tasks (paper's single
   stream / pure dataflow-ordered baseline).
 
@@ -34,47 +40,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import tiling
+from repro.core import executor, tiling
 
-
-# ---------------------------------------------------------------------------
-# Tile-level ops (jnp backend).  a/b are (m, m) tiles; batched via vmap.
-# ---------------------------------------------------------------------------
-
-
-def _potrf_jnp(a: jax.Array) -> jax.Array:
-    return jnp.linalg.cholesky(a)
-
-
-def _trsm_jnp(ljj: jax.Array, b: jax.Array) -> jax.Array:
-    # Solve X @ L_JJ^T = B  (right-looking panel update: L_IJ = K_IJ L_JJ^{-T})
-    return jax.lax.linalg.triangular_solve(
-        ljj, b, left_side=False, lower=True, transpose_a=True
-    )
-
-
-def _syrk_jnp(kii: jax.Array, lij: jax.Array, update_dtype=None) -> jax.Array:
-    a = lij if update_dtype is None else lij.astype(update_dtype)
-    upd = (a @ a.T).astype(kii.dtype)
-    return kii - upd
-
-
-def _gemm_jnp(kik: jax.Array, lij: jax.Array, lkj: jax.Array, update_dtype=None) -> jax.Array:
-    a, b = lij, lkj
-    if update_dtype is not None:
-        a, b = a.astype(update_dtype), b.astype(update_dtype)
-    upd = (a @ b.T).astype(kik.dtype)
-    return kik - upd
-
-
-def _get_ops(backend: str):
-    if backend == "jnp":
-        return _potrf_jnp, _trsm_jnp, _syrk_jnp, _gemm_jnp
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-
-        return kops.potrf, kops.trsm, kops.syrk, kops.gemm
-    raise ValueError(f"unknown backend: {backend}")
+# Tile-op definitions live in the executor (shared by both strategies);
+# re-exported here for backwards compatibility.
+from repro.core.executor import (  # noqa: F401
+    _gemm_jnp,
+    _potrf_jnp,
+    _syrk_jnp,
+    _trsm_jnp,
+    get_ops as _get_ops,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -88,16 +64,34 @@ def tiled_cholesky(
     n_streams: Optional[int] = None,
     backend: str = "jnp",
     update_dtype=None,
+    schedule: bool = True,
 ) -> jax.Array:
     """Factor a packed symmetric-lower tile store in place: K -> L.
 
     packed: (T, m, m) with T = M(M+1)/2 (see tiling.pack_lower).
     Returns the packed Cholesky factor (diagonal tiles lower-triangular).
+
+    ``schedule=True`` runs the level-batched executor (the Schedule is the
+    execution plan); ``schedule=False`` runs the legacy per-column loop.
     """
-    t, m, _ = packed.shape
-    m_tiles = int((np.sqrt(8 * t + 1) - 1) // 2)
-    if tiling.num_packed_tiles(m_tiles) != t:
-        raise ValueError(f"{t} is not a triangular number of tiles")
+    if schedule:
+        return executor.run_cholesky(
+            packed, n_streams=n_streams, backend=backend, update_dtype=update_dtype
+        )
+    return _column_loop_cholesky(
+        packed, n_streams=n_streams, backend=backend, update_dtype=update_dtype
+    )
+
+
+def _column_loop_cholesky(
+    packed: jax.Array,
+    *,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    update_dtype=None,
+) -> jax.Array:
+    """Legacy baseline: serialize TRSM -> SYRK -> GEMM within each column."""
+    m_tiles = executor.m_tiles_of_packed(packed)
     potrf, trsm, syrk, gemm = _get_ops(backend)
     trsm_b = jax.vmap(trsm, in_axes=(None, 0))
     syrk_b = jax.vmap(functools.partial(syrk, update_dtype=update_dtype))
@@ -173,11 +167,16 @@ def cholesky_dense_via_tiles(
     n_streams: Optional[int] = None,
     backend: str = "jnp",
     update_dtype=None,
+    schedule: bool = True,
 ) -> jax.Array:
     """Dense (n,n) SPD -> dense lower Cholesky factor, via the tiled path."""
     packed = tiling.pack_lower(a, m)
     lpacked = tiled_cholesky(
-        packed, n_streams=n_streams, backend=backend, update_dtype=update_dtype
+        packed,
+        n_streams=n_streams,
+        backend=backend,
+        update_dtype=update_dtype,
+        schedule=schedule,
     )
     return tiling.unpack_lower(lpacked, fill="lower")
 

@@ -48,7 +48,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import kernels_math as km
 
-shard_map = jax.shard_map
+from repro import compat
+from repro.compat import shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -64,7 +65,7 @@ def _linear_index(axes: Sequence[str]):
     """Linearized device index over possibly-multiple mesh axes."""
     idx = lax.axis_index(axes[0])
     for a in axes[1:]:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        idx = idx * compat.axis_size(a) + lax.axis_index(a)
     return idx
 
 
@@ -73,7 +74,7 @@ def _gather_axes(x: jax.Array, axes: Sequence[str]) -> jax.Array:
     for a in reversed(axes):
         x = lax.all_gather(x, a, axis=0, tiled=False)
     # after gathering a1 then a0 we have (S0, S1, ...) -> flatten
-    sizes = [lax.axis_size(a) for a in axes]
+    sizes = [compat.axis_size(a) for a in axes]
     return x.reshape((int(np.prod(sizes)),) + x.shape[len(sizes):])
 
 

@@ -1,0 +1,317 @@
+"""Schedule-driven level-batched executor — the stream pool of the paper.
+
+HPX executes the tiled Cholesky/solve DAG by firing each task as its future
+operands resolve, round-robin over a pool of CUDA streams; kernels from
+*different* columns overlap whenever the dataflow allows it.  On TPU the graph
+must be static, so this module compiles a :class:`repro.core.scheduler.Schedule`
+into the equivalent static program:
+
+  for each level (ASAP antichain, or <= n_streams wavefront wave):
+      group the level's tasks by op        # POTRF / TRSM / SYRK / GEMM / ...
+      for each round-robin chunk of <= n_streams tasks:
+          gather operand tiles (precomputed numpy index arrays)
+          ONE batched kernel call (vmapped jnp op or Pallas kernel)
+          scatter results back into the packed store
+
+With ``n_streams=None`` every ASAP level becomes one batch per op — the
+TPU-native maximum-batching limit.  With a finite ``n_streams`` the plan is
+the *wavefront* schedule (scheduler.build_wavefront_schedule): waves of at
+most ``n_streams`` simultaneously-ready tasks, critical-path first, so the
+GEMM tail of column j co-batches with the TRSM panel of column j+1 — exactly
+the cross-column overlap the paper's Fig. 5 timeline shows for the stream
+pool.  ``n_streams=1`` is the fully sequential single-stream baseline.
+
+Plans (the gather/scatter index arrays per level) are pure functions of
+``(m_tiles, n_streams)`` and are lru-cached, so repeated traces pay no
+schedule-construction cost.  See DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduler as sch
+from repro.core import tiling
+
+
+# ---------------------------------------------------------------------------
+# Tile-level ops (jnp backend).  a/b are (m, m) tiles; batched via vmap.
+# The Pallas backend (repro.kernels.ops) exposes the same signatures.
+# ---------------------------------------------------------------------------
+
+
+def _potrf_jnp(a: jax.Array) -> jax.Array:
+    return jnp.linalg.cholesky(a)
+
+
+def _trsm_jnp(ljj: jax.Array, b: jax.Array) -> jax.Array:
+    # Solve X @ L_JJ^T = B  (right-looking panel update: L_IJ = K_IJ L_JJ^{-T})
+    return jax.lax.linalg.triangular_solve(
+        ljj, b, left_side=False, lower=True, transpose_a=True
+    )
+
+
+def _syrk_jnp(kii: jax.Array, lij: jax.Array, update_dtype=None) -> jax.Array:
+    a = lij if update_dtype is None else lij.astype(update_dtype)
+    upd = (a @ a.T).astype(kii.dtype)
+    return kii - upd
+
+
+def _gemm_jnp(kik: jax.Array, lij: jax.Array, lkj: jax.Array, update_dtype=None) -> jax.Array:
+    a, b = lij, lkj
+    if update_dtype is not None:
+        a, b = a.astype(update_dtype), b.astype(update_dtype)
+    upd = (a @ b.T).astype(kik.dtype)
+    return kik - upd
+
+
+def get_ops(backend: str):
+    """(potrf, trsm, syrk, gemm) tile ops for a backend name."""
+    if backend == "jnp":
+        return _potrf_jnp, _trsm_jnp, _syrk_jnp, _gemm_jnp
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.potrf, kops.trsm, kops.syrk, kops.gemm
+    raise ValueError(f"unknown backend: {backend}")
+
+
+# ---------------------------------------------------------------------------
+# Compiled plans: per level, per op, per stream-chunk gather/scatter indices.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Batch:
+    """One batched kernel launch: gather operands, compute, scatter ``out``.
+
+    Index semantics by op (all numpy int32, length = batch size):
+      POTRF: a = diagonal slots;                       out = a
+      TRSM:  a = L_JJ slots, b = panel slots;          out = b
+      SYRK:  a = target (i,i) slots, b = panel slots;  out = a
+      GEMM:  a = target slots, b/c = panel slots;      out = a
+      TRSV:  a = diagonal slots;                       out = rhs tile-rows
+      GEMV:  a = L tile slots, b = source tile-rows;   out = dest tile-rows
+    """
+
+    op: str
+    tasks: Tuple[sch.Task, ...]
+    out: np.ndarray
+    a: np.ndarray
+    b: Optional[np.ndarray] = None
+    c: Optional[np.ndarray] = None
+
+    @property
+    def size(self) -> int:
+        return len(self.tasks)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A schedule compiled to batched gather/compute/scatter launches."""
+
+    kind: str
+    m_tiles: int
+    n_streams: Optional[int]
+    levels: Tuple[Tuple[Batch, ...], ...]
+
+    @property
+    def n_batches(self) -> int:
+        return sum(len(l) for l in self.levels)
+
+    def level_task_counts(self) -> List[int]:
+        """Tasks per level — must match ``len(level)`` of the source Schedule."""
+        return [sum(b.size for b in level) for level in self.levels]
+
+    def flat_tasks(self) -> List[sch.Task]:
+        """Tasks in issue order (level-major, batch order within a level)."""
+        return [t for level in self.levels for b in level for t in b.tasks]
+
+
+def _arr(xs: Sequence[int]) -> np.ndarray:
+    return np.asarray(xs, np.int32)
+
+
+def _cholesky_batch(op: str, tasks: Sequence[sch.Task], m: int) -> Batch:
+    slot = tiling.packed_index
+    tasks = tuple(tasks)
+    if op == sch.POTRF:
+        d = _arr([slot(j, j, m) for _, _, j, _ in tasks])
+        return Batch(op, tasks, out=d, a=d)
+    if op == sch.TRSM:
+        diag = _arr([slot(j, j, m) for _, _, j, _ in tasks])
+        tgt = _arr([slot(i, j, m) for _, i, j, _ in tasks])
+        return Batch(op, tasks, out=tgt, a=diag, b=tgt)
+    if op == sch.SYRK:
+        tgt = _arr([slot(i, i, m) for _, i, _, _ in tasks])
+        panel = _arr([slot(i, j, m) for _, i, j, _ in tasks])
+        return Batch(op, tasks, out=tgt, a=tgt, b=panel)
+    if op == sch.GEMM:
+        tgt = _arr([slot(i, k, m) for _, i, _, k in tasks])
+        pa = _arr([slot(i, j, m) for _, i, j, _ in tasks])
+        pb = _arr([slot(k, j, m) for _, _, j, k in tasks])
+        return Batch(op, tasks, out=tgt, a=tgt, b=pa, c=pb)
+    raise ValueError(op)
+
+
+def _solve_batch(op: str, tasks: Sequence[sch.Task], m: int, lower: bool) -> Batch:
+    slot = tiling.packed_index
+    tasks = tuple(tasks)
+    if op == sch.TRSV:
+        rows = _arr([i for _, i, _, _ in tasks])
+        diag = _arr([slot(i, i, m) for _, i, _, _ in tasks])
+        return Batch(op, tasks, out=rows, a=diag)
+    if op == sch.GEMV:
+        dst = _arr([i for _, i, _, _ in tasks])
+        src = _arr([j for _, _, j, _ in tasks])
+        tiles = _arr(
+            [slot(i, j, m) if lower else slot(j, i, m) for _, i, j, _ in tasks]
+        )
+        return Batch(op, tasks, out=dst, a=tiles, b=src)
+    raise ValueError(op)
+
+
+def _compile(schedule: sch.Schedule, n_streams: Optional[int], batch_fn) -> Plan:
+    levels = []
+    for level in schedule.levels:
+        batches = []
+        for op, tasks in sch.split_by_op(level).items():
+            for chunk in sch.chunk_tasks(tasks, n_streams):
+                batches.append(batch_fn(op, chunk, schedule.m_tiles))
+        levels.append(tuple(batches))
+    return Plan(schedule.kind, schedule.m_tiles, n_streams, tuple(levels))
+
+
+@functools.lru_cache(maxsize=None)
+def cholesky_plan(m_tiles: int, n_streams: Optional[int] = None) -> Plan:
+    """``None``: whole-ASAP-level batches (TPU-native limit).  Finite: the
+    wavefront schedule — waves of <= n_streams ready tasks, critical-path
+    first, which co-batches trailing updates of column j with the panel of
+    column j+1 exactly like the paper's round-robin stream pool."""
+    if n_streams is None:
+        schedule = sch.build_schedule(m_tiles)
+    else:
+        schedule = sch.build_wavefront_schedule(m_tiles, n_streams, kind="cholesky")
+    return _compile(schedule, n_streams, _cholesky_batch)
+
+
+@functools.lru_cache(maxsize=None)
+def solve_plan(
+    m_tiles: int, *, lower: bool = True, n_streams: Optional[int] = None
+) -> Plan:
+    kind = "forward" if lower else "backward"
+    if n_streams is None:
+        schedule = sch.build_solve_schedule(m_tiles, lower=lower)
+    else:
+        schedule = sch.build_wavefront_schedule(m_tiles, n_streams, kind=kind)
+    return _compile(
+        schedule, n_streams, functools.partial(_solve_batch, lower=lower)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Execution.
+# ---------------------------------------------------------------------------
+
+
+def m_tiles_of_packed(packed: jax.Array) -> int:
+    """Tile count M of a packed (T, m, m) store, validating T = M(M+1)/2."""
+    t = packed.shape[0]
+    m_tiles = int((np.sqrt(8 * t + 1) - 1) // 2)
+    if tiling.num_packed_tiles(m_tiles) != t:
+        raise ValueError(f"{t} is not a triangular number of tiles")
+    return m_tiles
+
+
+def run_cholesky(
+    packed: jax.Array,
+    *,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    update_dtype=None,
+) -> jax.Array:
+    """Factor a packed store K -> L by walking the level schedule.
+
+    Each Batch is one gather + one batched kernel + one scatter; tasks inside
+    a level are mutually independent (ASAP antichain), so batches may contain
+    tasks of *different* columns — the cross-column overlap that the paper
+    obtains from HPX dataflow over the stream pool.
+    """
+    plan = cholesky_plan(m_tiles_of_packed(packed), n_streams)
+    potrf, trsm, syrk, gemm = get_ops(backend)
+    potrf_b = jax.vmap(potrf)
+    trsm_b = jax.vmap(trsm)
+    syrk_b = jax.vmap(functools.partial(syrk, update_dtype=update_dtype))
+    gemm_b = jax.vmap(functools.partial(gemm, update_dtype=update_dtype))
+    for level in plan.levels:
+        for bt in level:
+            if bt.op == sch.POTRF:
+                packed = packed.at[bt.out].set(potrf_b(packed[bt.a]))
+            elif bt.op == sch.TRSM:
+                packed = packed.at[bt.out].set(trsm_b(packed[bt.a], packed[bt.b]))
+            elif bt.op == sch.SYRK:
+                packed = packed.at[bt.out].set(syrk_b(packed[bt.a], packed[bt.b]))
+            else:
+                packed = packed.at[bt.out].set(
+                    gemm_b(packed[bt.a], packed[bt.b], packed[bt.c])
+                )
+    return packed
+
+
+def _trsv_batch(lii: jax.Array, x: jax.Array, transpose: bool) -> jax.Array:
+    """Batched diagonal-tile solve.  lii (G,m,m); x (G,m) or (G,Q,m,mq)."""
+    if x.ndim == 2:  # vector rhs chunks
+        sol = jax.lax.linalg.triangular_solve(
+            lii, x[..., None], left_side=True, lower=True, transpose_a=transpose
+        )
+        return sol[..., 0]
+    liiq = jnp.broadcast_to(
+        lii[:, None], (lii.shape[0], x.shape[1]) + lii.shape[1:]
+    )
+    return jax.lax.linalg.triangular_solve(
+        liiq, x, left_side=True, lower=True, transpose_a=transpose
+    )
+
+
+def run_solve(
+    lpacked: jax.Array,
+    rhs: jax.Array,
+    *,
+    lower: bool = True,
+    n_streams: Optional[int] = None,
+) -> jax.Array:
+    """Level-batched triangular solve on the packed factor.
+
+    rhs: (M, m) vector chunks or (M, Q, m, mq) matrix tile rows; solved in
+    place (functionally).  ``lower=True`` solves L x = rhs, else L^T x = rhs
+    (reading the stored lower tiles transposed).  Unlike the old per-row
+    loops there is no O(M) restacking: the rhs stays one array and every
+    level is a single gather/einsum/scatter.
+    """
+    m_tiles = rhs.shape[0]
+    if tiling.num_packed_tiles(m_tiles) != lpacked.shape[0]:
+        raise ValueError(
+            f"rhs rows {m_tiles} inconsistent with packed store {lpacked.shape}"
+        )
+    plan = solve_plan(m_tiles, lower=lower, n_streams=n_streams)
+    transpose = not lower
+    matrix = rhs.ndim == 4
+    if matrix:
+        ein = "gba,gqbc->gqac" if transpose else "gab,gqbc->gqac"
+    else:
+        ein = "gba,gb->ga" if transpose else "gab,gb->ga"
+    for level in plan.levels:
+        for bt in level:
+            if bt.op == sch.TRSV:
+                sol = _trsv_batch(lpacked[bt.a], rhs[bt.out], transpose)
+                rhs = rhs.at[bt.out].set(sol)
+            else:
+                upd = jnp.einsum(ein, lpacked[bt.a], rhs[bt.b])
+                rhs = rhs.at[bt.out].add(-upd.astype(rhs.dtype))
+    return rhs

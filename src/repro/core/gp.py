@@ -9,6 +9,10 @@ Backend selection:
 
 * ``op_backend="jnp"``      — XLA ops per tile task
 * ``op_backend="pallas"``   — explicit Pallas VMEM kernels per tile task
+
+The tiled pipeline caches its :class:`repro.core.predict.PosteriorState`
+(packed Cholesky factor + alpha) across ``predict`` calls; the cache is
+invalidated automatically when hyperparameters change (see ``posterior``).
 """
 
 from __future__ import annotations
@@ -46,6 +50,53 @@ class GaussianProcess:
         if self.x_train.shape[0] != self.y_train.shape[0]:
             self.x_train = self.x_train.T
         assert self.x_train.shape[0] == self.y_train.shape[0]
+        self._posterior: Optional[pred.PosteriorState] = None
+        self._posterior_key = None
+
+    # -- cached posterior ---------------------------------------------------
+
+    def _cache_key(self):
+        p = self.params
+        # jax arrays are immutable, so object identity of the training data
+        # is a sound staleness signal (rebinding x_train/y_train invalidates)
+        return (
+            id(self.x_train),
+            id(self.y_train),
+            float(p.lengthscale),
+            float(p.vertical),
+            float(p.noise),
+            self.tile_size,
+            self.n_streams,
+            self.op_backend,
+            str(self.update_dtype),
+            str(jnp.dtype(self.dtype)),
+        )
+
+    def posterior(self) -> pred.PosteriorState:
+        """The packed Cholesky factor + alpha, cached across ``predict`` calls.
+
+        Recomputed only when hyperparameters or pipeline knobs change (e.g.
+        after :meth:`optimize`); repeated predictions at new test points skip
+        the O(n^3) assemble/factor/solve stage entirely.
+        """
+        key = self._cache_key()
+        if self._posterior is None or self._posterior_key != key:
+            self._posterior = pred.posterior_state(
+                self.x_train,
+                self.y_train,
+                self.params,
+                self.tile_size,
+                n_streams=self.n_streams,
+                backend=self.op_backend,
+                update_dtype=self.update_dtype,
+                dtype=self.dtype,
+            )
+            self._posterior_key = key
+        return self._posterior
+
+    def invalidate_cache(self) -> None:
+        self._posterior = None
+        self._posterior_key = None
 
     # -- prediction ---------------------------------------------------------
 
@@ -55,15 +106,11 @@ class GaussianProcess:
             return pred.predict_monolithic(
                 self.x_train, self.y_train, x_test, self.params, dtype=self.dtype
             )
-        return pred.predict(
-            self.x_train,
-            self.y_train,
+        return pred.predict_from_state(
+            self.posterior(),
             x_test,
-            self.params,
-            self.tile_size,
             n_streams=self.n_streams,
             backend=self.op_backend,
-            update_dtype=self.update_dtype,
             dtype=self.dtype,
         )
 
@@ -79,16 +126,12 @@ class GaussianProcess:
                 full_cov=True,
                 dtype=self.dtype,
             )
-        return pred.predict(
-            self.x_train,
-            self.y_train,
+        return pred.predict_from_state(
+            self.posterior(),
             x_test,
-            self.params,
-            self.tile_size,
             full_cov=True,
             n_streams=self.n_streams,
             backend=self.op_backend,
-            update_dtype=self.update_dtype,
             dtype=self.dtype,
         )
 
@@ -113,6 +156,7 @@ class GaussianProcess:
             self.x_train, self.y_train, self.params, steps=steps, lr=lr, dtype=self.dtype
         )
         self.params = new_params
+        self.invalidate_cache()  # the factor belongs to the old hyperparameters
         return self
 
     def _prep(self, x_test: jax.Array) -> jax.Array:

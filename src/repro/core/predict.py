@@ -16,6 +16,7 @@ covariance region is identity/zero which leaves all results for the first n
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Tuple
 
@@ -174,6 +175,82 @@ def cholesky_factor(
     return lpacked, n
 
 
+@dataclasses.dataclass(frozen=True)
+class PosteriorState:
+    """Cached per-training-set state: the packed factor and the weight vector.
+
+    Everything a repeated ``predict`` needs that does not depend on x_test:
+    re-using this skips covariance assembly, the factorization, and both
+    substitutions — the O(n^3) part of the pipeline.
+    """
+
+    lpacked: jax.Array     # (T, m, m) packed Cholesky factor of K
+    alpha: jax.Array       # (M, m) chunks of K^{-1} y
+    x_chunks: jax.Array    # (M, m, D) padded training features
+    n: int                 # valid training rows
+    m: int                 # tile size
+    params: km.SEKernelParams  # hyperparameters the factor was built with
+
+
+def posterior_state(
+    x_train: jax.Array,
+    y_train: jax.Array,
+    params: km.SEKernelParams,
+    m: int,
+    *,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    update_dtype=None,
+    dtype=jnp.float32,
+) -> PosteriorState:
+    """Assemble + factor K and solve for alpha = K^{-1} y (the cacheable part)."""
+    n = x_train.shape[0]
+    xc = pad_features(x_train.astype(dtype), m)
+    yc = pad_vector(y_train.astype(dtype), m)
+    packed = assemble_packed_covariance(xc, params, n, backend=backend)
+    lpacked = chol.tiled_cholesky(
+        packed, n_streams=n_streams, backend=backend, update_dtype=update_dtype
+    )
+    beta = triangular.forward_substitution(lpacked, yc, n_streams=n_streams)
+    alpha = triangular.backward_substitution(lpacked, beta, n_streams=n_streams)
+    return PosteriorState(
+        lpacked=lpacked, alpha=alpha, x_chunks=xc, n=n, m=m, params=params
+    )
+
+
+def predict_from_state(
+    state: PosteriorState,
+    x_test: jax.Array,
+    *,
+    full_cov: bool = False,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    dtype=jnp.float32,
+):
+    """Prediction given a (possibly cached) :class:`PosteriorState`.
+
+    The kernel hyperparameters come from the state itself — alpha and the
+    factor are only valid for the params K was assembled with, so accepting
+    them separately would invite a silent mismatch.
+    """
+    params = state.params
+    nh = x_test.shape[0]
+    xtc = pad_features(x_test.astype(dtype), state.m)
+    kstar = assemble_cross_tiles(xtc, state.x_chunks, params, nh, state.n, backend=backend)
+    mean = triangular.tiled_matvec(kstar, state.alpha).reshape(-1)[:nh]
+    if not full_cov:
+        return mean
+
+    # L V = K_{X,X̂}:  B tiles are the transpose grid of K_* tiles.
+    b_tiles = jnp.einsum("qiab->iqba", kstar)
+    v = triangular.forward_substitution_matrix(state.lpacked, b_tiles, n_streams=n_streams)
+    w = triangular.tiled_gram(v)                               # (Q, Q, mq, mq)
+    prior = assemble_prior_tiles(xtc, params, nh, backend=backend)
+    sigma_tiles = prior - w
+    sigma = tiling.untile_dense(sigma_tiles)[:nh, :nh]
+    return mean, sigma
+
+
 def predict(
     x_train: jax.Array,
     y_train: jax.Array,
@@ -193,31 +270,24 @@ def predict(
     the paper's *Predict with Full Covariance* operation when ``full_cov``:
     (mean (n̂,), posterior covariance (n̂, n̂)).
     """
-    n, nh = x_train.shape[0], x_test.shape[0]
-    xc = pad_features(x_train.astype(dtype), m)
-    yc = pad_vector(y_train.astype(dtype), m)
-    xtc = pad_features(x_test.astype(dtype), m)
-
-    packed = assemble_packed_covariance(xc, params, n, backend=backend)
-    lpacked = chol.tiled_cholesky(
-        packed, n_streams=n_streams, backend=backend, update_dtype=update_dtype
+    state = posterior_state(
+        x_train,
+        y_train,
+        params,
+        m,
+        n_streams=n_streams,
+        backend=backend,
+        update_dtype=update_dtype,
+        dtype=dtype,
     )
-    beta = triangular.forward_substitution(lpacked, yc)
-    alpha = triangular.backward_substitution(lpacked, beta)
-
-    kstar = assemble_cross_tiles(xtc, xc, params, nh, n, backend=backend)
-    mean = triangular.tiled_matvec(kstar, alpha).reshape(-1)[:nh]
-    if not full_cov:
-        return mean
-
-    # L V = K_{X,X̂}:  B tiles are the transpose grid of K_* tiles.
-    b_tiles = jnp.einsum("qiab->iqba", kstar)
-    v = triangular.forward_substitution_matrix(lpacked, b_tiles)
-    w = triangular.tiled_gram(v)                               # (Q, Q, mq, mq)
-    prior = assemble_prior_tiles(xtc, params, nh, backend=backend)
-    sigma_tiles = prior - w
-    sigma = tiling.untile_dense(sigma_tiles)[:nh, :nh]
-    return mean, sigma
+    return predict_from_state(
+        state,
+        x_test,
+        full_cov=full_cov,
+        n_streams=n_streams,
+        backend=backend,
+        dtype=dtype,
+    )
 
 
 def predict_monolithic(

@@ -17,8 +17,17 @@ module builds the same DAG at trace time and derives:
   single-stream case); ``n_streams=None`` batches the entire level (the
   TPU-native limit).
 
-The schedule is consumed by :mod:`repro.core.cholesky`; it is also unit-tested
-directly (task counts, dependency sanity, critical path length).
+The schedule is compiled into gather/compute/scatter batches by
+:mod:`repro.core.executor` and consumed through :mod:`repro.core.cholesky`
+(``tiled_cholesky(..., schedule=True)``) and :mod:`repro.core.triangular`
+(the solve DAGs below); it is also unit-tested directly (task counts,
+dependency sanity, critical path length).  See DESIGN.md §3.
+
+Besides the factorization DAG this module also builds the dataflow graphs of
+the triangular solves (forward substitution ``L b = y``, backward
+substitution ``L^T a = b`` and their tiled-matrix variants): ``TRSV`` tasks
+solve one diagonal tile, ``GEMV`` tasks propagate a solved tile-row into a
+pending one.  They level-schedule the same way the factorization does.
 """
 
 from __future__ import annotations
@@ -31,6 +40,11 @@ POTRF = "potrf"
 TRSM = "trsm"
 SYRK = "syrk"
 GEMM = "gemm"
+
+# Triangular-solve ops: TRSV solves the diagonal tile of row i; GEMV updates
+# pending row i with solved row j (tile (i, j) for forward, (j, i)^T backward).
+TRSV = "trsv"
+GEMV = "gemv"
 
 Task = Tuple[str, int, int, int]
 
@@ -88,6 +102,7 @@ def all_tasks(m_tiles: int) -> List[Task]:
 class Schedule:
     m_tiles: int
     levels: Tuple[Tuple[Task, ...], ...]
+    kind: str = "cholesky"  # "cholesky" | "forward" | "backward"
 
     @property
     def critical_path(self) -> int:
@@ -101,25 +116,169 @@ class Schedule:
         return max(len(l) for l in self.levels)
 
     def op_counts(self) -> Dict[str, int]:
-        counts: Dict[str, int] = {POTRF: 0, TRSM: 0, SYRK: 0, GEMM: 0}
+        counts: Dict[str, int] = {}
         for level in self.levels:
             for t in level:
-                counts[t[0]] += 1
+                counts[t[0]] = counts.get(t[0], 0) + 1
+        if self.kind == "cholesky":
+            for op in (POTRF, TRSM, SYRK, GEMM):
+                counts.setdefault(op, 0)
         return counts
 
 
-def build_schedule(m_tiles: int) -> Schedule:
-    """ASAP level schedule of the tiled Cholesky DAG."""
-    tasks = all_tasks(m_tiles)
+def _asap_levels(tasks: Sequence[Task], deps_fn) -> Tuple[Tuple[Task, ...], ...]:
+    """ASAP level assignment; ``tasks`` must be in topological order."""
     level_of: Dict[Task, int] = {}
-    for t in tasks:  # program order is a valid topological order
-        deps = _deps(t, m_tiles)
+    for t in tasks:
+        deps = deps_fn(t)
         level_of[t] = 0 if not deps else 1 + max(level_of[d] for d in deps)
     n_levels = 1 + max(level_of.values()) if level_of else 0
     levels: List[List[Task]] = [[] for _ in range(n_levels)]
     for t in tasks:
         levels[level_of[t]].append(t)
-    return Schedule(m_tiles=m_tiles, levels=tuple(tuple(l) for l in levels))
+    return tuple(tuple(l) for l in levels)
+
+
+def build_schedule(m_tiles: int) -> Schedule:
+    """ASAP level schedule of the tiled Cholesky DAG."""
+    levels = _asap_levels(all_tasks(m_tiles), lambda t: _deps(t, m_tiles))
+    return Schedule(m_tiles=m_tiles, levels=levels)
+
+
+def solve_deps(task: Task, m_tiles: int, *, lower: bool = True) -> List[Task]:
+    """Direct dependencies of a triangular-solve task.
+
+    Forward (``L b = y``, right-looking): once row j is solved, every pending
+    row i > j receives the update ``b_i -= L_ij b_j``:
+
+      TRSV(i)      needs GEMV(i, i-1)             (last accumulation into row i)
+      GEMV(i, j)   needs TRSV(j) and GEMV(i, j-1) (last writer of row i's acc)
+
+    Backward (``L^T a = b``) mirrors this with the recurrence running from
+    row M-1 down; GEMV(i, j) with j > i applies ``a_i -= L_ji^T a_j``.
+    """
+    op, i, j, _ = task
+    deps: List[Task] = []
+    if op == TRSV:
+        if lower and i > 0:
+            deps.append((GEMV, i, i - 1, -1))
+        elif not lower and i < m_tiles - 1:
+            deps.append((GEMV, i, i + 1, -1))
+    elif op == GEMV:
+        deps.append((TRSV, j, j, -1))
+        if lower and j > 0:
+            deps.append((GEMV, i, j - 1, -1))
+        elif not lower and j < m_tiles - 1:
+            deps.append((GEMV, i, j + 1, -1))
+    else:
+        raise ValueError(op)
+    return deps
+
+
+def solve_tasks(m_tiles: int, *, lower: bool = True) -> List[Task]:
+    """Every task of a tiled triangular solve, in dataflow program order."""
+    tasks: List[Task] = []
+    cols = range(m_tiles) if lower else reversed(range(m_tiles))
+    for j in cols:
+        tasks.append((TRSV, j, j, -1))
+        rows = range(j + 1, m_tiles) if lower else range(j)
+        for i in rows:
+            tasks.append((GEMV, i, j, -1))
+    return tasks
+
+
+def build_solve_schedule(m_tiles: int, *, lower: bool = True) -> Schedule:
+    """ASAP level schedule of forward (lower) / backward substitution.
+
+    The same schedule drives both the vector solves (``L b = y``) and the
+    tiled-matrix solves (``L V = B``): the DAG over tile-rows is identical,
+    only the per-task operand shapes differ (see executor.run_solve).
+    Critical path is 2M - 1 levels: TRSV and batched-GEMV levels alternate.
+    """
+    levels = _asap_levels(
+        solve_tasks(m_tiles, lower=lower),
+        lambda t: solve_deps(t, m_tiles, lower=lower),
+    )
+    return Schedule(
+        m_tiles=m_tiles, levels=levels, kind="forward" if lower else "backward"
+    )
+
+
+def task_deps(task: Task, schedule: Schedule) -> List[Task]:
+    """Dependencies of ``task`` under the DAG family of ``schedule.kind``."""
+    if schedule.kind == "cholesky":
+        return _deps(task, schedule.m_tiles)
+    return solve_deps(task, schedule.m_tiles, lower=schedule.kind == "forward")
+
+
+def _dag(m_tiles: int, kind: str):
+    """(tasks in topological order, deps_fn) for a DAG family."""
+    if kind == "cholesky":
+        return all_tasks(m_tiles), lambda t: _deps(t, m_tiles)
+    if kind in ("forward", "backward"):
+        lower = kind == "forward"
+        return (
+            solve_tasks(m_tiles, lower=lower),
+            lambda t: solve_deps(t, m_tiles, lower=lower),
+        )
+    raise ValueError(kind)
+
+
+def _bottom_levels(tasks: Sequence[Task], deps_fn) -> Dict[Task, int]:
+    """Longest path from each task to a sink (critical-path priority)."""
+    bottom: Dict[Task, int] = {t: 0 for t in tasks}
+    for t in reversed(tasks):  # reverse topological order
+        for d in deps_fn(t):
+            bottom[d] = max(bottom[d], bottom[t] + 1)
+    return bottom
+
+
+def build_wavefront_schedule(
+    m_tiles: int, n_streams: int, *, kind: str = "cholesky"
+) -> Schedule:
+    """Finite-stream-pool list schedule: the paper's round-robin pool, static.
+
+    ASAP levels of the right-looking Cholesky DAG are *column-phased* (level
+    3j+{0,1,2} holds exactly the POTRF / TRSM panel / trailing update of
+    column j), so plain level chunking can never co-batch tasks of different
+    columns.  HPX with a finite stream pool does better: when the trailing
+    update of column j does not fill the pool, panel tasks of column j+1 that
+    are already ready ride along.  This function reproduces that statically:
+
+      wave k = the <= n_streams ready tasks with the greatest bottom-level
+               (longest path to a sink, i.e. critical-path-first priority)
+
+    Every wave is an antichain (all members were simultaneously ready), and
+    accumulation chains (SYRK/GEMM onto one tile) stay in program order, so
+    executing waves in sequence is exactly dependency-faithful — but a wave
+    may now mix, say, GEMM(i,k)@j with TRSM@j+1, which the executor turns
+    into co-issued batched kernels.  ``n_streams=1`` degenerates to the
+    fully sequential priority order (the paper's single-stream baseline).
+    """
+    import heapq
+
+    if n_streams < 1:
+        raise ValueError(f"n_streams must be >= 1 or None, got {n_streams}")
+    tasks, deps_fn = _dag(m_tiles, kind)
+    bottom = _bottom_levels(tasks, deps_fn)
+    order = {t: i for i, t in enumerate(tasks)}
+    indeg = {t: len(deps_fn(t)) for t in tasks}
+    succs: Dict[Task, List[Task]] = {}
+    for t in tasks:
+        for d in deps_fn(t):
+            succs.setdefault(d, []).append(t)
+    heap = [(-bottom[t], order[t], t) for t in tasks if indeg[t] == 0]
+    heapq.heapify(heap)
+    waves: List[Tuple[Task, ...]] = []
+    while heap:
+        wave = [heapq.heappop(heap)[2] for _ in range(min(n_streams, len(heap)))]
+        waves.append(tuple(wave))
+        for t in wave:
+            for s in succs.get(t, ()):
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    heapq.heappush(heap, (-bottom[s], order[s], s))
+    return Schedule(m_tiles=m_tiles, levels=tuple(waves), kind=kind)
 
 
 def chunk_tasks(

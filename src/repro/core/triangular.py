@@ -5,32 +5,32 @@ Backward substitution  L^T a = b      (paper: L^T alpha = beta)
 Matrix forward solve   L V = B        (paper: L V = K_{X,X̂}, for uncertainty)
 
 All operate on the packed symmetric-lower tile store for L (see tiling.py)
-and tile stacks for vectors/matrices.  The outer recurrence over tile-rows is
-inherently sequential (length-M dependency chain); the inner reduction over
-previously solved chunks is a single batched matmul per row — this is the
-level-batched execution the paper's stream pool approximates on GPU.
+and tile stacks for vectors/matrices.  The solves are driven by the same
+schedule/executor machinery as the factorization: the scheduler emits the
+solve DAG (TRSV diagonal solves, GEMV row propagations), the executor walks
+its ASAP levels issuing one batched gather/einsum/scatter per level chunk
+(see DESIGN.md §4).  The outer recurrence over tile-rows is inherently
+sequential (2M - 1 levels); the inner propagation per level is one batched
+matmul — no per-row Python restacking of previously solved chunks.
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import tiling
+from repro.core import executor, tiling
 
 
-def _row_slots(i: int, m_tiles: int) -> np.ndarray:
-    """Packed slots of tiles (i, 0..i-1) — the strictly-left row of tile-row i."""
-    return np.array([tiling.packed_index(i, j, m_tiles) for j in range(i)], np.int32)
-
-
-def _col_slots(i: int, m_tiles: int) -> np.ndarray:
-    """Packed slots of tiles (i+1..M-1, i) — the strictly-below column i."""
+@functools.lru_cache(maxsize=None)
+def _diag_slots(m_tiles: int) -> np.ndarray:
+    """Packed slots of the diagonal tiles (i, i)."""
     return np.array(
-        [tiling.packed_index(k, i, m_tiles) for k in range(i + 1, m_tiles)], np.int32
+        [tiling.packed_index(i, i, m_tiles) for i in range(m_tiles)], np.int32
     )
 
 
@@ -44,79 +44,43 @@ def _solve_lower(lii: jax.Array, rhs: jax.Array, *, transpose: bool = False) -> 
     return x[:, 0] if vec else x
 
 
-def forward_substitution(lpacked: jax.Array, y_chunks: jax.Array) -> jax.Array:
+def _check_shapes(lpacked: jax.Array, chunks: jax.Array) -> None:
+    assert tiling.num_packed_tiles(chunks.shape[0]) == lpacked.shape[0]
+
+
+def forward_substitution(
+    lpacked: jax.Array, y_chunks: jax.Array, *, n_streams: Optional[int] = None
+) -> jax.Array:
     """Solve L b = y.  lpacked: (T, m, m); y_chunks: (M, m) -> b chunks (M, m)."""
-    t = lpacked.shape[0]
-    m_tiles = y_chunks.shape[0]
-    assert tiling.num_packed_tiles(m_tiles) == t
-    out = []
-    for i in range(m_tiles):
-        acc = y_chunks[i]
-        if i > 0:
-            row = lpacked[_row_slots(i, m_tiles)]          # (i, m, m)
-            prev = jnp.stack(out)                           # (i, m)
-            acc = acc - jnp.einsum("jab,jb->a", row, prev)
-        lii = lpacked[tiling.packed_index(i, i, m_tiles)]
-        out.append(_solve_lower(lii, acc))
-    return jnp.stack(out)
+    _check_shapes(lpacked, y_chunks)
+    return executor.run_solve(lpacked, y_chunks, lower=True, n_streams=n_streams)
 
 
-def backward_substitution(lpacked: jax.Array, b_chunks: jax.Array) -> jax.Array:
+def backward_substitution(
+    lpacked: jax.Array, b_chunks: jax.Array, *, n_streams: Optional[int] = None
+) -> jax.Array:
     """Solve L^T a = b.  Uses tiles (k, i) for k > i: (L^T)_{i,k} = L_{k,i}^T."""
-    t = lpacked.shape[0]
-    m_tiles = b_chunks.shape[0]
-    assert tiling.num_packed_tiles(m_tiles) == t
-    out = [None] * m_tiles
-    for i in reversed(range(m_tiles)):
-        acc = b_chunks[i]
-        if i < m_tiles - 1:
-            col = lpacked[_col_slots(i, m_tiles)]           # (M-1-i, m, m): L_{k,i}
-            nxt = jnp.stack(out[i + 1 :])                   # (M-1-i, m)
-            acc = acc - jnp.einsum("jba,jb->a", col, nxt)   # L_{k,i}^T x_k
-        lii = lpacked[tiling.packed_index(i, i, m_tiles)]
-        out[i] = _solve_lower(lii, acc, transpose=True)
-    return jnp.stack(out)
+    _check_shapes(lpacked, b_chunks)
+    return executor.run_solve(lpacked, b_chunks, lower=False, n_streams=n_streams)
 
 
-def forward_substitution_matrix(lpacked: jax.Array, b_tiles: jax.Array) -> jax.Array:
+def forward_substitution_matrix(
+    lpacked: jax.Array, b_tiles: jax.Array, *, n_streams: Optional[int] = None
+) -> jax.Array:
     """Solve L V = B for a tiled matrix RHS.
 
     b_tiles: (M, Q, m, mq) tile grid of B (n × q).  Returns V tiles (M, Q, m, mq).
     """
-    t = lpacked.shape[0]
-    m_tiles = b_tiles.shape[0]
-    assert tiling.num_packed_tiles(m_tiles) == t
-    solve_cols = jax.vmap(_solve_lower, in_axes=(None, 0))
-    out = []
-    for i in range(m_tiles):
-        acc = b_tiles[i]                                    # (Q, m, mq)
-        if i > 0:
-            row = lpacked[_row_slots(i, m_tiles)]           # (i, m, m)
-            prev = jnp.stack(out)                            # (i, Q, m, mq)
-            acc = acc - jnp.einsum("jab,jqbc->qac", row, prev)
-        lii = lpacked[tiling.packed_index(i, i, m_tiles)]
-        out.append(solve_cols(lii, acc))
-    return jnp.stack(out)
+    _check_shapes(lpacked, b_tiles)
+    return executor.run_solve(lpacked, b_tiles, lower=True, n_streams=n_streams)
 
 
-def backward_substitution_matrix(lpacked: jax.Array, b_tiles: jax.Array) -> jax.Array:
+def backward_substitution_matrix(
+    lpacked: jax.Array, b_tiles: jax.Array, *, n_streams: Optional[int] = None
+) -> jax.Array:
     """Solve L^T X = B for a tiled matrix RHS (used by full posterior solve)."""
-    t = lpacked.shape[0]
-    m_tiles = b_tiles.shape[0]
-    assert tiling.num_packed_tiles(m_tiles) == t
-    solve_cols = jax.vmap(
-        lambda a, b: _solve_lower(a, b, transpose=True), in_axes=(None, 0)
-    )
-    out = [None] * m_tiles
-    for i in reversed(range(m_tiles)):
-        acc = b_tiles[i]
-        if i < m_tiles - 1:
-            col = lpacked[_col_slots(i, m_tiles)]           # L_{k,i}, k > i
-            nxt = jnp.stack(out[i + 1 :])                   # (K, Q, m, mq)
-            acc = acc - jnp.einsum("jba,jqbc->qac", col, nxt)
-        lii = lpacked[tiling.packed_index(i, i, m_tiles)]
-        out[i] = solve_cols(lii, acc)
-    return jnp.stack(out)
+    _check_shapes(lpacked, b_tiles)
+    return executor.run_solve(lpacked, b_tiles, lower=False, n_streams=n_streams)
 
 
 def tiled_matvec(a_tiles: jax.Array, x_chunks: jax.Array) -> jax.Array:
@@ -136,8 +100,5 @@ def logdet_from_factor(lpacked: jax.Array, m_tiles: int, n_valid: Optional[int] 
     no masking is required; n_valid is accepted for interface clarity.
     """
     del n_valid
-    diag_slots = np.array(
-        [tiling.packed_index(i, i, m_tiles) for i in range(m_tiles)], np.int32
-    )
-    diags = jax.vmap(jnp.diag)(lpacked[diag_slots])         # (M, m)
+    diags = jax.vmap(jnp.diag)(lpacked[_diag_slots(m_tiles)])  # (M, m)
     return 2.0 * jnp.sum(jnp.log(diags))

@@ -1,0 +1,1 @@
+"""Distribution rules: parameter/optimizer/input/cache sharding layouts."""

@@ -1,0 +1,112 @@
+"""Sharding rules shared by the train/serve step factories and the dry-run.
+
+One place decides how every array family is laid out over the mesh, so the
+step factories (``repro.train``) and the probe programs (``repro.launch``)
+can never disagree:
+
+* **Parameters / optimizer state** — greedy FSDP+TP: the largest dim of a
+  leaf that divides the ``model`` axis is tensor-parallel-sharded, the
+  largest remaining dim divisible by the ``data`` axis is FSDP-sharded.
+  Dims that don't divide stay replicated, so every spec is always valid on
+  any mesh (including the single-device test meshes, where everything
+  degenerates to replication).
+* **Batch-like inputs** (tokens, labels, embeddings, caches) — sharded over
+  the data-parallel axes ``("pod", "data")`` (whichever exist in the mesh
+  and divide the batch).
+
+Shardings never change program semantics under GSPMD — only layout — so
+these rules are free to be heuristics; the dry-run's memory/cost accounting
+is what judges their quality.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DP_AXES: Tuple[str, ...] = ("pod", "data")  # batch axes, outermost first
+FSDP_AXIS = "data"
+TP_AXIS = "model"
+
+
+def _present(mesh: Mesh, axes: Sequence[str]) -> Tuple[str, ...]:
+    return tuple(a for a in axes if a in mesh.shape and mesh.shape[a] > 1)
+
+
+def _dp_axes_for(mesh: Mesh, batch: int) -> Tuple[str, ...]:
+    """The largest prefix-product of DP axes that divides the batch."""
+    dp = _present(mesh, DP_AXES)
+    while dp and batch % math.prod(mesh.shape[a] for a in dp):
+        dp = dp[1:]  # drop the outermost axis until the product divides
+    return dp
+
+
+def batch_spec(mesh: Mesh, batch: int, *rest) -> P:
+    """PartitionSpec for a batch-leading array; ``rest`` entries pass through."""
+    dp = _dp_axes_for(mesh, batch)
+    return P(dp if dp else None, *rest)
+
+
+def _leaf_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Greedy FSDP+TP spec for one parameter-like leaf."""
+    spec = [None] * len(shape)
+    for axis in (TP_AXIS, FSDP_AXIS):
+        if axis not in mesh.shape or mesh.shape[axis] <= 1:
+            continue
+        size = mesh.shape[axis]
+        for d in sorted(range(len(shape)), key=lambda d: -shape[d]):
+            if spec[d] is None and shape[d] % size == 0 and shape[d] >= size:
+                spec[d] = axis
+                break
+    return P(*spec)
+
+
+def param_shardings(params_shape, mesh: Mesh):
+    """NamedSharding pytree matching a params (or grads) shape pytree."""
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, _leaf_spec(tuple(l.shape), mesh)),
+        params_shape,
+    )
+
+
+def opt_state_shardings(opt_shape, params_shape, mesh: Mesh):
+    """Optimizer-state shardings: moment buffers follow the same shape rule
+    as parameters; scalar state (step counts) is replicated."""
+    del params_shape  # the rule is purely shape-driven, kept for interface
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, _leaf_spec(tuple(l.shape), mesh)),
+        opt_shape,
+    )
+
+
+def input_shardings(cfg, shape, mesh: Mesh):
+    """(inputs, labels) shardings for one train/prefill shape cell."""
+    b = shape.global_batch
+    if getattr(cfg, "input_mode", "tokens") == "embeddings":
+        in_sh = NamedSharding(mesh, batch_spec(mesh, b, None, None))
+    else:
+        in_sh = NamedSharding(mesh, batch_spec(mesh, b, None))
+    lab_sh = NamedSharding(mesh, batch_spec(mesh, b, None))
+    return in_sh, lab_sh
+
+
+def cache_shardings(cfg, batch: int, mesh: Mesh, caches_shape):
+    """Decode-cache shardings: batch dim over DP axes, rest replicated.
+
+    Cache leaves are heterogenous (KV ring buffers, recurrent states, conv
+    windows) but all lead with the batch dim, which is the only one safe to
+    shard generically.
+    """
+    del cfg
+    dp = _dp_axes_for(mesh, batch)
+
+    def leaf(l):
+        spec = [None] * l.ndim
+        if dp and l.ndim and l.shape[0] == batch:
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, caches_shape)

@@ -33,6 +33,8 @@ import time
 import traceback
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 
 
@@ -90,7 +92,7 @@ def run_lm_cell(arch, shape, multi_pod, out_dir, probes=True, force=False):
     print(f"  [cell] {name}")
     cfg = configs.get_config(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
-    jax.set_mesh(mesh)  # mesh context for activation sharding constraints
+    compat.set_mesh(mesh)  # mesh context for activation sharding constraints
     devices = int(len(mesh.devices.reshape(-1)))
     rec = {
         "kind": "lm",
@@ -129,7 +131,7 @@ def run_lm_cell(arch, shape, multi_pod, out_dir, probes=True, force=False):
         rec["full"] = _analyze(compiled, devices)
         ms = compiled.memory_analysis()
         print(f"    memory_analysis: {ms}")
-        ca = compiled.cost_analysis()
+        ca = compat.cost_analysis(compiled)
         print(
             "    cost_analysis: flops/device=%.3e bytes/device=%.3e"
             % (ca.get("flops", 0.0), ca.get("bytes accessed", 0.0))
@@ -237,7 +239,7 @@ def run_gp_cell(gp_shape, multi_pod, out_dir, probes=True, force=False):
         rec["times"] = times
         rec["full"] = _analyze(compiled, devices)
         print(f"    memory_analysis: {compiled.memory_analysis()}")
-        ca = compiled.cost_analysis()
+        ca = compat.cost_analysis(compiled)
         print(
             "    cost_analysis: flops/device=%.3e bytes/device=%.3e"
             % (ca.get("flops", 0.0), ca.get("bytes accessed", 0.0))

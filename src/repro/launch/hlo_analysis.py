@@ -123,7 +123,9 @@ def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
 
 
 def cost_summary(compiled) -> Dict[str, float]:
-    ca = compiled.cost_analysis()
+    from repro import compat
+
+    ca = compat.cost_analysis(compiled)
     return {
         "flops": float(ca.get("flops", 0.0)),
         "bytes": float(ca.get("bytes accessed", 0.0)),

@@ -11,6 +11,8 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -26,7 +28,7 @@ def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
 
     if mesh is None:
         return jax.jit(prefill), None
-    jax.set_mesh(mesh)  # mesh context for activation sharding constraints
+    compat.set_mesh(mesh)  # mesh context for activation sharding constraints
     params_shape = jax.eval_shape(lambda k: tf.init_model(k, cfg), jax.random.PRNGKey(0))
     p_sh = shard_rules.param_shardings(params_shape, mesh)
     in_sh, _ = shard_rules.input_shardings(cfg, shape, mesh)
@@ -42,7 +44,7 @@ def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
     if mesh is None:
         return jax.jit(decode, donate_argnums=(3,) if donate_cache else ()), None
     assert shape is not None
-    jax.set_mesh(mesh)  # mesh context for activation sharding constraints
+    compat.set_mesh(mesh)  # mesh context for activation sharding constraints
     b = shape.global_batch
     params_shape = jax.eval_shape(lambda k: tf.init_model(k, cfg), jax.random.PRNGKey(0))
     p_sh = shard_rules.param_shardings(params_shape, mesh)

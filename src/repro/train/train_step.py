@@ -16,6 +16,8 @@ import functools
 from typing import Any, Callable, Optional, Tuple
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -42,7 +44,7 @@ def make_train_step(
     if mesh is None:
         return jax.jit(step, donate_argnums=(0, 1) if donate else ()), None
 
-    jax.set_mesh(mesh)  # mesh context for activation sharding constraints
+    compat.set_mesh(mesh)  # mesh context for activation sharding constraints
     params_shape = jax.eval_shape(lambda k: tf.init_model(k, cfg), jax.random.PRNGKey(0))
     p_sh = shard_rules.param_shardings(params_shape, mesh)
     opt_shape = jax.eval_shape(optimizer.init, params_shape)
@@ -98,7 +100,7 @@ def make_compressed_dp_step(
     batch_spec = P(dp_axes)
     rep = P()
     fn = jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             spmd_step,
             mesh=mesh,
             in_specs=(rep, rep, rep, batch_spec, batch_spec),

@@ -12,11 +12,11 @@ def test_distributed_cholesky_and_predict():
     out = run_with_devices(
         r"""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro import compat
 from repro.core import distributed as dist, tiling, predict as pred
 from repro.core.kernels_math import SEKernelParams
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 rng = np.random.default_rng(2)
 n, m = 128, 16
 A = rng.standard_normal((n, n)).astype(np.float32)
@@ -55,9 +55,9 @@ def test_mixed_precision_distributed_cholesky():
     out = run_with_devices(
         r"""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro import compat
 from repro.core import distributed as dist, tiling
-mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = compat.make_mesh((2, 2), ("data", "model"))
 rng = np.random.default_rng(0)
 n, m = 64, 8
 A = rng.standard_normal((n, n)).astype(np.float32)
@@ -80,13 +80,13 @@ def test_compressed_dp_step_matches_uncompressed():
     out = run_with_devices(
         r"""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro import compat
 from repro import configs
 from repro.models import transformer as tf
 from repro.optim import Adam
 from repro.train.train_step import make_train_step, make_compressed_dp_step
 
-mesh = jax.make_mesh((2, 4, 1), ("pod", "data", "model"), axis_types=(AxisType.Auto,)*3)
+mesh = compat.make_mesh((2, 4, 1), ("pod", "data", "model"))
 cfg = configs.get_smoke_config("olmo-1b")
 params = tf.init_model(jax.random.PRNGKey(0), cfg)
 opt = Adam(learning_rate=1e-3)

@@ -13,7 +13,7 @@ def test_train_prefill_decode_cells_compile():
     out = run_with_devices(
         r"""
 import dataclasses, jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro import compat
 from repro import configs
 from repro.launch import specs as sp
 from repro.train.train_step import make_train_step
@@ -21,8 +21,8 @@ from repro.train.serve_step import make_decode_step, make_prefill_step
 from repro.optim import Adam
 from repro.configs.base import ShapeConfig
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
-jax.set_mesh(mesh)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
+compat.set_mesh(mesh)
 shape_train = ShapeConfig("t", 64, 8, "train")
 shape_dec = ShapeConfig("d", 64, 8, "decode")
 
@@ -35,7 +35,8 @@ for arch in ("olmo-1b", "gemma2-2b", "qwen3-moe-235b-a22b", "mamba2-1.3b",
     ps = sp.params_shape(cfg)
     oss = jax.eval_shape(Adam(1e-3).init, ps)
     c = fn.lower(ps, oss, ins["inputs"], ins["labels"]).compile()
-    assert c.cost_analysis().get("flops", 0) > 0
+    from repro import compat
+    assert compat.cost_analysis(c).get("flops", 0) > 0
     dfn, _ = make_decode_step(cfg, mesh, shape_dec)
     ins_d = sp.input_specs(cfg, shape_dec)
     c2 = dfn.lower(ps, ins_d["token"], ins_d["pos"], ins_d["caches"]).compile()
@@ -52,11 +53,11 @@ def test_gp_cell_compiles_multiaxis():
     out = run_with_devices(
         r"""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro import compat
 from repro.core import distributed as dist
 from repro.core.kernels_math import SEKernelParams
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(AxisType.Auto,)*3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 m_tiles, m, n, nt = 8, 16, 128, 32
 fn = dist.distributed_gp_predict_fn(
     mesh, m_tiles=m_tiles, tile_size=m, n_valid=n, n_test_valid=nt,

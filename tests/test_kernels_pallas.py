@@ -33,7 +33,8 @@ def test_potrf_shapes(rng, m):
 
 
 def test_potrf_f64(rng):
-    with jax.enable_x64(True):
+    enable_x64 = getattr(jax, "enable_x64", None) or jax.experimental.enable_x64
+    with enable_x64():
         k = _spd(rng, 32, np.float64)
         out = np.asarray(ops.potrf(jnp.asarray(k)))
         np.testing.assert_allclose(out, np.linalg.cholesky(k), atol=1e-10)

@@ -54,3 +54,78 @@ def test_max_width_grows_with_m():
     w4 = sch.build_schedule(4).max_width()
     w8 = sch.build_schedule(8).max_width()
     assert w8 > w4  # more tiles -> more exposed concurrency (paper Fig. 3)
+
+
+# ---------------------------------------------------------------------------
+# Triangular-solve DAGs.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lower", [True, False])
+@pytest.mark.parametrize("m", [1, 2, 5, 9])
+def test_solve_schedule_counts_and_critical_path(m, lower):
+    s = sch.build_solve_schedule(m, lower=lower)
+    assert s.n_tasks == m + m * (m - 1) // 2  # M TRSVs + one GEMV per tile
+    assert s.critical_path == 2 * m - 1       # TRSV/GEMV levels alternate
+    counts = s.op_counts()
+    assert counts[sch.TRSV] == m
+    assert counts.get(sch.GEMV, 0) == m * (m - 1) // 2
+
+
+@pytest.mark.parametrize("lower", [True, False])
+def test_solve_dependencies_respect_level_order(lower):
+    m = 6
+    s = sch.build_solve_schedule(m, lower=lower)
+    level_of = {t: i for i, lvl in enumerate(s.levels) for t in lvl}
+    assert len(level_of) == s.n_tasks
+    for t, lv in level_of.items():
+        for d in sch.task_deps(t, s):
+            assert level_of[d] < lv, (t, d)
+
+
+@pytest.mark.parametrize("lower", [True, False])
+def test_solve_levels_are_antichains(lower):
+    m = 7
+    s = sch.build_solve_schedule(m, lower=lower)
+    for level in s.levels:
+        level_set = set(level)
+        for t in level:
+            for d in sch.solve_deps(t, m, lower=lower):
+                assert d not in level_set, (t, d)
+
+
+# ---------------------------------------------------------------------------
+# Level-batched executor plans must issue tasks in dependency order.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_streams", [None, 1, 2, 4])
+def test_cholesky_plan_order_respects_deps(n_streams):
+    from repro.core import executor
+
+    m = 6
+    plan = executor.cholesky_plan(m, n_streams)
+    pos = {t: i for i, t in enumerate(plan.flat_tasks())}
+    assert len(pos) == sch.build_schedule(m).n_tasks
+    for t, i in pos.items():
+        for d in sch._deps(t, m):
+            assert pos[d] < i, (t, d)
+    # within a level, batches only ever contain independent tasks, so the
+    # stronger property also holds: every dep lives in an *earlier level*
+    level_of = {t: li for li, lvl in enumerate(plan.levels) for b in lvl for t in b.tasks}
+    for t, li in level_of.items():
+        for d in sch._deps(t, m):
+            assert level_of[d] < li, (t, d)
+
+
+@pytest.mark.parametrize("lower", [True, False])
+@pytest.mark.parametrize("n_streams", [None, 2])
+def test_solve_plan_order_respects_deps(lower, n_streams):
+    from repro.core import executor
+
+    m = 6
+    plan = executor.solve_plan(m, lower=lower, n_streams=n_streams)
+    pos = {t: i for i, t in enumerate(plan.flat_tasks())}
+    for t, i in pos.items():
+        for d in sch.solve_deps(t, m, lower=lower):
+            assert pos[d] < i, (t, d)
