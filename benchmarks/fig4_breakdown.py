@@ -70,6 +70,14 @@ def run(n: int = 1024, n_test: int = 1024, out=print):
         t, _ = bench(var, lp, kstar, xtc)
         out(row(f"fig4/uncertainty/n{n}/tiles{m_tiles}", t))
 
+        # the same pipeline as ONE fused program (DESIGN.md §7): no stage
+        # barriers, cross-stage wavefronts, one jit
+        fused = jax.jit(
+            lambda a, b, c: pred.predict(a, b, c, params, m, full_cov=True)
+        )
+        t, _ = bench(fused, x, y, xt)
+        out(row(f"fig4/fused_total/n{n}/tiles{m_tiles}", t))
+
 
 if __name__ == "__main__":
     run()

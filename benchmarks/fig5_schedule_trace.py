@@ -8,6 +8,11 @@ must match ``Schedule.levels`` exactly) and the wavefront stream-pool
 occupancy for finite ``n_streams`` (the static analogue of the paper's
 timeline: how full the pool is per wave, and how often a wave co-issues
 tasks of different columns).
+
+The fused whole-pipeline program (DESIGN.md §7) gets its own trace: per-wave
+op mixes showing substitution rows and cross-covariance assembly co-batched
+into the tail of Cholesky columns, plus fused-vs-staged batched-launch
+totals.
 """
 
 from __future__ import annotations
@@ -68,6 +73,43 @@ def run(m_tiles: int = 16, out=print):
             f"fig5/solve_{kind}/tiles{m_tiles}", 0.0,
             f"tasks={ss.n_tasks};levels={ss.critical_path};match_schedule={match}",
         ))
+
+    # -- fused whole-pipeline program: the cross-stage wave trace -----------
+    # The paper's Fig. 5 timeline shows substitution / cross-covariance
+    # kernels overlapping the tail of the factorization; the static analogue
+    # is the program wavefront's per-wave op mix.  Waves mixing a Cholesky op
+    # with a solve/cross op are exactly the cross-stage overlap.
+    chol_ops = {sch.POTRF, sch.TRSM, sch.SYRK, sch.GEMM}
+    solve_cross_ops = {
+        sch.TRSV, sch.GEMV, sch.TRSV_B, sch.GEMV_B,
+        sch.CROSS, sch.VINIT, sch.VTRSV, sch.VGEMV, sch.XGEMV,
+    }
+    q_tiles = max(m_tiles // 4, 1)
+    for ns in (4, 16):
+        plan = executor.program_plan(m_tiles, q_tiles, True, ns)
+        staged = executor.staged_launch_count(
+            m_tiles, uncertainty=True, n_streams=ns
+        )
+        mixed = 0
+        trace = []
+        for wi, lvl in enumerate(plan.levels):
+            ops = {}
+            for b in lvl:
+                for t in b.tasks:
+                    ops[t[0]] = ops.get(t[0], 0) + 1
+            is_mixed = set(ops) & chol_ops and set(ops) & solve_cross_ops
+            if is_mixed:
+                mixed += 1
+                if len(trace) < 8:
+                    mix = ",".join(f"{o}:{c}" for o, c in sorted(ops.items()))
+                    trace.append(f"wave{wi}[{mix}]")
+        out(row(
+            f"fig5/program/tiles{m_tiles}/streams{ns}", 0.0,
+            f"waves={len(plan.levels)};batches={plan.n_batches};"
+            f"staged_batches={staged};cross_stage_waves={mixed}",
+        ))
+        for tr in trace:
+            out(row(f"fig5/program_trace/tiles{m_tiles}/streams{ns}", 0.0, tr))
 
 
 if __name__ == "__main__":

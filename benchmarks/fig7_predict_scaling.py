@@ -28,11 +28,16 @@ def run(sizes=(128, 256, 512, 1024), out=print):
         t_m, _ = bench(mono, x, y, xt)
         out(row(f"fig7/monolithic/n{n}", t_m))
         m = max(n // 8, 64)
-        tiled = jax.jit(
-            lambda a, b, c, m=m: pred.predict(a, b, c, params, m, full_cov=True)
-        )
-        t_t, _ = bench(tiled, x, y, xt)
-        out(row(f"fig7/tiled/n{n}/m{m}", t_t, f"speedup={t_m/t_t:.3f}"))
+        for label, fused in (("fused", True), ("staged", False)):
+            tiled = jax.jit(
+                lambda a, b, c, m=m, fused=fused: pred.predict(
+                    a, b, c, params, m, full_cov=True, fused=fused
+                )
+            )
+            t_t, _ = bench(tiled, x, y, xt)
+            out(row(
+                f"fig7/tiled_{label}/n{n}/m{m}", t_t, f"speedup={t_m/t_t:.3f}"
+            ))
 
 
 if __name__ == "__main__":

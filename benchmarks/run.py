@@ -1,16 +1,110 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark driver: one module per paper figure/table.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--n N]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--n N] [--json PATH]
 
-Emits ``name,us_per_call,derived`` CSV rows.  Sizes default to CPU-friendly
-values (paper sizes n=32768 target the TPU dry-run path, not this host —
-see EXPERIMENTS.md §Methodology).
+Emits ``name,us_per_call,derived`` CSV rows on stdout AND writes a
+machine-readable ``BENCH_pipeline.json`` (per-figure timings, executor
+batch counts, fused-vs-staged pipeline timings) so the perf trajectory is
+tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+
+
+class _Collector:
+    """Print benchmark rows and keep them for the JSON artifact."""
+
+    def __init__(self) -> None:
+        self.figures: dict = {}
+
+    def out(self, figure: str):
+        rows = self.figures.setdefault(figure, [])
+
+        def _out(line: str) -> None:
+            print(line)
+            name, us, derived = (line.split(",", 2) + ["", ""])[:3]
+            rows.append({"name": name, "us_per_call": float(us), "derived": derived})
+
+        return _out
+
+
+def _executor_counts(tile_counts=(4, 8, 16), streams=(None, 4, 16)) -> list:
+    """Fused-program vs staged batched-launch counts (plan-level, no exec)."""
+    from repro.core import executor
+
+    rows = []
+    for m_tiles in tile_counts:
+        q_tiles = max(m_tiles // 4, 1)
+        for unc in (False, True):
+            for ns in streams:
+                plan = executor.program_plan(m_tiles, q_tiles, unc, ns)
+                rows.append({
+                    "m_tiles": m_tiles,
+                    "q_tiles": q_tiles,
+                    "uncertainty": unc,
+                    "n_streams": ns,
+                    "fused_batches": plan.n_batches,
+                    "fused_waves": len(plan.levels),
+                    "staged_batches": executor.staged_launch_count(
+                        m_tiles, uncertainty=unc, n_streams=ns
+                    ),
+                })
+    return rows
+
+
+def _fused_vs_staged(n: int, out) -> list:
+    """Wall-clock of the fused program vs the staged pipeline vs monolithic."""
+    import jax
+    import numpy as np
+    import jax.numpy as jnp
+
+    from benchmarks.common import bench, row
+    from repro.core import predict as pred
+    from repro.core.kernels_math import SEKernelParams
+
+    rng = np.random.default_rng(0)
+    d = 16
+    params = SEKernelParams.paper_defaults()
+    x = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    xt = jnp.asarray(rng.standard_normal((max(n // 4, 8), d)).astype(np.float32))
+    m = max(n // 8, 16)
+    results = []
+    for full_cov in (False, True):
+        timings = {}
+        for label, fused in (("fused", True), ("staged", False)):
+            fn = jax.jit(
+                lambda a, b, c, fused=fused, full_cov=full_cov: pred.predict(
+                    a, b, c, params, m, full_cov=full_cov, fused=fused
+                )
+            )
+            t, _ = bench(fn, x, y, xt)
+            timings[label] = t
+            out(row(f"pipeline/{label}/n{n}/m{m}/cov{int(full_cov)}", t))
+        mono = jax.jit(
+            lambda a, b, c, full_cov=full_cov: pred.predict_monolithic(
+                a, b, c, params, full_cov=full_cov
+            )
+        )
+        t, _ = bench(mono, x, y, xt)
+        timings["monolithic"] = t
+        out(row(
+            f"pipeline/monolithic/n{n}/cov{int(full_cov)}", t,
+            f"fused_speedup_vs_staged={timings['staged'] / timings['fused']:.3f}",
+        ))
+        results.append({
+            "n": n,
+            "m": m,
+            "full_cov": full_cov,
+            "us_fused": timings["fused"] * 1e6,
+            "us_staged": timings["staged"] * 1e6,
+            "us_monolithic": timings["monolithic"] * 1e6,
+        })
+    return results
 
 
 def main() -> None:
@@ -21,6 +115,11 @@ def main() -> None:
         "--smoke",
         action="store_true",
         help="minimal CI smoke run: tiny sizes, every figure module imported",
+    )
+    ap.add_argument(
+        "--json",
+        default="BENCH_pipeline.json",
+        help="machine-readable output path ('' disables)",
     )
     args = ap.parse_args()
 
@@ -33,22 +132,37 @@ def main() -> None:
         mem_tiles,
     )
 
+    col = _Collector()
     print("name,us_per_call,derived")
     if args.smoke:
-        fig3_streams_tiles.run(n=128, tile_counts=(4,), streams=(2, None))
-        fig5_schedule_trace.run(m_tiles=8)
-        fig6_cholesky_scaling.run(sizes=(128,))
-        mem_tiles.run(n=256)
-        return
-    n = min(args.n, 512) if args.quick else args.n
-    fig3_streams_tiles.run(n=n)
-    fig4_breakdown.run(n=n, n_test=n)
-    fig5_schedule_trace.run(m_tiles=32)
-    sizes = (128, 256, 512) if args.quick else (128, 256, 512, 1024, 2048)
-    fig6_cholesky_scaling.run(sizes=sizes)
-    psizes = (128, 256) if args.quick else (128, 256, 512, 1024)
-    fig7_predict_scaling.run(sizes=psizes)
-    mem_tiles.run(n=n)
+        fig3_streams_tiles.run(n=128, tile_counts=(4,), streams=(2, None), out=col.out("fig3"))
+        fig5_schedule_trace.run(m_tiles=8, out=col.out("fig5"))
+        fig6_cholesky_scaling.run(sizes=(128,), out=col.out("fig6"))
+        mem_tiles.run(n=256, out=col.out("mem"))
+        pipeline = _fused_vs_staged(128, col.out("pipeline"))
+        counts = _executor_counts(tile_counts=(8,))
+    else:
+        n = min(args.n, 512) if args.quick else args.n
+        fig3_streams_tiles.run(n=n, out=col.out("fig3"))
+        fig4_breakdown.run(n=n, n_test=n, out=col.out("fig4"))
+        fig5_schedule_trace.run(m_tiles=32, out=col.out("fig5"))
+        sizes = (128, 256, 512) if args.quick else (128, 256, 512, 1024, 2048)
+        fig6_cholesky_scaling.run(sizes=sizes, out=col.out("fig6"))
+        psizes = (128, 256) if args.quick else (128, 256, 512, 1024)
+        fig7_predict_scaling.run(sizes=psizes, out=col.out("fig7"))
+        mem_tiles.run(n=n, out=col.out("mem"))
+        pipeline = _fused_vs_staged(min(n, 512), col.out("pipeline"))
+        counts = _executor_counts()
+
+    if args.json:
+        payload = {
+            "figures": col.figures,
+            "executor_batches": counts,
+            "fused_vs_staged": pipeline,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

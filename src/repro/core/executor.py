@@ -279,6 +279,293 @@ def _trsv_batch(lii: jax.Array, x: jax.Array, transpose: bool) -> jax.Array:
     )
 
 
+# ---------------------------------------------------------------------------
+# Whole-pipeline program execution (DESIGN.md §7).
+#
+# The program plan generalizes the single packed operand to a named *buffer
+# environment*:
+#
+#   "packed"  (T, m, m)       covariance tiles -> Cholesky factor (in place)
+#   "y"       (M, m)          y chunks -> beta (forward substitution)
+#   "alpha"   (M, m)          beta -> alpha (backward substitution)
+#   "cross"   (Q*M, m, m)     cross-covariance tile grid K_{X̂,X} (flat)
+#   "mean"    (Q, m)          predictive-mean chunks
+#   "v"       (M, Q, m, m)    uncertainty workspace V = L^{-1} K_{X,X̂}
+#   "prior"   (Q*Q, m, m)     prior test tiles -> posterior covariance tiles
+#
+# plus the read-only feature blocks xc (M, m, D) / xtc (Q, m, D).  One
+# run_program walks the fused schedule issuing per-level multi-op batches;
+# SYRK and GEMM tasks of a level are dispatched as a single fused
+# trailing-update launch (TRAIL) since their batched kernel is identical
+# (SYRK is GEMM with both panels equal).
+# ---------------------------------------------------------------------------
+
+TRAIL = sch.TRAIL_GROUP  # fused SYRK+GEMM dispatch group (program plans only)
+
+
+def _program_batch(
+    op: str, tasks: Sequence[sch.Task], m: int, q_tiles: int
+) -> Batch:
+    """Gather/scatter indices of one program batch (buffer roles fixed by op)."""
+    slot = tiling.packed_index
+    tasks = tuple(tasks)
+    if op in (sch.POTRF, sch.TRSM):
+        return _cholesky_batch(op, tasks, m)
+    if op == TRAIL:
+        tgt, pa, pb = [], [], []
+        for t in tasks:
+            _, i, j, k = t
+            if t[0] == sch.SYRK:
+                tgt.append(slot(i, i, m))
+                pa.append(slot(i, j, m))
+                pb.append(slot(i, j, m))
+            else:
+                tgt.append(slot(i, k, m))
+                pa.append(slot(i, j, m))
+                pb.append(slot(k, j, m))
+        return Batch(op, tasks, out=_arr(tgt), a=_arr(tgt), b=_arr(pa), c=_arr(pb))
+    if op in (sch.TRSV, sch.GEMV):
+        return _solve_batch(op, tasks, m, lower=True)
+    if op in (sch.TRSV_B, sch.GEMV_B):
+        base = _solve_batch(
+            sch.TRSV if op == sch.TRSV_B else sch.GEMV, tasks, m, lower=False
+        )
+        return dataclasses.replace(base, op=op, tasks=tasks)
+    if op == sch.ASSEMBLE:
+        rows = _arr([i for _, i, _, _ in tasks])
+        cols = _arr([j for _, _, j, _ in tasks])
+        slots = _arr([slot(i, j, m) for _, i, j, _ in tasks])
+        return Batch(op, tasks, out=slots, a=rows, b=cols)
+    if op == sch.CROSS:
+        p = _arr([i for _, i, _, _ in tasks])
+        q = _arr([j for _, _, j, _ in tasks])
+        return Batch(op, tasks, out=_arr([i * m + j for _, i, j, _ in tasks]), a=p, b=q)
+    if op == sch.PRIOR:
+        p = _arr([i for _, i, _, _ in tasks])
+        q = _arr([j for _, _, j, _ in tasks])
+        return Batch(
+            op, tasks, out=_arr([i * q_tiles + j for _, i, j, _ in tasks]), a=p, b=q
+        )
+    if op == sch.XGEMV:
+        rows = _arr([i for _, i, _, _ in tasks])
+        return Batch(op, tasks, out=rows, a=rows)
+    if op == sch.VINIT:
+        rows = _arr([i for _, i, _, _ in tasks])
+        return Batch(op, tasks, out=rows, a=rows)
+    if op in (sch.VTRSV, sch.VGEMV):
+        # same row/tile indexing as the vector forward solve, on the v buffer
+        base = _solve_batch(
+            sch.TRSV if op == sch.VTRSV else sch.GEMV, tasks, m, lower=True
+        )
+        return dataclasses.replace(base, op=op, tasks=tasks)
+    if op == sch.GRAM:
+        return Batch(op, tasks, out=_arr([]), a=_arr([]))
+    raise ValueError(op)
+
+
+@functools.lru_cache(maxsize=None)
+def program_plan(
+    m_tiles: int,
+    q_tiles: int,
+    uncertainty: bool = False,
+    n_streams: Optional[int] = None,
+) -> Plan:
+    """Compile the fused prediction program into batched launches.
+
+    ``None``: ASAP levels of the whole-pipeline DAG (cross tiles at level 0
+    alongside assembly, solve rows leveled against the columns that produce
+    their tiles).  Finite: the cross-stage wavefront schedule — waves of
+    <= n_streams simultaneously-ready tasks, critical-path first, so solve
+    rows and cross assembly ride the tail of Cholesky columns (paper Fig. 5).
+    """
+    if n_streams is None:
+        schedule = sch.build_program_schedule(
+            m_tiles, q_tiles, uncertainty=uncertainty
+        )
+    else:
+        schedule = sch.build_wavefront_schedule(
+            m_tiles,
+            n_streams,
+            kind="program",
+            q_tiles=q_tiles,
+            uncertainty=uncertainty,
+        )
+    levels = []
+    for level in schedule.levels:
+        groups: dict = {}
+        for t in level:
+            groups.setdefault(sch.dispatch_group(t[0]), []).append(t)
+        batches = []
+        for gop, tasks in groups.items():
+            # BULK ops are one batched custom-kernel launch regardless of the
+            # pool size (see scheduler.BULK_OPS) — never chunk them.
+            width = None if gop in sch.BULK_OPS else n_streams
+            for chunk in sch.chunk_tasks(tasks, width):
+                batches.append(_program_batch(gop, chunk, m_tiles, q_tiles))
+        levels.append(tuple(batches))
+    return Plan("program", m_tiles, n_streams, tuple(levels))
+
+
+def staged_launch_count(
+    m_tiles: int, *, uncertainty: bool = False, n_streams: Optional[int] = None
+) -> int:
+    """Batched launches the *staged* pipeline issues end-to-end.
+
+    One covariance assembly + the factorization plan + both vector-solve
+    plans + cross assembly + mean matvec; with uncertainty also the prior
+    assembly, the B-tile transpose pack, the matrix forward-solve plan, the
+    gram einsum and the prior - W subtraction.  The fused program plan must
+    beat this strictly for M >= 8 (tests/test_executor.py).
+    """
+    n = 1 + cholesky_plan(m_tiles, n_streams).n_batches
+    n += solve_plan(m_tiles, lower=True, n_streams=n_streams).n_batches
+    n += solve_plan(m_tiles, lower=False, n_streams=n_streams).n_batches
+    n += 1 + 1  # cross assembly, mean matvec
+    if uncertainty:
+        n += 1 + 1  # prior assembly, B-tile transpose pack
+        n += solve_plan(m_tiles, lower=True, n_streams=n_streams).n_batches
+        n += 1 + 1  # gram, prior - W subtraction
+    return n
+
+
+def _cov_batch_fn(backend: str, params, nvr: int, nvc: int, symmetric: bool):
+    """Batched covariance-tile assembly: (G,m,D) x (G,m,D) -> (G,m,m)."""
+    if backend == "pallas":
+        from repro.kernels import cov_assembly as cova
+        from repro.kernels import ops as kops
+
+        def pallas_fn(xa, xb, row0, col0):
+            return cova.cov_tiles(
+                xa,
+                xb,
+                row0,
+                col0,
+                lengthscale=float(params.lengthscale),
+                vertical=float(params.vertical),
+                noise=float(params.noise),
+                n_valid_r=nvr,
+                n_valid_c=nvc,
+                symmetric=symmetric,
+                interpret=kops._interpret(),
+            )
+
+        return pallas_fn
+    from repro.core import kernels_math as km
+
+    def jnp_fn(xa, xb, row0, col0):
+        f = lambda a, b, r, c: km.cov_tile(a, b, r, c, params, nvr, nvc, symmetric)
+        return jax.vmap(f)(xa, xb, row0, col0)
+
+    return jnp_fn
+
+
+def run_program(
+    xc: jax.Array,
+    yc: jax.Array,
+    xtc: jax.Array,
+    params,
+    n_valid: int,
+    nt_valid: int,
+    *,
+    uncertainty: bool = False,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    update_dtype=None,
+):
+    """Execute the fused prediction pipeline as one multi-stage program.
+
+    xc (M, m, D) / yc (M, m) / xtc (Q, m, D) are the padded feature and
+    target blocks; ``n_valid`` / ``nt_valid`` the unpadded row counts.
+    Returns the final buffer environment (see module section docstring):
+    ``env["mean"]`` holds the predictive-mean chunks, ``env["prior"]`` the
+    posterior-covariance tiles (uncertainty only), and ``env["packed"]`` /
+    ``env["alpha"]`` the factor/weights slices a PosteriorState caches.
+    """
+    m_tiles, m, _ = xc.shape
+    q_tiles = xtc.shape[0]
+    plan = program_plan(m_tiles, q_tiles, uncertainty, n_streams)
+    dtype = xc.dtype
+
+    potrf, trsm, _, gemm = get_ops(backend)
+    potrf_b = jax.vmap(potrf)
+    trsm_b = jax.vmap(trsm)
+    trail_b = jax.vmap(functools.partial(gemm, update_dtype=update_dtype))
+    asm = _cov_batch_fn(backend, params, n_valid, n_valid, True)
+    crossf = _cov_batch_fn(backend, params, nt_valid, n_valid, False)
+    priorf = _cov_batch_fn(backend, params, nt_valid, nt_valid, False)
+
+    env = {
+        "packed": jnp.zeros((tiling.num_packed_tiles(m_tiles), m, m), dtype),
+        "y": yc,
+        "alpha": jnp.zeros_like(yc),
+        "cross": jnp.zeros((q_tiles * m_tiles, m, m), dtype),
+        "mean": jnp.zeros((q_tiles, m), dtype),
+    }
+    if uncertainty:
+        env["v"] = jnp.zeros((m_tiles, q_tiles, m, m), dtype)
+        env["prior"] = jnp.zeros((q_tiles * q_tiles, m, m), dtype)
+
+    def off(idx):  # tile index -> global row/col offset, i32 on device
+        return jnp.asarray(idx * m, jnp.int32)
+
+    for level in plan.levels:
+        for bt in level:
+            op, packed = bt.op, env["packed"]
+            if op == sch.ASSEMBLE:
+                tiles = asm(xc[bt.a], xc[bt.b], off(bt.a), off(bt.b))
+                env["packed"] = packed.at[bt.out].set(tiles)
+            elif op == sch.CROSS:
+                tiles = crossf(xtc[bt.a], xc[bt.b], off(bt.a), off(bt.b))
+                env["cross"] = env["cross"].at[bt.out].set(tiles)
+            elif op == sch.PRIOR:
+                tiles = priorf(xtc[bt.a], xtc[bt.b], off(bt.a), off(bt.b))
+                env["prior"] = env["prior"].at[bt.out].set(tiles)
+            elif op == sch.POTRF:
+                env["packed"] = packed.at[bt.out].set(potrf_b(packed[bt.a]))
+            elif op == sch.TRSM:
+                env["packed"] = packed.at[bt.out].set(
+                    trsm_b(packed[bt.a], packed[bt.b])
+                )
+            elif op == TRAIL:
+                env["packed"] = packed.at[bt.out].set(
+                    trail_b(packed[bt.a], packed[bt.b], packed[bt.c])
+                )
+            elif op == sch.TRSV:
+                sol = _trsv_batch(packed[bt.a], env["y"][bt.out], False)
+                env["y"] = env["y"].at[bt.out].set(sol)
+                # publish the solved row into the backward pass's buffer
+                env["alpha"] = env["alpha"].at[bt.out].set(sol)
+            elif op == sch.GEMV:
+                upd = jnp.einsum("gab,gb->ga", packed[bt.a], env["y"][bt.b])
+                env["y"] = env["y"].at[bt.out].add(-upd.astype(dtype))
+            elif op == sch.TRSV_B:
+                sol = _trsv_batch(packed[bt.a], env["alpha"][bt.out], True)
+                env["alpha"] = env["alpha"].at[bt.out].set(sol)
+            elif op == sch.GEMV_B:
+                upd = jnp.einsum("gba,gb->ga", packed[bt.a], env["alpha"][bt.b])
+                env["alpha"] = env["alpha"].at[bt.out].add(-upd.astype(dtype))
+            elif op == sch.XGEMV:
+                rows = env["cross"].reshape(q_tiles, m_tiles, m, m)[bt.out]
+                env["mean"] = env["mean"].at[bt.out].set(
+                    jnp.einsum("gqab,qb->ga", rows, env["alpha"])
+                )
+            elif op == sch.VINIT:
+                cols = env["cross"].reshape(q_tiles, m_tiles, m, m)[:, bt.out]
+                env["v"] = env["v"].at[bt.out].set(cols.transpose(1, 0, 3, 2))
+            elif op == sch.VTRSV:
+                sol = _trsv_batch(packed[bt.a], env["v"][bt.out], False)
+                env["v"] = env["v"].at[bt.out].set(sol)
+            elif op == sch.VGEMV:
+                upd = jnp.einsum("gab,gqbc->gqac", packed[bt.a], env["v"][bt.b])
+                env["v"] = env["v"].at[bt.out].add(-upd.astype(dtype))
+            elif op == sch.GRAM:
+                w = jnp.einsum("ipab,iqac->pqbc", env["v"], env["v"])
+                env["prior"] = env["prior"] - w.reshape(q_tiles * q_tiles, m, m)
+            else:
+                raise ValueError(op)
+    return env
+
+
 def run_solve(
     lpacked: jax.Array,
     rhs: jax.Array,

@@ -10,9 +10,16 @@ Backend selection:
 * ``op_backend="jnp"``      — XLA ops per tile task
 * ``op_backend="pallas"``   — explicit Pallas VMEM kernels per tile task
 
+* ``fused=True`` (default)  — cold predictions run the whole pipeline as ONE
+  multi-stage program with cross-stage wavefronts (DESIGN.md §7)
+* ``fused=False``           — staged per-stage baseline
+
 The tiled pipeline caches its :class:`repro.core.predict.PosteriorState`
-(packed Cholesky factor + alpha) across ``predict`` calls; the cache is
+(packed Cholesky factor + alpha — with ``fused`` it is a slice of the fused
+program's buffer environment) across ``predict`` calls; the cache is
 invalidated automatically when hyperparameters change (see ``posterior``).
+Warm predictions at new test points reuse the cached factor through the
+staged cross-covariance/mean stages, skipping the O(n^3) work entirely.
 """
 
 from __future__ import annotations
@@ -40,16 +47,21 @@ class GaussianProcess:
     op_backend: str = "jnp"
     update_dtype: Optional[object] = None
     dtype: object = jnp.float32
+    fused: bool = True
 
     def __post_init__(self):
-        self.x_train = jnp.atleast_2d(jnp.asarray(self.x_train, self.dtype))
-        if self.x_train.shape[0] == 1 and self.x_train.ndim == 2:
-            # allow (n,) inputs for 1-D problems
-            pass
+        x = jnp.asarray(self.x_train, self.dtype)
+        if x.ndim == 1:  # (n,) convenience for 1-D problems
+            x = x[:, None]
         self.y_train = jnp.asarray(self.y_train, self.dtype).reshape(-1)
-        if self.x_train.shape[0] != self.y_train.shape[0]:
-            self.x_train = self.x_train.T
-        assert self.x_train.shape[0] == self.y_train.shape[0]
+        n = self.y_train.shape[0]
+        if x.ndim != 2 or x.shape[0] != n:
+            raise ValueError(
+                f"x_train must be (n, D) or (n,) with n == len(y_train) == {n}; "
+                f"got shape {tuple(x.shape)}. Pass x_train.T explicitly if your "
+                "features are stored (D, n) — it is not transposed silently."
+            )
+        self.x_train = x
         self._posterior: Optional[pred.PosteriorState] = None
         self._posterior_key = None
 
@@ -100,19 +112,47 @@ class GaussianProcess:
 
     # -- prediction ---------------------------------------------------------
 
+    def _predict_tiled(self, x_test: jax.Array, full_cov: bool):
+        """Route a tiled prediction: cached factor -> staged tail stages;
+        cold + ``fused`` -> one whole-pipeline program whose buffer env also
+        populates the posterior cache; cold staged -> posterior() then tail."""
+        key = self._cache_key()
+        if self._posterior is not None and self._posterior_key == key:
+            state = self._posterior
+        elif self.fused:
+            result, state = pred.predict_fused(
+                self.x_train,
+                self.y_train,
+                x_test,
+                self.params,
+                self.tile_size,
+                full_cov=full_cov,
+                n_streams=self.n_streams,
+                backend=self.op_backend,
+                update_dtype=self.update_dtype,
+                dtype=self.dtype,
+                with_state=True,
+            )
+            self._posterior, self._posterior_key = state, key
+            return result
+        else:
+            state = self.posterior()
+        return pred.predict_from_state(
+            state,
+            x_test,
+            full_cov=full_cov,
+            n_streams=self.n_streams,
+            backend=self.op_backend,
+            dtype=self.dtype,
+        )
+
     def predict(self, x_test: jax.Array) -> jax.Array:
         x_test = self._prep(x_test)
         if self.pipeline == "monolithic":
             return pred.predict_monolithic(
                 self.x_train, self.y_train, x_test, self.params, dtype=self.dtype
             )
-        return pred.predict_from_state(
-            self.posterior(),
-            x_test,
-            n_streams=self.n_streams,
-            backend=self.op_backend,
-            dtype=self.dtype,
-        )
+        return self._predict_tiled(x_test, full_cov=False)
 
     def predict_full_cov(self, x_test: jax.Array) -> Tuple[jax.Array, jax.Array]:
         """The paper's *Predict with Full Covariance Matrix* operation."""
@@ -126,20 +166,30 @@ class GaussianProcess:
                 full_cov=True,
                 dtype=self.dtype,
             )
-        return pred.predict_from_state(
-            self.posterior(),
-            x_test,
-            full_cov=True,
-            n_streams=self.n_streams,
-            backend=self.op_backend,
-            dtype=self.dtype,
-        )
+        return self._predict_tiled(x_test, full_cov=True)
 
     def predict_with_uncertainty(self, x_test: jax.Array) -> Tuple[jax.Array, jax.Array]:
         mean, sigma = self.predict_full_cov(x_test)
         return mean, jnp.diagonal(sigma)
 
     # -- hyperparameters ----------------------------------------------------
+
+    def nlml(self) -> jax.Array:
+        """Negative log marginal likelihood from the *cached* tiled posterior.
+
+        Reuses (or populates) the posterior cache: the quadratic term is
+        ``y^T alpha`` over the cached weight chunks and the log-determinant
+        comes from the packed factor's diagonal tiles — no monolithic
+        re-factorization (mll.nlml_from_state).  Identity padding makes both
+        terms exact for any n.
+        """
+        from repro.core import mll
+
+        if self.pipeline == "monolithic":
+            return mll.negative_log_marginal_likelihood(
+                self.x_train, self.y_train, self.params, dtype=self.dtype
+            )
+        return mll.nlml_from_state(self.posterior(), self.y_train, dtype=self.dtype)
 
     def log_marginal_likelihood(self) -> jax.Array:
         from repro.core import mll

@@ -76,6 +76,36 @@ def se_kernel(
     return k
 
 
+def cov_tile(
+    xa: jax.Array,
+    xb: jax.Array,
+    row0,
+    col0,
+    params: SEKernelParams,
+    n_valid_r,
+    n_valid_c,
+    symmetric: bool,
+) -> jax.Array:
+    """One covariance tile with global-index masking (vmap-friendly).
+
+    xa: (m, D) rows, xb: (mb, D) cols; row0/col0 global offsets (traced or
+    static scalars).  Padded region -> identity (symmetric) or zero (cross);
+    symmetric tiles also receive the ``+ sigma^2`` noise on the global
+    diagonal.  This is the jnp analogue of the Pallas cov-assembly kernel
+    (repro.kernels.cov_assembly) and the per-task op behind the ASSEMBLE /
+    CROSS / PRIOR program tasks.
+    """
+    k = se_kernel(xa, xb, params)
+    gi = row0 + jnp.arange(xa.shape[0])[:, None]
+    gj = col0 + jnp.arange(xb.shape[0])[None, :]
+    on_diag = gi == gj
+    valid = (gi < n_valid_r) & (gj < n_valid_c)
+    if symmetric:
+        k = k + jnp.where(on_diag, params.noise, 0.0).astype(k.dtype)
+        return jnp.where(valid, k, on_diag.astype(k.dtype))
+    return jnp.where(valid, k, jnp.zeros((), k.dtype))
+
+
 def assemble_covariance(
     x: jax.Array,
     params: SEKernelParams,

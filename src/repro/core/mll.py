@@ -1,11 +1,18 @@
 """GP hyperparameter optimization via the log marginal likelihood.
 
 Beyond the paper's scope (it fixes l=1, v=1, sigma^2=0.1) but part of the
-GPRat library proper; included for completeness (DESIGN.md §7).  The NLML is
-computed through the same Cholesky machinery and differentiated with JAX;
+GPRat library proper; included for completeness (DESIGN.md §7, which also
+covers how the optimize path relates to the fused program IR).  The NLML is
+computed through the monolithic Cholesky and differentiated with JAX;
 hyperparameters are optimized in unconstrained log-space with Adam.
 
     nlml = 0.5 * ( y^T alpha + log det K + n log 2 pi )
+
+For *evaluating* the NLML at fixed hyperparameters, :func:`nlml_from_state`
+reuses a tiled :class:`repro.core.predict.PosteriorState` instead (quadratic
+term from the cached alpha chunks, log-determinant from the packed factor's
+diagonal tiles) — no re-factorization, exact for any n thanks to identity
+padding.
 """
 
 from __future__ import annotations
@@ -18,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import cholesky as chol
 from repro.core import kernels_math as km
+from repro.core import triangular
 
 
 def negative_log_marginal_likelihood(
@@ -36,6 +44,25 @@ def negative_log_marginal_likelihood(
     beta = jax.lax.linalg.triangular_solve(l, y[:, None], left_side=True, lower=True)
     quad = jnp.sum(beta * beta)
     logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(l)))
+    return 0.5 * (quad + logdet + n * math.log(2.0 * math.pi))
+
+
+def nlml_from_state(state, y: jax.Array, *, dtype=jnp.float32) -> jax.Array:
+    """NLML from a cached tiled posterior (no re-factorization).
+
+    quad   = y^T alpha            (alpha = K^{-1} y, cached chunks; padded
+                                   rows contribute 0 because y pads with 0)
+    logdet = 2 sum log diag(L)    (packed factor's diagonal tiles; padded
+                                   rows contribute log 1 = 0)
+    """
+    from repro.core import predict as pred
+
+    y = y.astype(dtype)
+    n = y.shape[0]
+    yc = pred.pad_vector(y, state.m)
+    quad = jnp.sum(yc * state.alpha)
+    m_tiles = state.alpha.shape[0]
+    logdet = triangular.logdet_from_factor(state.lpacked, m_tiles)
     return 0.5 * (quad + logdet + n * math.log(2.0 * math.pi))
 
 

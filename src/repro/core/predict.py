@@ -9,6 +9,18 @@ Pipeline (all stages jit-compiled, data stays on device end-to-end):
   5. predictive mean                      ŷ = K_* alpha
   6. (uncertainty) solve L V = K_{X,X̂};  W = V^T V;  Σ = K_{X̂,X̂} - W
 
+Two execution strategies (DESIGN.md §7):
+
+* ``fused=True`` (default) — the whole pipeline is ONE multi-stage program:
+  :func:`repro.core.scheduler.build_program_schedule` emits a single DAG
+  with cross-stage edges and :func:`repro.core.executor.run_program` walks
+  it over a named buffer environment, under one ``jax.jit``.  Substitution
+  rows and cross-covariance tiles fire the moment their factor tiles
+  resolve — the paper's headline cross-stage overlap.
+* ``fused=False`` — the staged baseline: the six stages run as separate
+  executor invocations with a barrier between each (kept for equivalence
+  testing and as the paper's per-stage reference).
+
 Padding: inputs of arbitrary n / n̂ are padded to tile multiples; the padded
 covariance region is identity/zero which leaves all results for the first n
 (resp. n̂) entries exactly unchanged (see kernels_math docstring).
@@ -25,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cholesky as chol
+from repro.core import executor
 from repro.core import kernels_math as km
 from repro.core import tiling, triangular
 
@@ -35,21 +48,8 @@ from repro.core import tiling, triangular
 
 
 def _tile_kernel(xa, xb, row0, col0, params, n_valid_r, n_valid_c, symmetric):
-    """One covariance tile with global index masking.
-
-    xa: (m, D) rows, xb: (mb, D) cols; row0/col0 global offsets (traced or
-    static scalars).  Padded region -> identity (symmetric) or zero (cross).
-    """
-    k = km.se_kernel(xa, xb, params)
-    gi = row0 + jnp.arange(xa.shape[0])[:, None]
-    gj = col0 + jnp.arange(xb.shape[0])[None, :]
-    on_diag = gi == gj
-    if symmetric:
-        k = k + jnp.where(on_diag, params.noise, 0.0).astype(k.dtype)
-        valid = (gi < n_valid_r) & (gj < n_valid_c)
-        return jnp.where(valid, k, on_diag.astype(k.dtype))
-    valid = (gi < n_valid_r) & (gj < n_valid_c)
-    return jnp.where(valid, k, jnp.zeros((), k.dtype))
+    """One covariance tile with global index masking (see kernels_math.cov_tile)."""
+    return km.cov_tile(xa, xb, row0, col0, params, n_valid_r, n_valid_c, symmetric)
 
 
 def assemble_packed_covariance(
@@ -251,6 +251,91 @@ def predict_from_state(
     return mean, sigma
 
 
+# ---------------------------------------------------------------------------
+# Fused whole-pipeline prediction (one program, one jit — DESIGN.md §7).
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_program_fn(
+    uncertainty: bool,
+    n_streams: Optional[int],
+    backend: str,
+    update_dtype,
+    n_valid: int,
+    nt_valid: int,
+):
+    """The ONE jit of the fused pipeline, cached per static configuration.
+
+    Shapes are implied by the traced operands; the program plan itself is
+    lru-cached inside :func:`repro.core.executor.program_plan`.  The Pallas
+    backend bakes hyperparameters into its assembly kernels as compile-time
+    constants, so it runs unjitted at this level (each Pallas call is its own
+    compiled kernel).
+    """
+
+    def fn(xc, yc, xtc, params):
+        return executor.run_program(
+            xc,
+            yc,
+            xtc,
+            params,
+            n_valid,
+            nt_valid,
+            uncertainty=uncertainty,
+            n_streams=n_streams,
+            backend=backend,
+            update_dtype=update_dtype,
+        )
+
+    return jax.jit(fn) if backend == "jnp" else fn
+
+
+def predict_fused(
+    x_train: jax.Array,
+    y_train: jax.Array,
+    x_test: jax.Array,
+    params: km.SEKernelParams,
+    m: int,
+    *,
+    full_cov: bool = False,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    update_dtype=None,
+    dtype=jnp.float32,
+    with_state: bool = False,
+):
+    """Whole-pipeline fused prediction: one program, one jit, one plan cache.
+
+    Runs assembly, factorization, both substitutions, cross covariance and
+    the prediction heads as a single multi-stage program with cross-stage
+    wavefronts (executor.run_program).  Returns mean (or ``(mean, sigma)``
+    with ``full_cov``); with ``with_state=True`` also the
+    :class:`PosteriorState` sliced out of the program's buffer environment,
+    so callers can reuse the factor for later staged predictions.
+    """
+    n = x_train.shape[0]
+    nh = x_test.shape[0]
+    xc = pad_features(x_train.astype(dtype), m)
+    yc = pad_vector(y_train.astype(dtype), m)
+    xtc = pad_features(x_test.astype(dtype), m)
+    fn = _fused_program_fn(full_cov, n_streams, backend, update_dtype, n, nh)
+    env = fn(xc, yc, xtc, params)
+    mean = env["mean"].reshape(-1)[:nh]
+    if full_cov:
+        q_tiles = xtc.shape[0]
+        sigma_tiles = env["prior"].reshape(q_tiles, q_tiles, m, m)
+        result = (mean, tiling.untile_dense(sigma_tiles)[:nh, :nh])
+    else:
+        result = mean
+    if not with_state:
+        return result
+    state = PosteriorState(
+        lpacked=env["packed"], alpha=env["alpha"], x_chunks=xc, n=n, m=m, params=params
+    )
+    return result, state
+
+
 def predict(
     x_train: jax.Array,
     y_train: jax.Array,
@@ -263,13 +348,31 @@ def predict(
     backend: str = "jnp",
     update_dtype=None,
     dtype=jnp.float32,
+    fused: bool = True,
 ):
     """Tiled GP prediction.
 
     Returns mean (n̂,), or (mean, var) with ``full_cov=False`` semantics of
     the paper's *Predict with Full Covariance* operation when ``full_cov``:
     (mean (n̂,), posterior covariance (n̂, n̂)).
+
+    ``fused=True`` (default) runs the whole pipeline as one multi-stage
+    program (cross-stage overlap, strictly fewer batched launches);
+    ``fused=False`` runs the staged per-stage baseline.
     """
+    if fused:
+        return predict_fused(
+            x_train,
+            y_train,
+            x_test,
+            params,
+            m,
+            full_cov=full_cov,
+            n_streams=n_streams,
+            backend=backend,
+            update_dtype=update_dtype,
+            dtype=dtype,
+        )
     state = posterior_state(
         x_train,
         y_train,

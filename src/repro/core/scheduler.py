@@ -28,6 +28,15 @@ the triangular solves (forward substitution ``L b = y``, backward
 substitution ``L^T a = b`` and their tiled-matrix variants): ``TRSV`` tasks
 solve one diagonal tile, ``GEMV`` tasks propagate a solved tile-row into a
 pending one.  They level-schedule the same way the factorization does.
+
+Finally, :func:`build_program_schedule` fuses the *entire* prediction
+pipeline — covariance assembly, Cholesky, both substitutions, cross
+covariance, predictive mean and (optionally) the full-covariance tail — into
+one DAG with cross-stage edges, so e.g. ``TRSV(0)`` depends only on
+``POTRF@col0`` and cross-covariance tiles are ready at level 0.  The
+wavefront scheduler then co-batches solve rows and cross-assembly into the
+tail of Cholesky columns exactly like the paper's Fig. 5 timeline (DESIGN.md
+§7).
 """
 
 from __future__ import annotations
@@ -46,7 +55,41 @@ GEMM = "gemm"
 TRSV = "trsv"
 GEMV = "gemv"
 
+# Whole-pipeline program ops (build_program): covariance assembly feeds the
+# factorization, solves/cross-covariance feed the prediction heads.  Forward
+# substitution reuses TRSV/GEMV; the backward pass gets distinct ops because
+# both stages coexist in one DAG (and write a different buffer).
+ASSEMBLE = "assemble"    # packed training-covariance tile (i, j)
+CROSS = "cross"          # cross-covariance tile K_*[p, q] (test row p, train col q)
+PRIOR = "prior"          # prior test-covariance tile K_{X̂,X̂}[p, q]
+TRSV_B = "trsv_b"        # backward diagonal solve of row i (alpha buffer)
+GEMV_B = "gemv_b"        # backward propagation a_i -= L_ji^T a_j
+XGEMV = "xgemv"          # predictive-mean row p: mean_p = sum_q K_*[p,q] alpha_q
+VINIT = "vinit"          # uncertainty workspace row i: V_i,q <- K_*[q,i]^T
+VTRSV = "vtrsv"          # matrix forward solve, diagonal tile of row i
+VGEMV = "vgemv"          # matrix forward propagation V_i -= L_ij V_j
+GRAM = "gram"            # Sigma = prior - V^T V (single closing task)
+
 Task = Tuple[str, int, int, int]
+
+# Ops that the wavefront scheduler does NOT count against the stream pool:
+# the pool models the paper's per-stream cuBLAS/cuSOLVER handles (one tile
+# BLAS kernel resident per stream), whereas these ops are single batched
+# custom-kernel launches in the executor no matter how many tiles they cover
+# (exactly how the staged pipeline issues them).  They still enter waves as
+# soon as their dependencies resolve — riding along with whatever BLAS wave
+# is current — so the cross-stage overlap is preserved without inflating the
+# launch count.
+BULK_OPS = frozenset({ASSEMBLE, CROSS, PRIOR, VINIT, XGEMV, GRAM})
+
+# Dispatch groups: tasks whose batched kernel is literally the same launch.
+# SYRK is GEMM with both panels equal, so the executor fuses both into one
+# trailing-update launch per level (executor.TRAIL).
+TRAIL_GROUP = "trail"
+
+
+def dispatch_group(op: str) -> str:
+    return TRAIL_GROUP if op in (SYRK, GEMM) else op
 
 
 def _deps(task: Task, m_tiles: int) -> List[Task]:
@@ -102,7 +145,9 @@ def all_tasks(m_tiles: int) -> List[Task]:
 class Schedule:
     m_tiles: int
     levels: Tuple[Tuple[Task, ...], ...]
-    kind: str = "cholesky"  # "cholesky" | "forward" | "backward"
+    kind: str = "cholesky"  # "cholesky" | "forward" | "backward" | "program"
+    q_tiles: int = 0        # test tile count (program schedules only)
+    uncertainty: bool = False  # program includes the full-covariance tail
 
     @property
     def critical_path(self) -> int:
@@ -204,14 +249,156 @@ def build_solve_schedule(m_tiles: int, *, lower: bool = True) -> Schedule:
     )
 
 
+# ---------------------------------------------------------------------------
+# The whole-pipeline program DAG (assembly -> factorization -> solves ->
+# cross covariance -> mean / full covariance) with cross-stage edges.
+# ---------------------------------------------------------------------------
+
+
+def program_tasks(m_tiles: int, q_tiles: int, *, uncertainty: bool = False) -> List[Task]:
+    """Every task of the fused prediction pipeline, in program order.
+
+    The order is topological for :func:`program_deps` (assembly first, then
+    factorization, forward substitution, backward substitution, prediction
+    heads), which is what ``_asap_levels`` requires.
+    """
+    tasks: List[Task] = []
+    for j in range(m_tiles):
+        for i in range(j, m_tiles):
+            tasks.append((ASSEMBLE, i, j, -1))
+    for p in range(q_tiles):
+        for q in range(m_tiles):
+            tasks.append((CROSS, p, q, -1))
+    if uncertainty:
+        for p in range(q_tiles):
+            for q in range(q_tiles):
+                tasks.append((PRIOR, p, q, -1))
+    tasks += all_tasks(m_tiles)
+    tasks += solve_tasks(m_tiles, lower=True)  # forward: TRSV / GEMV
+    for op, i, j, k in solve_tasks(m_tiles, lower=False):
+        tasks.append((TRSV_B if op == TRSV else GEMV_B, i, j, k))
+    for p in range(q_tiles):
+        tasks.append((XGEMV, p, -1, -1))
+    if uncertainty:
+        for i in range(m_tiles):
+            tasks.append((VINIT, i, -1, -1))
+        for op, i, j, k in solve_tasks(m_tiles, lower=True):
+            tasks.append((VTRSV if op == TRSV else VGEMV, i, j, k))
+        tasks.append((GRAM, -1, -1, -1))
+    return tasks
+
+
+def program_deps(task: Task, m_tiles: int, q_tiles: int) -> List[Task]:
+    """Direct dependencies of a task in the fused prediction program.
+
+    These are the paper's cross-stage dataflow edges: a consumer waits only
+    for the *tiles it reads*, never for a whole stage.  The last writer of an
+    off-diagonal packed tile (i, j) is ``TRSM(i, j)``; of a diagonal tile
+    (j, j) it is ``POTRF(j)``; of vector row i it is the forward/backward
+    ``TRSV`` of that row.  Hence e.g. ``TRSV(0)`` depends on ``POTRF@col0``
+    only — forward substitution starts while the factorization of later
+    columns is still in flight (the paper's Fig. 5 overlap).
+
+    Buffer hazards: forward substitution runs in the ``y`` buffer; its
+    diagonal solve also publishes the row into the separate ``alpha`` buffer
+    that the backward pass accumulates in, so backward writes can never
+    clobber rows a forward GEMV still reads (no WAR anti-edges needed).
+    """
+    op, i, j, k = task
+    m = m_tiles
+    if op in (ASSEMBLE, CROSS, PRIOR):
+        return []
+    if op == POTRF:
+        return [(SYRK, j, j - 1, -1) if j > 0 else (ASSEMBLE, j, j, -1)]
+    if op == TRSM:
+        return [
+            (POTRF, j, j, -1),
+            (GEMM, i, j - 1, j) if j > 0 else (ASSEMBLE, i, j, -1),
+        ]
+    if op == SYRK:
+        return [
+            (TRSM, i, j, -1),
+            (SYRK, i, j - 1, -1) if j > 0 else (ASSEMBLE, i, i, -1),
+        ]
+    if op == GEMM:
+        return [
+            (TRSM, i, j, -1),
+            (TRSM, k, j, -1),
+            (GEMM, i, j - 1, k) if j > 0 else (ASSEMBLE, i, k, -1),
+        ]
+    if op == TRSV:  # forward; reads L(i,i), accumulations must be done
+        deps = [(POTRF, i, i, -1)]
+        if i > 0:
+            deps.append((GEMV, i, i - 1, -1))
+        return deps
+    if op == GEMV:  # forward: b_i -= L(i,j) b_j; reads finalized tile (i, j)
+        deps = [(TRSV, j, j, -1), (TRSM, i, j, -1)]
+        if j > 0:
+            deps.append((GEMV, i, j - 1, -1))
+        return deps
+    if op == TRSV_B:  # backward; row i seeded by the forward solve of row i
+        deps = [(POTRF, i, i, -1), (TRSV, i, i, -1)]
+        if i < m - 1:
+            deps.append((GEMV_B, i, i + 1, -1))
+        return deps
+    if op == GEMV_B:  # a_i -= L(j,i)^T a_j; reads finalized tile (j, i)
+        deps = [(TRSV_B, j, j, -1), (TRSV, i, i, -1), (TRSM, j, i, -1)]
+        if j < m - 1:
+            deps.append((GEMV_B, i, j + 1, -1))
+        return deps
+    if op == XGEMV:  # mean row p reads every cross tile of row p and all alpha
+        return [(CROSS, i, q, -1) for q in range(m)] + [
+            (TRSV_B, q, q, -1) for q in range(m)
+        ]
+    if op == VINIT:  # V row i is the transposed cross column i
+        return [(CROSS, p, i, -1) for p in range(q_tiles)]
+    if op == VTRSV:
+        deps = [(VINIT, i, -1, -1), (POTRF, i, i, -1)]
+        if i > 0:
+            deps.append((VGEMV, i, i - 1, -1))
+        return deps
+    if op == VGEMV:  # V_i -= L(i,j) V_j
+        deps = [(VTRSV, j, j, -1), (TRSM, i, j, -1), (VINIT, i, -1, -1)]
+        if j > 0:
+            deps.append((VGEMV, i, j - 1, -1))
+        return deps
+    if op == GRAM:
+        return [(VTRSV, r, r, -1) for r in range(m)] + [
+            (PRIOR, p, q, -1) for p in range(q_tiles) for q in range(q_tiles)
+        ]
+    raise ValueError(op)
+
+
+def build_program_schedule(
+    m_tiles: int, q_tiles: int, *, uncertainty: bool = False
+) -> Schedule:
+    """ASAP level schedule of the fused prediction program.
+
+    Cross-stage overlap falls out of the DAG: e.g. ``TRSV(0)`` levels right
+    next to the TRSM panel of column 0, and every ``CROSS`` tile sits at
+    level 0 alongside the covariance assembly.
+    """
+    tasks = program_tasks(m_tiles, q_tiles, uncertainty=uncertainty)
+    levels = _asap_levels(tasks, lambda t: program_deps(t, m_tiles, q_tiles))
+    return Schedule(
+        m_tiles=m_tiles,
+        levels=levels,
+        kind="program",
+        q_tiles=q_tiles,
+        uncertainty=uncertainty,
+    )
+
+
 def task_deps(task: Task, schedule: Schedule) -> List[Task]:
     """Dependencies of ``task`` under the DAG family of ``schedule.kind``."""
     if schedule.kind == "cholesky":
         return _deps(task, schedule.m_tiles)
+    if schedule.kind == "program":
+        return program_deps(task, schedule.m_tiles, schedule.q_tiles)
     return solve_deps(task, schedule.m_tiles, lower=schedule.kind == "forward")
 
 
-def _dag(m_tiles: int, kind: str):
+def _dag(m_tiles: int, kind: str, q_tiles: int = 0, uncertainty: bool = False):
     """(tasks in topological order, deps_fn) for a DAG family."""
     if kind == "cholesky":
         return all_tasks(m_tiles), lambda t: _deps(t, m_tiles)
@@ -220,6 +407,11 @@ def _dag(m_tiles: int, kind: str):
         return (
             solve_tasks(m_tiles, lower=lower),
             lambda t: solve_deps(t, m_tiles, lower=lower),
+        )
+    if kind == "program":
+        return (
+            program_tasks(m_tiles, q_tiles, uncertainty=uncertainty),
+            lambda t: program_deps(t, m_tiles, q_tiles),
         )
     raise ValueError(kind)
 
@@ -234,7 +426,12 @@ def _bottom_levels(tasks: Sequence[Task], deps_fn) -> Dict[Task, int]:
 
 
 def build_wavefront_schedule(
-    m_tiles: int, n_streams: int, *, kind: str = "cholesky"
+    m_tiles: int,
+    n_streams: int,
+    *,
+    kind: str = "cholesky",
+    q_tiles: int = 0,
+    uncertainty: bool = False,
 ) -> Schedule:
     """Finite-stream-pool list schedule: the paper's round-robin pool, static.
 
@@ -248,6 +445,11 @@ def build_wavefront_schedule(
       wave k = the <= n_streams ready tasks with the greatest bottom-level
                (longest path to a sink, i.e. critical-path-first priority)
 
+    Program DAGs additionally carry BULK_OPS tasks (covariance assembly and
+    the prediction heads); those are single batched custom-kernel launches in
+    the executor, so they ride every wave as soon as they are ready without
+    consuming pool slots (the pool models per-stream BLAS handles).
+
     Every wave is an antichain (all members were simultaneously ready), and
     accumulation chains (SYRK/GEMM onto one tile) stay in program order, so
     executing waves in sequence is exactly dependency-faithful — but a wave
@@ -259,7 +461,7 @@ def build_wavefront_schedule(
 
     if n_streams < 1:
         raise ValueError(f"n_streams must be >= 1 or None, got {n_streams}")
-    tasks, deps_fn = _dag(m_tiles, kind)
+    tasks, deps_fn = _dag(m_tiles, kind, q_tiles, uncertainty)
     bottom = _bottom_levels(tasks, deps_fn)
     order = {t: i for i, t in enumerate(tasks)}
     indeg = {t: len(deps_fn(t)) for t in tasks}
@@ -267,18 +469,49 @@ def build_wavefront_schedule(
     for t in tasks:
         for d in deps_fn(t):
             succs.setdefault(d, []).append(t)
-    heap = [(-bottom[t], order[t], t) for t in tasks if indeg[t] == 0]
-    heapq.heapify(heap)
+
+    def push(h, t):
+        heapq.heappush(h, (-bottom[t], order[t], t))
+
+    heap: list = []       # pooled BLAS tile tasks (<= n_streams per wave)
+    bulk_heap: list = []  # batched custom-kernel ops (ride along, see BULK_OPS)
+    for t in tasks:
+        if indeg[t] == 0:
+            push(bulk_heap if t[0] in BULK_OPS else heap, t)
     waves: List[Tuple[Task, ...]] = []
-    while heap:
-        wave = [heapq.heappop(heap)[2] for _ in range(min(n_streams, len(heap)))]
+    affinity = kind == "program"  # staged plans keep PR-1's pure priority order
+    while heap or bulk_heap:
+        wave = [heapq.heappop(bulk_heap)[2] for _ in range(len(bulk_heap))]
+        if affinity and heap:
+            # The wave leader is still chosen critical-path-first; remaining
+            # pool slots prefer tasks of the leader's dispatch group so a wave
+            # compiles to as few batched launches as possible.  Tasks are all
+            # simultaneously ready, so this only reorders within the wave's
+            # antichain — dependency-faithfulness is untouched.
+            ready = [heapq.heappop(heap) for _ in range(len(heap))]
+            leader = ready[0]
+            grp = dispatch_group(leader[2][0])
+            same = [e for e in ready[1:] if dispatch_group(e[2][0]) == grp]
+            rest = [e for e in ready[1:] if dispatch_group(e[2][0]) != grp]
+            picked = [leader] + (same + rest)[: n_streams - 1]
+            wave += [e[2] for e in picked]
+            for e in same[n_streams - 1 :] + rest[max(n_streams - 1 - len(same), 0) :]:
+                heapq.heappush(heap, e)
+        else:
+            wave += [heapq.heappop(heap)[2] for _ in range(min(n_streams, len(heap)))]
         waves.append(tuple(wave))
         for t in wave:
             for s in succs.get(t, ()):
                 indeg[s] -= 1
                 if indeg[s] == 0:
-                    heapq.heappush(heap, (-bottom[s], order[s], s))
-    return Schedule(m_tiles=m_tiles, levels=tuple(waves), kind=kind)
+                    push(bulk_heap if s[0] in BULK_OPS else heap, s)
+    return Schedule(
+        m_tiles=m_tiles,
+        levels=tuple(waves),
+        kind=kind,
+        q_tiles=q_tiles,
+        uncertainty=uncertainty,
+    )
 
 
 def chunk_tasks(

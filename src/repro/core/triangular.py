@@ -12,6 +12,12 @@ its ASAP levels issuing one batched gather/einsum/scatter per level chunk
 (see DESIGN.md §4).  The outer recurrence over tile-rows is inherently
 sequential (2M - 1 levels); the inner propagation per level is one batched
 matmul — no per-row Python restacking of previously solved chunks.
+
+These standalone entry points are the *staged* path.  In the fused
+prediction program (DESIGN.md §7) the same TRSV/GEMV task DAGs are embedded
+into the whole-pipeline schedule with cross-stage edges, so solve rows start
+the moment their factor tiles resolve instead of waiting for the full
+factorization.
 """
 
 from __future__ import annotations

@@ -144,6 +144,120 @@ def test_predict_backends_agree(rng, backend):
 
 
 # ---------------------------------------------------------------------------
+# Fused whole-pipeline program: equivalence vs the staged baseline.
+# ---------------------------------------------------------------------------
+
+
+# tile size per (n, backend): padding remainders covered (200 % 32 != 0) and
+# the Pallas trailing-update kernel needs power-of-two-divisible tiles; the
+# larger Pallas cases use coarser tiles because interpret mode pays per launch
+_FUSED_M = {(64, "jnp"): 16, (200, "jnp"): 32, (512, "jnp"): 128,
+            (64, "pallas"): 16, (200, "pallas"): 64, (512, "pallas"): 128}
+_FUSED_DATA = {}
+
+
+def _fused_case(n, uncertainty, backend):
+    """Deterministic inputs + the staged reference, shared across the
+    n_streams sweep (staged results differ across n_streams only by fp
+    noise orders below the 1e-4 acceptance rtol)."""
+    key = (n, uncertainty, backend)
+    if key not in _FUSED_DATA:
+        d, nt, m = 3, 29, _FUSED_M[(n, backend)]
+        r = np.random.default_rng(n)
+        x = jnp.asarray(r.standard_normal((n, d)).astype(np.float32))
+        y = jnp.asarray(r.standard_normal(n).astype(np.float32))
+        xt = jnp.asarray(r.standard_normal((nt, d)).astype(np.float32))
+        p = SEKernelParams.paper_defaults()
+        staged = pred.predict(
+            x, y, xt, p, m,
+            full_cov=uncertainty, n_streams=4, backend=backend, fused=False,
+        )
+        _FUSED_DATA[key] = (x, y, xt, p, m, staged)
+    return _FUSED_DATA[key]
+
+
+@pytest.mark.parametrize("n_streams", [None, 1, 4])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("uncertainty", [False, True])
+@pytest.mark.parametrize("n", [64, 200, 512])
+def test_fused_matches_staged(n, uncertainty, backend, n_streams):
+    """Acceptance grid: the fused program and the staged pipeline must agree
+    to <= 1e-4 rtol for n x uncertainty x op_backend x n_streams."""
+    x, y, xt, p, m, staged = _fused_case(n, uncertainty, backend)
+    fused = pred.predict(
+        x, y, xt, p, m,
+        full_cov=uncertainty, n_streams=n_streams, backend=backend, fused=True,
+    )
+    if not uncertainty:
+        fused, staged = (fused,), (staged,)
+    for f, s in zip(fused, staged):
+        # atol floors the rtol for near-zero predictive means, where jit
+        # (fused) vs eager (staged) reduction order leaves ~1e-5 fp noise
+        np.testing.assert_allclose(
+            np.asarray(f), np.asarray(s), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_fused_state_slice_matches_staged_state(rng):
+    """PosteriorState sliced from the program env == the staged builder's."""
+    n, d, m = 96, 2, 16
+    x = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    xt = jnp.asarray(rng.standard_normal((5, d)).astype(np.float32))
+    p = SEKernelParams.paper_defaults()
+    _, st_f = pred.predict_fused(x, y, xt, p, m, with_state=True)
+    st_s = pred.posterior_state(x, y, p, m)
+    np.testing.assert_allclose(
+        np.asarray(st_f.lpacked), np.asarray(st_s.lpacked), atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(st_f.alpha), np.asarray(st_s.alpha), atol=2e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: for M >= 8 the fused program issues strictly fewer batched
+# launches than the sum of the staged pipeline's launches.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("uncertainty", [False, True])
+@pytest.mark.parametrize("m_tiles", [8, 12, 16])
+def test_fused_program_fewer_launches(m_tiles, uncertainty):
+    q_tiles = max(m_tiles // 4, 1)
+    for ns in (None, 4, 16):
+        fused = executor.program_plan(m_tiles, q_tiles, uncertainty, ns).n_batches
+        staged = executor.staged_launch_count(
+            m_tiles, uncertainty=uncertainty, n_streams=ns
+        )
+        assert fused < staged, (m_tiles, uncertainty, ns, fused, staged)
+    # n_streams=1 is the fully sequential baseline: one task per launch
+    # leaves nothing to fuse — the program must still never be *worse*.
+    # Likewise the n_streams == M boundary may tie.
+    for ns in (1, 8):
+        fused = executor.program_plan(m_tiles, q_tiles, uncertainty, ns).n_batches
+        staged = executor.staged_launch_count(
+            m_tiles, uncertainty=uncertainty, n_streams=ns
+        )
+        assert fused <= staged, (m_tiles, uncertainty, ns, fused, staged)
+
+
+@pytest.mark.parametrize("uncertainty", [False, True])
+@pytest.mark.parametrize("n_streams", [None, 1, 4])
+def test_program_plan_covers_dag(uncertainty, n_streams):
+    m_tiles, q_tiles = 6, 2
+    plan = executor.program_plan(m_tiles, q_tiles, uncertainty, n_streams)
+    tasks = sch.program_tasks(m_tiles, q_tiles, uncertainty=uncertainty)
+    assert sorted(plan.flat_tasks()) == sorted(tasks)
+    level_of = {
+        t: li for li, lvl in enumerate(plan.levels) for b in lvl for t in b.tasks
+    }
+    for t in tasks:
+        for d in sch.program_deps(t, m_tiles, q_tiles):
+            assert level_of[d] < level_of[t], (t, d)
+
+
+# ---------------------------------------------------------------------------
 # Plan structure: batch counts must match the Schedule's levels.
 # ---------------------------------------------------------------------------
 
@@ -196,14 +310,23 @@ def test_wavefront_batches_across_columns():
 
 
 def _counting(monkeypatch):
+    """Count O(n^3) posterior builds: staged (posterior_state) or fused
+    (predict_fused populating the cache via with_state=True)."""
     calls = {"n": 0}
-    orig = pred.posterior_state
+    orig_state = pred.posterior_state
+    orig_fused = pred.predict_fused
 
-    def wrapped(*a, **kw):
+    def wrapped_state(*a, **kw):
         calls["n"] += 1
-        return orig(*a, **kw)
+        return orig_state(*a, **kw)
 
-    monkeypatch.setattr(pred, "posterior_state", wrapped)
+    def wrapped_fused(*a, **kw):
+        if kw.get("with_state"):
+            calls["n"] += 1
+        return orig_fused(*a, **kw)
+
+    monkeypatch.setattr(pred, "posterior_state", wrapped_state)
+    monkeypatch.setattr(pred, "predict_fused", wrapped_fused)
     return calls
 
 

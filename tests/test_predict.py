@@ -85,6 +85,79 @@ def test_interpolation_of_noiseless_points(rng):
     assert np.abs(mu - y).max() < 1e-2
 
 
+def test_gp_rejects_transposed_features(rng):
+    """(D, n) inputs must raise, not be silently transposed (ambiguous for
+    square inputs, masks genuinely wrong data)."""
+    x = rng.standard_normal((3, 40)).astype(np.float32)  # transposed (D, n)
+    y = rng.standard_normal(40).astype(np.float32)
+    with pytest.raises(ValueError, match="x_train"):
+        GaussianProcess(x, y, tile_size=8)
+    # (n,) 1-D convenience still works
+    gp = GaussianProcess(y, y, tile_size=8)
+    assert gp.x_train.shape == (40, 1)
+    # valid square (n, n) input passes through untransposed
+    xs = rng.standard_normal((8, 8)).astype(np.float32)
+    gp = GaussianProcess(xs, y[:8], tile_size=4)
+    np.testing.assert_array_equal(np.asarray(gp.x_train), xs)
+
+
+def test_gp_nlml_matches_monolithic(rng):
+    from repro.core import mll
+
+    n, d = 100, 2  # not a tile multiple: exercises padding exactness
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    gp = GaussianProcess(x, y, tile_size=16)
+    ref = float(
+        mll.negative_log_marginal_likelihood(
+            jnp.asarray(x), jnp.asarray(y), gp.params
+        )
+    )
+    tiled = float(gp.nlml())
+    assert abs(tiled - ref) < 1e-3 * abs(ref) + 1e-3
+    assert float(gp.log_marginal_likelihood()) == pytest.approx(-ref, rel=1e-5)
+
+
+def test_gp_nlml_reuses_cached_posterior(rng, monkeypatch):
+    from repro.core import mll
+
+    n, d = 48, 2
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    gp = GaussianProcess(x, y, tile_size=16)
+    gp.predict(x[:4])  # populates the posterior cache (fused program)
+    calls = {"n": 0}
+    orig = pred.posterior_state
+
+    def wrapped(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(pred, "posterior_state", wrapped)
+    monolithic = {"n": 0}
+    orig_chol = mll.chol.monolithic_cholesky
+
+    def wrapped_chol(*a, **kw):
+        monolithic["n"] += 1
+        return orig_chol(*a, **kw)
+
+    monkeypatch.setattr(mll.chol, "monolithic_cholesky", wrapped_chol)
+    gp.nlml()
+    assert calls["n"] == 0, "nlml rebuilt the posterior instead of reusing it"
+    assert monolithic["n"] == 0, "nlml re-ran the monolithic Cholesky"
+
+
+def test_gp_fused_cold_equals_staged_cold(rng):
+    n, nt, d = 90, 17, 3
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    xt = rng.standard_normal((nt, d)).astype(np.float32)
+    mu_f, var_f = GaussianProcess(x, y, tile_size=16, fused=True).predict_with_uncertainty(xt)
+    mu_s, var_s = GaussianProcess(x, y, tile_size=16, fused=False).predict_with_uncertainty(xt)
+    np.testing.assert_allclose(np.asarray(mu_f), np.asarray(mu_s), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(var_f), np.asarray(var_s), rtol=1e-4, atol=1e-5)
+
+
 def test_mll_optimization_improves(rng):
     from repro.core import mll
 

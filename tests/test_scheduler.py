@@ -95,6 +95,88 @@ def test_solve_levels_are_antichains(lower):
 
 
 # ---------------------------------------------------------------------------
+# Whole-pipeline program DAG (DESIGN.md §7).
+# ---------------------------------------------------------------------------
+
+
+def _program_task_count(m, q, uncertainty):
+    chol = sum(sch.theoretical_task_counts(m).values())
+    solve = m + m * (m - 1) // 2
+    count = m * (m + 1) // 2 + q * m + chol + 2 * solve + q  # +cross +xgemv
+    if uncertainty:
+        count += q * q + m + solve + 1  # prior + vinit + matrix solve + gram
+    return count
+
+
+@pytest.mark.parametrize("uncertainty", [False, True])
+@pytest.mark.parametrize("m,q", [(1, 1), (4, 1), (8, 2)])
+def test_program_task_counts(m, q, uncertainty):
+    tasks = sch.program_tasks(m, q, uncertainty=uncertainty)
+    assert len(tasks) == len(set(tasks)) == _program_task_count(m, q, uncertainty)
+    s = sch.build_program_schedule(m, q, uncertainty=uncertainty)
+    assert s.n_tasks == len(tasks)
+
+
+@pytest.mark.parametrize("uncertainty", [False, True])
+def test_program_deps_respect_level_order(uncertainty):
+    m, q = 6, 2
+    s = sch.build_program_schedule(m, q, uncertainty=uncertainty)
+    level_of = {t: i for i, lvl in enumerate(s.levels) for t in lvl}
+    assert len(level_of) == s.n_tasks
+    for t, lv in level_of.items():
+        for d in sch.program_deps(t, m, q):
+            assert level_of[d] < lv, (t, d)
+
+
+def test_program_cross_stage_edges():
+    """The defining property: solve/cross tasks wait for *tiles*, not stages.
+    TRSV(0) depends only on POTRF@col0; CROSS tiles are ready at level 0."""
+    m, q = 6, 2
+    assert sch.program_deps((sch.TRSV, 0, 0, -1), m, q) == [(sch.POTRF, 0, 0, -1)]
+    assert sch.program_deps((sch.CROSS, 0, 3, -1), m, q) == []
+    s = sch.build_program_schedule(m, q)
+    level_of = {t: i for i, lvl in enumerate(s.levels) for t in lvl}
+    # forward substitution of row 0 fires long before the last POTRF
+    assert level_of[(sch.TRSV, 0, 0, -1)] < level_of[(sch.POTRF, m - 1, m - 1, -1)]
+    assert level_of[(sch.CROSS, 0, 0, -1)] == 0
+
+
+@pytest.mark.parametrize("uncertainty", [False, True])
+@pytest.mark.parametrize("m", [4, 8])
+def test_program_wavefront_mixes_stages(m, uncertainty):
+    """Acceptance: for M >= 4 the fused wavefront has at least one wave
+    mixing Cholesky tasks with solve/cross tasks (the paper's Fig. 5)."""
+    chol_ops = {sch.POTRF, sch.TRSM, sch.SYRK, sch.GEMM}
+    solve_cross = {
+        sch.TRSV, sch.GEMV, sch.TRSV_B, sch.GEMV_B,
+        sch.CROSS, sch.VINIT, sch.VTRSV, sch.VGEMV,
+    }
+    s = sch.build_wavefront_schedule(
+        m, 4, kind="program", q_tiles=2, uncertainty=uncertainty
+    )
+    mixed = [
+        lvl for lvl in s.levels
+        if {t[0] for t in lvl} & chol_ops and {t[0] for t in lvl} & solve_cross
+    ]
+    assert mixed, "no wave mixed Cholesky with solve/cross tasks"
+
+
+@pytest.mark.parametrize("n_streams", [2, 4])
+def test_program_waves_are_antichains(n_streams):
+    """Wavefront waves must stay antichains under bulk ride-along and
+    op-affinity packing."""
+    m, q = 5, 2
+    s = sch.build_wavefront_schedule(
+        m, n_streams, kind="program", q_tiles=q, uncertainty=True
+    )
+    for level in s.levels:
+        level_set = set(level)
+        for t in level:
+            for d in sch.program_deps(t, m, q):
+                assert d not in level_set, (t, d)
+
+
+# ---------------------------------------------------------------------------
 # Level-batched executor plans must issue tasks in dependency order.
 # ---------------------------------------------------------------------------
 
