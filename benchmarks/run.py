@@ -129,6 +129,7 @@ def main() -> None:
         fig5_schedule_trace,
         fig6_cholesky_scaling,
         fig7_predict_scaling,
+        fig8_train_scaling,
         mem_tiles,
     )
 
@@ -138,6 +139,7 @@ def main() -> None:
         fig3_streams_tiles.run(n=128, tile_counts=(4,), streams=(2, None), out=col.out("fig3"))
         fig5_schedule_trace.run(m_tiles=8, out=col.out("fig5"))
         fig6_cholesky_scaling.run(sizes=(128,), out=col.out("fig6"))
+        fig8_train_scaling.run(sizes=(64,), out=col.out("fig8"))
         mem_tiles.run(n=256, out=col.out("mem"))
         pipeline = _fused_vs_staged(128, col.out("pipeline"))
         counts = _executor_counts(tile_counts=(8,))
@@ -150,6 +152,8 @@ def main() -> None:
         fig6_cholesky_scaling.run(sizes=sizes, out=col.out("fig6"))
         psizes = (128, 256) if args.quick else (128, 256, 512, 1024)
         fig7_predict_scaling.run(sizes=psizes, out=col.out("fig7"))
+        tsizes = (128, 256) if args.quick else (128, 256, 512, 1024, 2048)
+        fig8_train_scaling.run(sizes=tsizes, out=col.out("fig8"))
         mem_tiles.run(n=n, out=col.out("mem"))
         pipeline = _fused_vs_staged(min(n, 512), col.out("pipeline"))
         counts = _executor_counts()

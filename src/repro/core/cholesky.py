@@ -29,6 +29,14 @@ Backends: ``jnp`` (XLA ops) or ``pallas`` (explicit VMEM-tiled kernels from
 :mod:`repro.kernels`).  ``update_dtype`` enables the paper's future-work mixed
 precision: trailing SYRK/GEMM updates accumulate through a lower-precision
 matmul while panels stay in the storage dtype.
+
+Differentiability (DESIGN.md §8): both backends are traceable under
+``jax.grad`` — the jnp tile ops natively, the Pallas tile ops through their
+reference VJP hooks (repro.kernels.ops).  The trainable NLML
+(``mll.nlml_tiled``) nevertheless defaults to a blocked reverse-mode
+``custom_vjp`` that never differentiates back through the factorization's
+wavefront launches: its backward pass re-uses this factor to build K^{-1}
+with one tiled matrix solve + gram (triangular.kinv_tiles_from_factor).
 """
 
 from __future__ import annotations

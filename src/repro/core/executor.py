@@ -428,9 +428,32 @@ def staged_launch_count(
     return n
 
 
+def _params_concrete(params) -> bool:
+    """True iff the hyperparameters are concrete (not traced) scalars.
+
+    The Pallas assembly kernels bake hyperparameters in as compile-time
+    constants, which is impossible inside a gradient trace; callers use this
+    to fall back to the differentiable jnp assembly tile (DESIGN.md §8).
+    """
+    try:
+        float(params.lengthscale)
+        float(params.vertical)
+        float(params.noise)
+        return True
+    except (TypeError, jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError):
+        return False
+
+
 def _cov_batch_fn(backend: str, params, nvr: int, nvc: int, symmetric: bool):
-    """Batched covariance-tile assembly: (G,m,D) x (G,m,D) -> (G,m,m)."""
-    if backend == "pallas":
+    """Batched covariance-tile assembly: (G,m,D) x (G,m,D) -> (G,m,m).
+
+    ``backend="pallas"`` requires concrete hyperparameters (they are baked
+    into the kernel); under a gradient trace the params are tracers, so the
+    differentiable jnp tile kernel is used instead — assembly is O(n^2),
+    cheap relative to the O(n^3) tile BLAS which stays on Pallas.
+    """
+    if backend == "pallas" and _params_concrete(params):
         from repro.kernels import cov_assembly as cova
         from repro.kernels import ops as kops
 

@@ -192,18 +192,39 @@ class GaussianProcess:
         return mll.nlml_from_state(self.posterior(), self.y_train, dtype=self.dtype)
 
     def log_marginal_likelihood(self) -> jax.Array:
+        """``-nlml()`` — for ``pipeline="tiled"`` this reuses the cached tiled
+        posterior (no monolithic Cholesky), consistent with :meth:`nlml`;
+        previously it always ran the monolithic path regardless of pipeline."""
+        return -self.nlml()
+
+    def optimize(
+        self, steps: int = 100, lr: float = 0.05, *, method: Optional[str] = None
+    ) -> "GaussianProcess":
+        """Fit hyperparameters by Adam on the negative log marginal likelihood.
+
+        The optimizer is one jitted ``lax.scan`` (mll.adam_scan).  ``method``
+        defaults to the GP's pipeline: ``pipeline="tiled"`` trains through
+        the differentiable tiled program (``mll.nlml_tiled`` — zero
+        monolithic Cholesky calls, same tile_size/n_streams/op_backend/
+        update_dtype knobs as prediction); ``pipeline="monolithic"``
+        differentiates the dense reference NLML.
+        """
         from repro.core import mll
 
-        return -mll.negative_log_marginal_likelihood(
-            self.x_train, self.y_train, self.params, dtype=self.dtype
-        )
-
-    def optimize(self, steps: int = 100, lr: float = 0.05) -> "GaussianProcess":
-        """Fit hyperparameters by Adam on the negative log marginal likelihood."""
-        from repro.core import mll
-
+        if method is None:
+            method = "tiled" if self.pipeline == "tiled" else "monolithic"
         new_params, _ = mll.optimize_hyperparameters(
-            self.x_train, self.y_train, self.params, steps=steps, lr=lr, dtype=self.dtype
+            self.x_train,
+            self.y_train,
+            self.params,
+            steps=steps,
+            lr=lr,
+            dtype=self.dtype,
+            method=method,
+            tile_size=self.tile_size,
+            n_streams=self.n_streams,
+            op_backend=self.op_backend,
+            update_dtype=self.update_dtype,
         )
         self.params = new_params
         self.invalidate_cache()  # the factor belongs to the old hyperparameters

@@ -1,22 +1,37 @@
-"""GP hyperparameter optimization via the log marginal likelihood.
+"""GP hyperparameter training through the negative log marginal likelihood.
 
 Beyond the paper's scope (it fixes l=1, v=1, sigma^2=0.1) but part of the
-GPRat library proper; included for completeness (DESIGN.md §7, which also
-covers how the optimize path relates to the fused program IR).  The NLML is
-computed through the monolithic Cholesky and differentiated with JAX;
-hyperparameters are optimized in unconstrained log-space with Adam.
+GPRat library proper; DESIGN.md §7–§8 cover how the training path relates to
+the fused program IR.
 
     nlml = 0.5 * ( y^T alpha + log det K + n log 2 pi )
 
-For *evaluating* the NLML at fixed hyperparameters, :func:`nlml_from_state`
-reuses a tiled :class:`repro.core.predict.PosteriorState` instead (quadratic
-term from the cached alpha chunks, log-determinant from the packed factor's
-diagonal tiles) — no re-factorization, exact for any n thanks to identity
-padding.
+Three evaluation paths:
+
+* :func:`negative_log_marginal_likelihood` — the monolithic dense reference
+  (one-call Cholesky, differentiated by JAX autodiff).
+* :func:`nlml_from_state` — evaluation at fixed hyperparameters from a
+  cached tiled :class:`repro.core.predict.PosteriorState` (quadratic term
+  from the alpha chunks, log-determinant from the packed factor's diagonal
+  tiles) — no re-factorization, exact for any n thanks to identity padding.
+* :func:`nlml_tiled` — the *trainable* tiled NLML (DESIGN.md §8): the fused
+  program with ``q_tiles=0`` (assembly → tiled Cholesky → both
+  substitutions) plus the quad/logdet heads.  Differentiable w.r.t.
+  ``(x, y, params)`` either through a blocked reverse-mode ``custom_vjp``
+  (default — one tiled triangular matrix solve + gram for K^{-1}, instead
+  of autodiff back through every wavefront launch) or by plain autodiff
+  through the program (``vjp="autodiff"``; Pallas tile ops carry reference
+  VJPs, see repro.kernels.ops).
+
+:func:`optimize_hyperparameters` runs Adam on either path as ONE jitted
+``lax.scan`` — the whole optimization is a single compiled program, not a
+Python loop that re-enters jit every step.  Hyperparameters live in
+unconstrained log-space (softplus).
 """
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Tuple
 
@@ -25,7 +40,7 @@ import jax.numpy as jnp
 
 from repro.core import cholesky as chol
 from repro.core import kernels_math as km
-from repro.core import triangular
+from repro.core import tiling, triangular
 
 
 def negative_log_marginal_likelihood(
@@ -66,17 +81,222 @@ def nlml_from_state(state, y: jax.Array, *, dtype=jnp.float32) -> jax.Array:
     return 0.5 * (quad + logdet + n * math.log(2.0 * math.pi))
 
 
+# ---------------------------------------------------------------------------
+# The trainable tiled NLML (DESIGN.md §8).
+#
+# Forward: the fused program with q_tiles=0 (scheduler.build_nlml_schedule)
+# — the NLML program IS the prediction program minus the test-point stages,
+# sharing its plan/jit caches.  Heads: quad = sum(yc * alpha) and logdet
+# from the factor's diagonal tiles.
+#
+# Backward (vjp="custom", default): blocked reverse-mode from the closed
+# form  dNLML/dK = 0.5 (K^{-1} - alpha alpha^T) =: S.  The O(n^3) piece is
+# K^{-1} = L^{-T} L^{-1}, computed with the *tiled* machinery (one matrix
+# forward solve on identity tiles + one tiled gram —
+# triangular.kinv_tiles_from_factor); the O(n^2) contractions with dK/dtheta
+# are dense:
+#
+#   dNLML/dl      = sum(S ∘ K_se ∘ D2) / (2 l^2)     (K_se = v exp(-D2/2l))
+#   dNLML/dv      = sum(S ∘ K_se) / v
+#   dNLML/dsigma2 = tr(S)
+#   dNLML/dy      = alpha
+#   dNLML/dx_i    = -(2/l) sum_j S_ij K_se_ij (x_i - x_j)
+#
+# Padding never enters: the padded block of K is a constant identity, so its
+# derivative is zero and everything is computed on the unpadded n×n region.
+# ---------------------------------------------------------------------------
+
+
+def _nlml_cfg(tile_size, n_streams, backend, update_dtype, dtype):
+    """Hashable static config for the custom-vjp / jit caches."""
+    return (int(tile_size), n_streams, backend, update_dtype, jnp.dtype(dtype).name)
+
+
+def _nlml_forward(cfg, x, y, params):
+    """Run the tiled NLML program; returns (value, residuals for the vjp)."""
+    from repro.core import predict as pred
+
+    tile_size, n_streams, backend, update_dtype, dtype_name = cfg
+    dtype = jnp.dtype(dtype_name)
+    n = y.shape[0]
+    env, yc = pred.nlml_program_env(
+        x,
+        y,
+        params,
+        tile_size,
+        n_streams=n_streams,
+        backend=backend,
+        update_dtype=update_dtype,
+        dtype=dtype,
+    )
+    quad = jnp.sum(yc * env["alpha"])
+    logdet = triangular.logdet_from_factor(env["packed"], env["alpha"].shape[0])
+    val = 0.5 * (quad + logdet + n * math.log(2.0 * math.pi))
+    return val, (env["packed"], env["alpha"])
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _nlml_tiled_cv(cfg, x, y, params):
+    val, _ = _nlml_forward(cfg, x, y, params)
+    return val
+
+
+def _nlml_cv_fwd(cfg, x, y, params):
+    val, (lpacked, alpha_c) = _nlml_forward(cfg, x, y, params)
+    return val, (x, y, params, lpacked, alpha_c)
+
+
+def _nlml_cv_bwd(cfg, res, ct):
+    _, n_streams, _, _, dtype_name = cfg
+    dtype = jnp.dtype(dtype_name)
+    x, y, params, lpacked, alpha_c = res
+    n = y.shape[0]
+    # O(n^3): K^{-1} through the tiled solve executor (blocked reverse-mode).
+    kinv_t = triangular.kinv_tiles_from_factor(lpacked, n_streams=n_streams)
+    kinv = tiling.untile_dense(kinv_t)[:n, :n]
+    alpha = alpha_c.reshape(-1)[:n]
+    s = 0.5 * (kinv - jnp.outer(alpha, alpha))
+    # O(n^2): contract S with the analytic kernel derivatives.
+    xd = x.astype(dtype)
+    l = jnp.asarray(params.lengthscale, dtype)
+    v = jnp.asarray(params.vertical, dtype)
+    d2 = km.sq_dists(xd, xd)
+    kse = v * jnp.exp(-0.5 / l * d2)
+    g = s * kse
+    g_l = jnp.sum(g * d2) / (2.0 * l * l)
+    g_v = jnp.sum(g) / v
+    g_noise = jnp.trace(s)
+    g_y = alpha
+    g_x = -(2.0 / l) * (jnp.sum(g, axis=1, keepdims=True) * xd - g @ xd)
+    ct = jnp.asarray(ct, dtype)
+    return (
+        ct * g_x,
+        ct * g_y,
+        km.SEKernelParams(ct * g_l, ct * g_v, ct * g_noise),
+    )
+
+
+_nlml_tiled_cv.defvjp(_nlml_cv_fwd, _nlml_cv_bwd)
+
+
+def nlml_tiled(
+    x: jax.Array,
+    y: jax.Array,
+    params: km.SEKernelParams,
+    *,
+    tile_size: int = 256,
+    n_streams=None,
+    op_backend: str = "jnp",
+    update_dtype=None,
+    dtype=jnp.float32,
+    vjp: str = "custom",
+) -> jax.Array:
+    """NLML through the tiled fused program — differentiable (DESIGN.md §8).
+
+    Value-equivalent to :func:`negative_log_marginal_likelihood` for any n
+    (identity padding).  ``vjp="custom"`` (default) installs the blocked
+    reverse-mode backward pass; ``vjp="autodiff"`` differentiates straight
+    through the program's wavefront launches (the jnp ops natively, the
+    Pallas tile ops via their reference VJPs) — kept as the correctness
+    baseline the custom rule is tested against.
+    """
+    x = jnp.asarray(x, dtype)
+    if x.ndim == 1:
+        x = x[:, None]
+    y = jnp.asarray(y, dtype).reshape(-1)
+    cfg = _nlml_cfg(tile_size, n_streams, op_backend, update_dtype, dtype)
+    if vjp == "custom":
+        return _nlml_tiled_cv(cfg, x, y, params)
+    if vjp == "autodiff":
+        val, _ = _nlml_forward(cfg, x, y, params)
+        return val
+    raise ValueError(f"vjp must be 'custom' or 'autodiff', got {vjp!r}")
+
+
+# ---------------------------------------------------------------------------
+# Unconstrained-space packing and the jitted lax.scan Adam optimizer.
+# ---------------------------------------------------------------------------
+
+
 def _unpack(raw: jax.Array) -> km.SEKernelParams:
     # softplus keeps hyperparameters positive; raw is in R^3
     sp = lambda z: jnp.logaddexp(z, 0.0)
     return km.SEKernelParams(lengthscale=sp(raw[0]), vertical=sp(raw[1]), noise=sp(raw[2]))
 
 
-def _pack(params: km.SEKernelParams) -> jax.Array:
-    inv_sp = lambda p: jnp.log(jnp.expm1(jnp.maximum(jnp.asarray(p, jnp.float32), 1e-6)))
-    return jnp.stack(
-        [inv_sp(params.lengthscale), inv_sp(params.vertical), inv_sp(params.noise)]
-    )
+def _pack(params: km.SEKernelParams, dtype=None) -> jax.Array:
+    """Inverse softplus into R^3.  ``dtype=None`` keeps the leaves' common
+    dtype (float64 params no longer silently round-trip through float32)."""
+    leaves = [
+        jnp.asarray(p) for p in (params.lengthscale, params.vertical, params.noise)
+    ]
+    if dtype is None:
+        dtype = jnp.result_type(*leaves)
+    inv_sp = lambda p: jnp.log(jnp.expm1(jnp.maximum(p.astype(dtype), 1e-6)))
+    return jnp.stack([inv_sp(p) for p in leaves])
+
+
+def nlml_loss_fn(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    method: str = "monolithic",
+    dtype=jnp.float32,
+    tile_size: int = 256,
+    n_streams=None,
+    op_backend: str = "jnp",
+    update_dtype=None,
+    vjp: str = "custom",
+):
+    """loss(raw) over unconstrained hyperparameters, for either NLML path."""
+    if method == "monolithic":
+        return lambda raw: negative_log_marginal_likelihood(
+            x, y, _unpack(raw), dtype=dtype
+        )
+    if method == "tiled":
+        return lambda raw: nlml_tiled(
+            x,
+            y,
+            _unpack(raw),
+            tile_size=tile_size,
+            n_streams=n_streams,
+            op_backend=op_backend,
+            update_dtype=update_dtype,
+            dtype=dtype,
+            vjp=vjp,
+        )
+    raise ValueError(f"method must be 'monolithic' or 'tiled', got {method!r}")
+
+
+def adam_scan(loss, steps: int, lr: float):
+    """The whole Adam run as ONE jitted ``lax.scan`` over optimizer steps.
+
+    Returns a compiled function ``raw0 -> (raw_final, losses)`` where
+    ``losses[t]`` is the loss *before* update t (``losses[0]`` is the loss
+    at the initial point, matching the old Python-loop semantics).  One
+    trace, one compile, zero per-step dispatch from Python — the paper's
+    "recurring O(n^3) cost per optimizer step" runs entirely on device.
+    """
+    vg = jax.value_and_grad(loss)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def step(carry, t):
+        raw, m, v = carry
+        val, g = vg(raw)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1**t)
+        vhat = v / (1 - b2**t)
+        raw = raw - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return (raw, m, v), val
+
+    def run(raw0):
+        z = jnp.zeros_like(raw0)
+        ts = jnp.arange(1, steps + 1, dtype=raw0.dtype)
+        (raw, _, _), losses = jax.lax.scan(step, (raw0, z, z), ts)
+        return raw, losses
+
+    return jax.jit(run)
 
 
 def optimize_hyperparameters(
@@ -87,30 +307,34 @@ def optimize_hyperparameters(
     steps: int = 100,
     lr: float = 0.05,
     dtype=jnp.float32,
+    method: str = "monolithic",
+    tile_size: int = 256,
+    n_streams=None,
+    op_backend: str = "jnp",
+    update_dtype=None,
+    vjp: str = "custom",
 ) -> Tuple[km.SEKernelParams, jax.Array]:
-    """Adam on the NLML in unconstrained space.  Returns (params, loss curve)."""
+    """Adam on the NLML in unconstrained space.  Returns (params, loss curve).
 
-    def loss(raw):
-        return negative_log_marginal_likelihood(x, y, _unpack(raw), dtype=dtype)
-
-    grad_fn = jax.jit(jax.value_and_grad(loss))
-    raw = _pack(init)
-    m = jnp.zeros_like(raw)
-    v = jnp.zeros_like(raw)
-    b1, b2, eps = 0.9, 0.999, 1e-8
-    losses = []
-
-    @jax.jit
-    def update(raw, m, v, t):
-        val, g = grad_fn(raw)
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * g * g
-        mhat = m / (1 - b1**t)
-        vhat = v / (1 - b2**t)
-        raw = raw - lr * mhat / (jnp.sqrt(vhat) + eps)
-        return raw, m, v, val
-
-    for t in range(1, steps + 1):
-        raw, m, v, val = update(raw, m, v, jnp.asarray(t, jnp.float32))
-        losses.append(val)
-    return _unpack(raw), jnp.stack(losses)
+    ``method="monolithic"`` differentiates the dense reference NLML;
+    ``method="tiled"`` trains through the tiled fused program
+    (:func:`nlml_tiled` — no monolithic Cholesky anywhere in the loop).
+    Either way the optimizer is one jitted ``lax.scan`` (:func:`adam_scan`).
+    """
+    x = jnp.asarray(x, dtype)
+    if x.ndim == 1:
+        x = x[:, None]
+    y = jnp.asarray(y, dtype).reshape(-1)
+    loss = nlml_loss_fn(
+        x,
+        y,
+        method=method,
+        dtype=dtype,
+        tile_size=tile_size,
+        n_streams=n_streams,
+        op_backend=op_backend,
+        update_dtype=update_dtype,
+        vjp=vjp,
+    )
+    raw, losses = adam_scan(loss, steps, lr)(_pack(init, dtype=dtype))
+    return _unpack(raw), losses

@@ -336,6 +336,39 @@ def predict_fused(
     return result, state
 
 
+def nlml_program_env(
+    x_train: jax.Array,
+    y_train: jax.Array,
+    params: km.SEKernelParams,
+    m: int,
+    *,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    update_dtype=None,
+    dtype=jnp.float32,
+):
+    """Run the NLML prefix of the fused program (DESIGN.md §8).
+
+    ``q_tiles=0`` reduces the whole-pipeline DAG to assembly → factorization
+    → both substitutions; the returned buffer environment's ``packed`` slice
+    is the factor (log-determinant head) and ``alpha`` the weight chunks
+    (quadratic-term head).  Shares the jit/plan caches with
+    :func:`predict_fused` — the NLML program *is* the prediction program with
+    zero test tiles.  Returns ``(env, yc)`` with ``yc`` the padded target
+    chunks (the quadratic term is ``sum(yc * env['alpha'])``).
+
+    Fully traceable under ``jax.grad``: jnp ops differentiate natively and
+    the Pallas tile ops carry reference VJPs; assembly falls back to the jnp
+    tile kernel when the hyperparameters are traced (executor._cov_batch_fn).
+    """
+    n = x_train.shape[0]
+    xc = pad_features(x_train.astype(dtype), m)
+    yc = pad_vector(y_train.astype(dtype), m)
+    xtc = jnp.zeros((0, m, xc.shape[-1]), dtype)
+    fn = _fused_program_fn(False, n_streams, backend, update_dtype, n, 0)
+    return fn(xc, yc, xtc, params), yc
+
+
 def predict(
     x_train: jax.Array,
     y_train: jax.Array,

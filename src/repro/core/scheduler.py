@@ -389,6 +389,20 @@ def build_program_schedule(
     )
 
 
+def build_nlml_schedule(m_tiles: int) -> Schedule:
+    """The trainable NLML prefix of the prediction program (DESIGN.md §8).
+
+    ``q_tiles=0`` degenerates the program DAG to exactly the tasks the
+    negative log marginal likelihood needs — ASSEMBLE, the factorization,
+    and both substitutions (``alpha = K^{-1} y`` for the quadratic term; the
+    log-determinant reads the factor's diagonal tiles, which is a reduction
+    head in the executor, not a scheduled task).  No CROSS/PRIOR tiles, no
+    prediction heads.  This is the forward program that
+    :func:`repro.core.mll.nlml_tiled` differentiates.
+    """
+    return build_program_schedule(m_tiles, 0, uncertainty=False)
+
+
 def task_deps(task: Task, schedule: Schedule) -> List[Task]:
     """Dependencies of ``task`` under the DAG family of ``schedule.kind``."""
     if schedule.kind == "cholesky":

@@ -99,6 +99,33 @@ def tiled_gram(v_tiles: jax.Array) -> jax.Array:
     return jnp.einsum("ipab,iqac->pqbc", v_tiles, v_tiles)
 
 
+def identity_tiles(m_tiles: int, m: int, dtype=jnp.float32) -> jax.Array:
+    """Identity matrix as an (M, M, m, m) tile grid (matrix-solve RHS layout)."""
+    eye = jnp.eye(m, dtype=dtype)
+    block_diag = jnp.eye(m_tiles, dtype=dtype)[:, :, None, None]
+    return block_diag * eye[None, None]
+
+
+def kinv_tiles_from_factor(
+    lpacked: jax.Array, *, n_streams: Optional[int] = None
+) -> jax.Array:
+    """K^{-1} tile grid (M, M, m, m) from the packed Cholesky factor.
+
+    Blocked reverse-mode building block (DESIGN.md §8): solve ``L Z = I``
+    through the tiled matrix-solve executor (Z = L^{-1} as tile rows), then
+    ``K^{-1} = Z^T Z`` via the tiled gram.  O(n^3) like the factorization
+    itself — one triangular matrix solve + one gram, instead of autodiff
+    back through every wavefront launch.  Identity padding makes the padded
+    diagonal block of K^{-1} identity, which callers slice away.
+    """
+    m_tiles = executor.m_tiles_of_packed(lpacked)
+    m = lpacked.shape[-1]
+    z = forward_substitution_matrix(
+        lpacked, identity_tiles(m_tiles, m, lpacked.dtype), n_streams=n_streams
+    )
+    return tiled_gram(z)
+
+
 def logdet_from_factor(lpacked: jax.Array, m_tiles: int, n_valid: Optional[int] = None) -> jax.Array:
     """log det K = 2 sum_i log diag(L)_i from the packed factor.
 

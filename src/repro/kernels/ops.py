@@ -8,6 +8,18 @@ the batched entry points and the covariance-assembly routines used by
 ``interpret=True`` is selected automatically off-TPU: the kernel bodies
 execute in Python on CPU, which is how this container validates them; on a
 real TPU the same `pallas_call`s lower through Mosaic.
+
+Differentiability (DESIGN.md §8): the per-tile ops carry ``jax.custom_vjp``
+hooks whose backward passes differentiate the *jnp reference* implementation
+of the same tile op (``jnp.linalg.cholesky`` / ``triangular_solve`` / the
+rank-update matmuls).  The Pallas kernel is only the forward primal, so the
+tiled NLML program stays traceable under ``jax.grad`` with
+``op_backend="pallas"`` — gradients are mathematically identical to the jnp
+backend because both backends compute the same function.  Covariance
+*assembly* still bakes hyperparameters in as compile-time constants; when
+the hyperparameters are traced (a gradient trace) the executor falls back to
+the differentiable jnp assembly tile automatically
+(``repro.core.executor._cov_batch_fn``).
 """
 
 from __future__ import annotations
@@ -34,38 +46,103 @@ def _interpret() -> bool:
 # ---------------------------------------------------------------------------
 
 
-def potrf(a: jax.Array) -> jax.Array:
-    return _potrf.potrf(a, interpret=_interpret())
-
-
-def trsm(ljj: jax.Array, b: jax.Array) -> jax.Array:
-    return _trsm.trsm(ljj, b, interpret=_interpret())
-
-
 def _cast(x, dt):
     return x if dt is None else x.astype(dt)
 
 
+# jnp reference tile ops used for the custom-VJP backward passes.  Both
+# backends compute the same mathematical function per tile, so the reference
+# VJP is the exact gradient of the Pallas forward.
+
+def _potrf_ref(a):
+    return jnp.linalg.cholesky(a)
+
+
+def _trsm_ref(ljj, b):
+    return jax.lax.linalg.triangular_solve(
+        ljj, b, left_side=False, lower=True, transpose_a=True
+    )
+
+
+def _syrk_ref(update_dtype):
+    def f(kii, lij):
+        a = _cast(lij, update_dtype)
+        return kii - (a @ a.T).astype(kii.dtype)
+
+    return f
+
+
+def _gemm_ref(update_dtype):
+    def f(kik, lij, lkj):
+        a, b = _cast(lij, update_dtype), _cast(lkj, update_dtype)
+        return kik - (a @ b.T).astype(kik.dtype)
+
+    return f
+
+
+def _with_ref_vjp(primal, ref):
+    """Wrap a Pallas tile op so its VJP differentiates the jnp reference."""
+    f = jax.custom_vjp(primal)
+
+    def fwd(*args):
+        return primal(*args), args
+
+    def bwd(args, g):
+        _, vjp = jax.vjp(ref, *args)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _potrf_impl(a: jax.Array) -> jax.Array:
+    return _potrf.potrf(a, interpret=_interpret())
+
+
+def _trsm_impl(ljj: jax.Array, b: jax.Array) -> jax.Array:
+    return _trsm.trsm(ljj, b, interpret=_interpret())
+
+
+potrf = _with_ref_vjp(_potrf_impl, _potrf_ref)
+trsm = _with_ref_vjp(_trsm_impl, _trsm_ref)
+
+
+@functools.lru_cache(maxsize=None)
+def _syrk_cv(update_dtype):
+    def impl(kii, lij):
+        out = _trail.trailing_update(
+            kii[None],
+            _cast(lij, update_dtype)[None],
+            _cast(lij, update_dtype)[None],
+            block=_pick_block(kii.shape[-1]),
+            interpret=_interpret(),
+        )[0]
+        return out.astype(kii.dtype)
+
+    return _with_ref_vjp(impl, _syrk_ref(update_dtype))
+
+
+@functools.lru_cache(maxsize=None)
+def _gemm_cv(update_dtype):
+    def impl(kik, lij, lkj):
+        out = _trail.trailing_update(
+            kik[None],
+            _cast(lij, update_dtype)[None],
+            _cast(lkj, update_dtype)[None],
+            block=_pick_block(kik.shape[-1]),
+            interpret=_interpret(),
+        )[0]
+        return out.astype(kik.dtype)
+
+    return _with_ref_vjp(impl, _gemm_ref(update_dtype))
+
+
 def syrk(kii: jax.Array, lij: jax.Array, update_dtype=None) -> jax.Array:
-    out = _trail.trailing_update(
-        kii[None],
-        _cast(lij, update_dtype)[None],
-        _cast(lij, update_dtype)[None],
-        block=_pick_block(kii.shape[-1]),
-        interpret=_interpret(),
-    )[0]
-    return out.astype(kii.dtype)
+    return _syrk_cv(update_dtype)(kii, lij)
 
 
 def gemm(kik: jax.Array, lij: jax.Array, lkj: jax.Array, update_dtype=None) -> jax.Array:
-    out = _trail.trailing_update(
-        kik[None],
-        _cast(lij, update_dtype)[None],
-        _cast(lkj, update_dtype)[None],
-        block=_pick_block(kik.shape[-1]),
-        interpret=_interpret(),
-    )[0]
-    return out.astype(kik.dtype)
+    return _gemm_cv(update_dtype)(kik, lij, lkj)
 
 
 def _pick_block(m: int) -> int:

@@ -158,6 +158,37 @@ def test_gp_fused_cold_equals_staged_cold(rng):
     np.testing.assert_allclose(np.asarray(var_f), np.asarray(var_s), rtol=1e-4, atol=1e-5)
 
 
+def test_gp_log_marginal_likelihood_uses_tiled_path(rng, monkeypatch):
+    """Regression: log_marginal_likelihood() always ran the monolithic path
+    even for pipeline="tiled", inconsistent with nlml().  It must now be
+    -nlml() off the cached tiled posterior — zero monolithic Choleskys."""
+    from repro.core import cholesky as chol
+    from repro.core import mll
+
+    n, d = 48, 2
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    gp = GaussianProcess(x, y, tile_size=16)
+    expected = -float(gp.nlml())  # populates the posterior cache
+    calls = {"n": 0}
+    orig = chol.monolithic_cholesky
+
+    def wrapped(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(chol, "monolithic_cholesky", wrapped)
+    lml = float(gp.log_marginal_likelihood())
+    assert calls["n"] == 0, "tiled log_marginal_likelihood ran a monolithic Cholesky"
+    assert lml == pytest.approx(expected, rel=1e-6)
+    # monolithic pipeline still computes the true monolithic -NLML
+    gp_m = GaussianProcess(x, y, pipeline="monolithic")
+    ref = float(
+        mll.negative_log_marginal_likelihood(jnp.asarray(x), jnp.asarray(y), gp_m.params)
+    )
+    assert float(gp_m.log_marginal_likelihood()) == pytest.approx(-ref, rel=1e-6)
+
+
 def test_mll_optimization_improves(rng):
     from repro.core import mll
 

@@ -211,3 +211,46 @@ def test_solve_plan_order_respects_deps(lower, n_streams):
     for t, i in pos.items():
         for d in sch.solve_deps(t, m, lower=lower):
             assert pos[d] < i, (t, d)
+
+
+# ---------------------------------------------------------------------------
+# The trainable NLML prefix (q_tiles=0 program, DESIGN.md §8).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [1, 4, 6])
+def test_nlml_schedule_is_program_prefix(m):
+    """q_tiles=0 drops exactly the test-point stages: no CROSS/PRIOR tiles,
+    no prediction heads — just assembly, factorization and both solves."""
+    s = sch.build_nlml_schedule(m)
+    counts = {}
+    for lvl in s.levels:
+        for t in lvl:
+            counts[t[0]] = counts.get(t[0], 0) + 1
+    for op in (sch.CROSS, sch.PRIOR, sch.XGEMV, sch.VINIT, sch.VTRSV, sch.VGEMV, sch.GRAM):
+        assert op not in counts, op
+    solve = m + m * (m - 1) // 2
+    assert counts[sch.ASSEMBLE] == m * (m + 1) // 2
+    assert counts[sch.TRSV] == counts[sch.TRSV_B] == m
+    assert s.n_tasks == (
+        m * (m + 1) // 2
+        + sum(sch.theoretical_task_counts(m).values())
+        + 2 * solve
+    )
+    # dependency-faithful leveling
+    level_of = {t: i for i, lvl in enumerate(s.levels) for t in lvl}
+    for t, lv in level_of.items():
+        for d in sch.program_deps(t, m, 0):
+            assert level_of[d] < lv, (t, d)
+
+
+@pytest.mark.parametrize("n_streams", [1, 3])
+def test_nlml_wavefront_schedule(n_streams):
+    """The finite-pool wavefront handles the q_tiles=0 program too."""
+    m = 5
+    s = sch.build_wavefront_schedule(m, n_streams, kind="program", q_tiles=0)
+    assert s.n_tasks == sch.build_nlml_schedule(m).n_tasks
+    level_of = {t: i for i, lvl in enumerate(s.levels) for t in lvl}
+    for t, lv in level_of.items():
+        for d in sch.program_deps(t, m, 0):
+            assert level_of[d] < lv, (t, d)
