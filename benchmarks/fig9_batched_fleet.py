@@ -1,0 +1,72 @@
+"""Fig. 9 (ours): batched multi-GP throughput vs a Python loop of single GPs.
+
+The paper's wavefront width limits utilization for small n — one GP per
+launch underfills every executor batch.  Batching B independent problems
+through ONE fused program (DESIGN.md §9) multiplies every batch width by B
+without changing the DAG.  This figure sweeps B at fixed n and reports
+end-to-end problems/second for:
+
+* ``batched``  — one problem-batched fused program (GPBatch cold path),
+* ``loop``     — the same B problems as a Python loop over the
+  single-problem fused program (same jit cache, B dispatches),
+
+plus the two Pallas/tile batch-dispatch strategies (``flat`` folds B into
+the kernel's batch/grid axis, ``vmap`` nests one more vmap level) so the
+tradeoff the tentpole calls out is measured, not guessed.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import bench, row
+from repro.core import predict as pred
+from repro.core.kernels_math import SEKernelParams
+
+
+def run(n=256, bs=(1, 2, 4, 8), d=8, out=print, backend="jnp"):
+    rng = np.random.default_rng(0)
+    params = SEKernelParams.paper_defaults()
+    m = max(n // 8, 16)
+    nh = max(n // 4, 8)
+    results = []
+    for b in bs:
+        x = jnp.asarray(rng.standard_normal((b, n, d)).astype(np.float32))
+        y = jnp.asarray(rng.standard_normal((b, n)).astype(np.float32))
+        xt = jnp.asarray(rng.standard_normal((b, nh, d)).astype(np.float32))
+
+        def loop(x, y, xt):
+            return [
+                pred.predict_fused(x[i], y[i], xt[i], params, m, backend=backend)
+                for i in range(b)
+            ]
+
+        t_loop, _ = bench(loop, x, y, xt)
+        out(row(f"fig9/loop/B{b}/n{n}", t_loop, f"problems_per_s={b / t_loop:.1f}"))
+
+        for mode in ("flat", "vmap"):
+            fn = lambda x, y, xt, mode=mode: pred.predict_fused_batched(
+                x, y, xt, params, m, backend=backend, batch_dispatch=mode
+            )
+            t_b, _ = bench(fn, x, y, xt)
+            out(row(
+                f"fig9/batched_{mode}/B{b}/n{n}",
+                t_b,
+                f"problems_per_s={b / t_b:.1f} speedup_vs_loop={t_loop / t_b:.3f}",
+            ))
+            results.append({
+                "B": b,
+                "n": n,
+                "m": m,
+                "dispatch": mode,
+                "us_batched": t_b * 1e6,
+                "us_loop": t_loop * 1e6,
+                "speedup_vs_loop": t_loop / t_b,
+            })
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -130,6 +130,7 @@ def main() -> None:
         fig6_cholesky_scaling,
         fig7_predict_scaling,
         fig8_train_scaling,
+        fig9_batched_fleet,
         mem_tiles,
     )
 
@@ -140,6 +141,7 @@ def main() -> None:
         fig5_schedule_trace.run(m_tiles=8, out=col.out("fig5"))
         fig6_cholesky_scaling.run(sizes=(128,), out=col.out("fig6"))
         fig8_train_scaling.run(sizes=(64,), out=col.out("fig8"))
+        fleet = fig9_batched_fleet.run(n=128, bs=(1, 4), out=col.out("fig9"))
         mem_tiles.run(n=256, out=col.out("mem"))
         pipeline = _fused_vs_staged(128, col.out("pipeline"))
         counts = _executor_counts(tile_counts=(8,))
@@ -154,6 +156,8 @@ def main() -> None:
         fig7_predict_scaling.run(sizes=psizes, out=col.out("fig7"))
         tsizes = (128, 256) if args.quick else (128, 256, 512, 1024, 2048)
         fig8_train_scaling.run(sizes=tsizes, out=col.out("fig8"))
+        fbs = (1, 2, 4) if args.quick else (1, 2, 4, 8, 16)
+        fleet = fig9_batched_fleet.run(n=min(n, 256), bs=fbs, out=col.out("fig9"))
         mem_tiles.run(n=n, out=col.out("mem"))
         pipeline = _fused_vs_staged(min(n, 512), col.out("pipeline"))
         counts = _executor_counts()
@@ -163,6 +167,7 @@ def main() -> None:
             "figures": col.figures,
             "executor_batches": counts,
             "fused_vs_staged": pipeline,
+            "batched_fleet": fleet,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

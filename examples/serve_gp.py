@@ -4,21 +4,103 @@ The paper's workload is inference (predict + uncertainty); the serving shape
 is: a trained GP (assembled + factored covariance, device-resident) answering
 batches of prediction requests at low latency.
 
+Built on the fused-program `GaussianProcess` API (DESIGN.md §7): the offline
+phase is one cold fused predict (ONE multi-stage program that also populates
+the posterior cache), and the online loop is a jitted warm tail
+(`predict_from_state` — cross covariance + mean off the cached factor).
+
+``--fleet B`` serves B independent GPs through `GPBatch` (DESIGN.md §9):
+one problem-batched program factors the whole fleet, and each online batch
+answers B × batch requests in a single launch sequence — compare its
+req/s against the single-GP numbers to see the wavefront-width win.
+
     PYTHONPATH=src python examples/serve_gp.py [--n 4096] [--batches 32]
+    PYTHONPATH=src python examples/serve_gp.py --fleet 8 --n 512
 """
 
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cholesky as chol
+from repro.core import GaussianProcess, GPBatch
 from repro.core import predict as pred
-from repro.core import triangular
-from repro.core.kernels_math import SEKernelParams
 from repro.data.msd import MSDConfig, make_dataset, nfir_features, simulate
+
+
+def request_batches(cfg, batch, batches, seed0=100):
+    """Fresh NFIR feature batches simulating online prediction requests."""
+    for i in range(batches):
+        u, y = simulate(batch + cfg.n_regressors - 1, cfg, seed=seed0 + i)
+        xt, _ = nfir_features(u, y, cfg.n_regressors)
+        yield xt.astype(np.float32)
+
+
+def report(label, lat, requests):
+    lat = np.asarray(lat[1:]) * 1e3  # drop the jit-compile batch
+    print(
+        f"{label}: p50={np.percentile(lat, 50):.2f}ms "
+        f"p99={np.percentile(lat, 99):.2f}ms "
+        f"({requests / np.median(lat) * 1e3:.0f} req/s)"
+    )
+
+
+def serve_single(args, cfg):
+    x_tr, y_tr, _, _ = make_dataset(args.n, 1, cfg, seed=0)
+
+    # ---- offline: ONE cold fused predict factors + caches the posterior ---
+    t0 = time.perf_counter()
+    gp = GaussianProcess(x_tr, y_tr, tile_size=args.tile)
+    warm_probe = next(request_batches(cfg, args.batch, 1))
+    jax.block_until_ready(gp.predict(warm_probe))
+    print(f"fused factor+cache (offline): {time.perf_counter() - t0:.2f}s for n={args.n}")
+
+    # ---- online: jitted warm tail off the cached PosteriorState -----------
+    state = gp.posterior()
+    serve = jax.jit(lambda xt: pred.predict_from_state(state, xt))
+    lat = []
+    for xt in request_batches(cfg, args.batch, args.batches):
+        t0 = time.perf_counter()
+        jax.block_until_ready(serve(xt))
+        lat.append(time.perf_counter() - t0)
+    report(f"served {args.batches} batches x {args.batch} requests", lat, args.batch)
+
+
+def serve_fleet(args, cfg):
+    b = args.fleet
+    xs, ys = [], []
+    for i in range(b):
+        x_tr, y_tr, _, _ = make_dataset(args.n, 1, cfg, seed=i)
+        xs.append(x_tr)
+        ys.append(y_tr)
+    x_stack = np.stack(xs)
+    y_stack = np.stack(ys)
+
+    # ---- offline: ONE problem-batched program factors the whole fleet -----
+    t0 = time.perf_counter()
+    fleet = GPBatch(x_stack, y_stack, tile_size=args.tile)
+    warm_probe = next(request_batches(cfg, args.batch, 1))
+    jax.block_until_ready(fleet.predict(warm_probe))  # shared block broadcast
+    print(
+        f"fleet fused factor+cache (offline): {time.perf_counter() - t0:.2f}s "
+        f"for B={b} x n={args.n}"
+    )
+
+    # ---- online: every request batch is answered for ALL B GPs at once ----
+    state = fleet.posterior()
+    serve = jax.jit(lambda xt: pred.predict_from_state_batched(state, xt))
+    lat = []
+    for xt in request_batches(cfg, args.batch, args.batches):
+        stacked = np.broadcast_to(xt, (b,) + xt.shape)
+        t0 = time.perf_counter()
+        jax.block_until_ready(serve(stacked))
+        lat.append(time.perf_counter() - t0)
+    report(
+        f"served {args.batches} batches x {args.batch} requests x B={b} GPs",
+        lat,
+        args.batch * b,
+    )
 
 
 def main():
@@ -27,45 +109,20 @@ def main():
     ap.add_argument("--tile", type=int, default=512)
     ap.add_argument("--batch", type=int, default=256, help="requests per batch")
     ap.add_argument("--batches", type=int, default=32)
+    ap.add_argument(
+        "--fleet",
+        type=int,
+        default=0,
+        metavar="B",
+        help="serve B independent GPs through one GPBatch program",
+    )
     args = ap.parse_args()
 
     cfg = MSDConfig()
-    x_tr, y_tr, _, _ = make_dataset(args.n, 1, cfg, seed=0)
-    params = SEKernelParams.paper_defaults()
-    m = args.tile
-
-    # ---- offline: assemble + factor once (the expensive O(n^3) part) ------
-    t0 = time.perf_counter()
-    xc = pred.pad_features(jnp.asarray(x_tr), m)
-    yc = pred.pad_vector(jnp.asarray(y_tr), m)
-    factor = jax.jit(lambda xc: pred.assemble_packed_covariance(xc, params, args.n))
-    lp = jax.jit(chol.tiled_cholesky)(factor(xc))
-    beta = triangular.forward_substitution(lp, yc)
-    alpha = jax.block_until_ready(triangular.backward_substitution(lp, beta))
-    print(f"factor+solve (offline): {time.perf_counter() - t0:.2f}s for n={args.n}")
-
-    # ---- online: serve batches of requests --------------------------------
-    @jax.jit
-    def serve(xt_batch, alpha):
-        xtc = pred.pad_features(xt_batch, m)
-        kstar = pred.assemble_cross_tiles(xtc, xc, params, xt_batch.shape[0], args.n)
-        return triangular.tiled_matvec(kstar, alpha).reshape(-1)[: xt_batch.shape[0]]
-
-    rng = np.random.default_rng(1)
-    lat = []
-    for i in range(args.batches):
-        u, y = simulate(args.batch + cfg.n_regressors - 1, cfg, seed=100 + i)
-        xt, _ = nfir_features(u, y, cfg.n_regressors)
-        xt = jnp.asarray(xt.astype(np.float32))
-        t0 = time.perf_counter()
-        out = jax.block_until_ready(serve(xt, alpha))
-        lat.append(time.perf_counter() - t0)
-    lat = np.asarray(lat[1:]) * 1e3  # drop jit batch
-    print(
-        f"served {args.batches} batches × {args.batch} requests: "
-        f"p50={np.percentile(lat, 50):.2f}ms p99={np.percentile(lat, 99):.2f}ms "
-        f"({args.batch / np.median(lat) * 1e3:.0f} req/s)"
-    )
+    if args.fleet > 0:
+        serve_fleet(args, cfg)
+    else:
+        serve_single(args, cfg)
 
 
 if __name__ == "__main__":

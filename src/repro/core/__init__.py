@@ -1,6 +1,6 @@
 """Core: the paper's contribution — tiled, device-resident GP regression."""
 
-from repro.core.gp import GaussianProcess
+from repro.core.gp import GaussianProcess, GPBatch
 from repro.core.kernels_math import SEKernelParams
 
-__all__ = ["GaussianProcess", "SEKernelParams"]
+__all__ = ["GaussianProcess", "GPBatch", "SEKernelParams"]

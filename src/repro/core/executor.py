@@ -24,6 +24,18 @@ pool.  ``n_streams=1`` is the fully sequential single-stream baseline.
 Plans (the gather/scatter index arrays per level) are pure functions of
 ``(m_tiles, n_streams)`` and are lru-cached, so repeated traces pay no
 schedule-construction cost.  See DESIGN.md §3.
+
+**Problem batching (DESIGN.md §9).**  Every buffer may carry an optional
+leading problem-batch dimension ``B`` — ``B`` independent GPs of identical
+tile geometry executed by the *same* Plan (the DAG depends only on
+``m_tiles``/``q_tiles``, never on ``B``, so plans stay shared and
+lru-cached).  Gathers/scatters move from axis 0 to axis 1 and every batched
+kernel launch covers ``B x G`` tiles instead of ``G``: either flattened into
+the kernel's existing batch/grid axis (``batch_dispatch="flat"``, the
+default — one launch whose Pallas grid absorbs B) or via one more
+``jax.vmap`` level over the single-problem kernels
+(``batch_dispatch="vmap"``).  ``benchmarks/fig9_batched_fleet.py`` measures
+both.
 """
 
 from __future__ import annotations
@@ -221,12 +233,57 @@ def solve_plan(
 
 
 def m_tiles_of_packed(packed: jax.Array) -> int:
-    """Tile count M of a packed (T, m, m) store, validating T = M(M+1)/2."""
-    t = packed.shape[0]
+    """Tile count M of a packed (..., T, m, m) store, validating T = M(M+1)/2."""
+    t = packed.shape[-3]
     m_tiles = int((np.sqrt(8 * t + 1) - 1) // 2)
     if tiling.num_packed_tiles(m_tiles) != t:
         raise ValueError(f"{t} is not a triangular number of tiles")
     return m_tiles
+
+
+def _env_ops(batched: bool):
+    """(take, put, add) buffer accessors for unbatched / problem-batched envs.
+
+    Unbatched buffers gather/scatter on axis 0; batched buffers carry the
+    problem axis B first and gather/scatter on axis 1 — same index arrays,
+    same Plan.
+    """
+    if batched:
+        return (
+            lambda buf, idx: buf[:, idx],
+            lambda buf, idx, val: buf.at[:, idx].set(val),
+            lambda buf, idx, val: buf.at[:, idx].add(val),
+        )
+    return (
+        lambda buf, idx: buf[idx],
+        lambda buf, idx, val: buf.at[idx].set(val),
+        lambda buf, idx, val: buf.at[idx].add(val),
+    )
+
+
+def _tile_dispatch(fn, batched: bool, mode: str = "flat"):
+    """Lift a per-tile op to a (possibly problem-batched) batched launch.
+
+    Unbatched: one ``jax.vmap`` over the gathered G tiles, as before.
+    Batched (operands (B, G, ...)): ``mode="flat"`` reshapes to (B*G, ...)
+    so the ONE launch's existing batch axis — the Pallas grid — absorbs B;
+    ``mode="vmap"`` nests a second ``jax.vmap`` over the problem axis
+    instead.  Both produce (B, G, ...) results; fig9 benchmarks the two.
+    """
+    f = jax.vmap(fn)
+    if not batched:
+        return f
+    if mode == "vmap":
+        return jax.vmap(f)
+    if mode != "flat":
+        raise ValueError(f"batch_dispatch must be 'flat' or 'vmap', got {mode!r}")
+
+    def flat(*arrays):
+        b, g = arrays[0].shape[:2]
+        out = f(*[a.reshape((b * g,) + a.shape[2:]) for a in arrays])
+        return out.reshape((b, g) + out.shape[1:])
+
+    return flat
 
 
 def run_cholesky(
@@ -235,6 +292,7 @@ def run_cholesky(
     n_streams: Optional[int] = None,
     backend: str = "jnp",
     update_dtype=None,
+    batch_dispatch: str = "flat",
 ) -> jax.Array:
     """Factor a packed store K -> L by walking the level schedule.
 
@@ -242,37 +300,57 @@ def run_cholesky(
     a level are mutually independent (ASAP antichain), so batches may contain
     tasks of *different* columns — the cross-column overlap that the paper
     obtains from HPX dataflow over the stream pool.
+
+    packed: (T, m, m), or (B, T, m, m) for B independent problems driven by
+    the same lru-cached Plan (every launch then covers B x chunk tiles).
     """
+    batched = packed.ndim == 4
+    take, put, _ = _env_ops(batched)
     plan = cholesky_plan(m_tiles_of_packed(packed), n_streams)
     potrf, trsm, syrk, gemm = get_ops(backend)
-    potrf_b = jax.vmap(potrf)
-    trsm_b = jax.vmap(trsm)
-    syrk_b = jax.vmap(functools.partial(syrk, update_dtype=update_dtype))
-    gemm_b = jax.vmap(functools.partial(gemm, update_dtype=update_dtype))
+    potrf_b = _tile_dispatch(potrf, batched, batch_dispatch)
+    trsm_b = _tile_dispatch(trsm, batched, batch_dispatch)
+    syrk_b = _tile_dispatch(
+        functools.partial(syrk, update_dtype=update_dtype), batched, batch_dispatch
+    )
+    gemm_b = _tile_dispatch(
+        functools.partial(gemm, update_dtype=update_dtype), batched, batch_dispatch
+    )
     for level in plan.levels:
         for bt in level:
             if bt.op == sch.POTRF:
-                packed = packed.at[bt.out].set(potrf_b(packed[bt.a]))
+                packed = put(packed, bt.out, potrf_b(take(packed, bt.a)))
             elif bt.op == sch.TRSM:
-                packed = packed.at[bt.out].set(trsm_b(packed[bt.a], packed[bt.b]))
+                packed = put(
+                    packed, bt.out, trsm_b(take(packed, bt.a), take(packed, bt.b))
+                )
             elif bt.op == sch.SYRK:
-                packed = packed.at[bt.out].set(syrk_b(packed[bt.a], packed[bt.b]))
+                packed = put(
+                    packed, bt.out, syrk_b(take(packed, bt.a), take(packed, bt.b))
+                )
             else:
-                packed = packed.at[bt.out].set(
-                    gemm_b(packed[bt.a], packed[bt.b], packed[bt.c])
+                packed = put(
+                    packed,
+                    bt.out,
+                    gemm_b(take(packed, bt.a), take(packed, bt.b), take(packed, bt.c)),
                 )
     return packed
 
 
 def _trsv_batch(lii: jax.Array, x: jax.Array, transpose: bool) -> jax.Array:
-    """Batched diagonal-tile solve.  lii (G,m,m); x (G,m) or (G,Q,m,mq)."""
-    if x.ndim == 2:  # vector rhs chunks
+    """Batched diagonal-tile solve.
+
+    lii (..., G, m, m); x (..., G, m) vector chunks or (..., G, Q, m, mq)
+    matrix tile-rows, where ``...`` is the optional problem-batch axis —
+    ``triangular_solve`` broadcasts over all leading axes.
+    """
+    if x.ndim == lii.ndim - 1:  # vector rhs chunks
         sol = jax.lax.linalg.triangular_solve(
             lii, x[..., None], left_side=True, lower=True, transpose_a=transpose
         )
         return sol[..., 0]
     liiq = jnp.broadcast_to(
-        lii[:, None], (lii.shape[0], x.shape[1]) + lii.shape[1:]
+        lii[..., None, :, :], x.shape[:-2] + lii.shape[-2:]
     )
     return jax.lax.linalg.triangular_solve(
         liiq, x, left_side=True, lower=True, transpose_a=transpose
@@ -482,6 +560,54 @@ def _cov_batch_fn(backend: str, params, nvr: int, nvc: int, symmetric: bool):
     return jnp_fn
 
 
+def _params_per_problem(params) -> bool:
+    """True iff the hyperparameter leaves carry a problem-batch axis (B,)."""
+    return any(
+        jnp.ndim(leaf) > 0
+        for leaf in (params.lengthscale, params.vertical, params.noise)
+    )
+
+
+def _cov_batch_fn_batched(backend: str, params, nvr: int, nvc: int, symmetric: bool):
+    """Problem-batched assembly: (B,G,m,D) x (B,G,m,D) -> (B,G,m,m).
+
+    Shared hyperparameters (scalar leaves) flatten B into the single
+    launch's batch axis and reuse :func:`_cov_batch_fn` (Pallas grid absorbs
+    B).  Per-problem hyperparameters (leaves of shape (B,)) vmap the jnp
+    tile kernel over the problem axis — the Pallas assembly kernel bakes
+    hyperparameters in as compile-time constants, so it cannot vary them
+    across the batch; assembly is O(n^2), cheap next to the tile BLAS.
+    """
+    if _params_per_problem(params):
+        from repro.core import kernels_math as km
+
+        def per_problem(xa, xb, row0, col0):
+            # mixed scalar/(B,) leaves are legal — normalize before the vmap
+            pb = km.broadcast_params(params, xa.shape[0])
+
+            def one(xa1, xb1, p):
+                f = lambda a, b, r, c: km.cov_tile(a, b, r, c, p, nvr, nvc, symmetric)
+                return jax.vmap(f)(xa1, xb1, row0, col0)
+
+            return jax.vmap(one, in_axes=(0, 0, 0))(xa, xb, pb)
+
+        return per_problem
+
+    single = _cov_batch_fn(backend, params, nvr, nvc, symmetric)
+
+    def flat(xa, xb, row0, col0):
+        b, g = xa.shape[:2]
+        out = single(
+            xa.reshape((b * g,) + xa.shape[2:]),
+            xb.reshape((b * g,) + xb.shape[2:]),
+            jnp.tile(row0, b),
+            jnp.tile(col0, b),
+        )
+        return out.reshape((b, g) + out.shape[1:])
+
+    return flat
+
+
 def run_program(
     xc: jax.Array,
     yc: jax.Array,
@@ -494,6 +620,7 @@ def run_program(
     n_streams: Optional[int] = None,
     backend: str = "jnp",
     update_dtype=None,
+    batch_dispatch: str = "flat",
 ):
     """Execute the fused prediction pipeline as one multi-stage program.
 
@@ -503,87 +630,123 @@ def run_program(
     ``env["mean"]`` holds the predictive-mean chunks, ``env["prior"]`` the
     posterior-covariance tiles (uncertainty only), and ``env["packed"]`` /
     ``env["alpha"]`` the factor/weights slices a PosteriorState caches.
+
+    **Problem batching:** with xc (B, M, m, D) / yc (B, M, m) /
+    xtc (B, Q, m, D) — B independent problems of identical tile geometry —
+    every env buffer gains the leading B axis and the SAME lru-cached Plan
+    drives all of them: identical launch count, each launch B times wider
+    (DESIGN.md §9).  Hyperparameters may be shared (scalar leaves) or
+    per-problem (leaves of shape (B,)).  ``batch_dispatch`` picks how the
+    tile kernels absorb B: ``"flat"`` folds it into the launch's batch/grid
+    axis, ``"vmap"`` nests one more vmap level.
     """
-    m_tiles, m, _ = xc.shape
-    q_tiles = xtc.shape[0]
+    batched = xc.ndim == 4
+    m_tiles, m = xc.shape[-3], xc.shape[-2]
+    q_tiles = xtc.shape[-3]
     plan = program_plan(m_tiles, q_tiles, uncertainty, n_streams)
     dtype = xc.dtype
+    lead = (xc.shape[0],) if batched else ()
+    take, put, add = _env_ops(batched)
+    Z = "z" if batched else ""  # einsum prefix for the problem-batch axis
 
     potrf, trsm, _, gemm = get_ops(backend)
-    potrf_b = jax.vmap(potrf)
-    trsm_b = jax.vmap(trsm)
-    trail_b = jax.vmap(functools.partial(gemm, update_dtype=update_dtype))
-    asm = _cov_batch_fn(backend, params, n_valid, n_valid, True)
-    crossf = _cov_batch_fn(backend, params, nt_valid, n_valid, False)
-    priorf = _cov_batch_fn(backend, params, nt_valid, nt_valid, False)
+    potrf_b = _tile_dispatch(potrf, batched, batch_dispatch)
+    trsm_b = _tile_dispatch(trsm, batched, batch_dispatch)
+    trail_b = _tile_dispatch(
+        functools.partial(gemm, update_dtype=update_dtype), batched, batch_dispatch
+    )
+    cov_fn = _cov_batch_fn_batched if batched else _cov_batch_fn
+    asm = cov_fn(backend, params, n_valid, n_valid, True)
+    crossf = cov_fn(backend, params, nt_valid, n_valid, False)
+    priorf = cov_fn(backend, params, nt_valid, nt_valid, False)
 
     env = {
-        "packed": jnp.zeros((tiling.num_packed_tiles(m_tiles), m, m), dtype),
+        "packed": jnp.zeros(lead + (tiling.num_packed_tiles(m_tiles), m, m), dtype),
         "y": yc,
         "alpha": jnp.zeros_like(yc),
-        "cross": jnp.zeros((q_tiles * m_tiles, m, m), dtype),
-        "mean": jnp.zeros((q_tiles, m), dtype),
+        "cross": jnp.zeros(lead + (q_tiles * m_tiles, m, m), dtype),
+        "mean": jnp.zeros(lead + (q_tiles, m), dtype),
     }
     if uncertainty:
-        env["v"] = jnp.zeros((m_tiles, q_tiles, m, m), dtype)
-        env["prior"] = jnp.zeros((q_tiles * q_tiles, m, m), dtype)
+        env["v"] = jnp.zeros(lead + (m_tiles, q_tiles, m, m), dtype)
+        env["prior"] = jnp.zeros(lead + (q_tiles * q_tiles, m, m), dtype)
 
     def off(idx):  # tile index -> global row/col offset, i32 on device
         return jnp.asarray(idx * m, jnp.int32)
+
+    def cross_grid():  # cross buffer viewed as the (..., Q, M, m, m) tile grid
+        return env["cross"].reshape(lead + (q_tiles, m_tiles, m, m))
 
     for level in plan.levels:
         for bt in level:
             op, packed = bt.op, env["packed"]
             if op == sch.ASSEMBLE:
-                tiles = asm(xc[bt.a], xc[bt.b], off(bt.a), off(bt.b))
-                env["packed"] = packed.at[bt.out].set(tiles)
+                tiles = asm(take(xc, bt.a), take(xc, bt.b), off(bt.a), off(bt.b))
+                env["packed"] = put(packed, bt.out, tiles)
             elif op == sch.CROSS:
-                tiles = crossf(xtc[bt.a], xc[bt.b], off(bt.a), off(bt.b))
-                env["cross"] = env["cross"].at[bt.out].set(tiles)
+                tiles = crossf(take(xtc, bt.a), take(xc, bt.b), off(bt.a), off(bt.b))
+                env["cross"] = put(env["cross"], bt.out, tiles)
             elif op == sch.PRIOR:
-                tiles = priorf(xtc[bt.a], xtc[bt.b], off(bt.a), off(bt.b))
-                env["prior"] = env["prior"].at[bt.out].set(tiles)
+                tiles = priorf(take(xtc, bt.a), take(xtc, bt.b), off(bt.a), off(bt.b))
+                env["prior"] = put(env["prior"], bt.out, tiles)
             elif op == sch.POTRF:
-                env["packed"] = packed.at[bt.out].set(potrf_b(packed[bt.a]))
+                env["packed"] = put(packed, bt.out, potrf_b(take(packed, bt.a)))
             elif op == sch.TRSM:
-                env["packed"] = packed.at[bt.out].set(
-                    trsm_b(packed[bt.a], packed[bt.b])
+                env["packed"] = put(
+                    packed, bt.out, trsm_b(take(packed, bt.a), take(packed, bt.b))
                 )
             elif op == TRAIL:
-                env["packed"] = packed.at[bt.out].set(
-                    trail_b(packed[bt.a], packed[bt.b], packed[bt.c])
+                env["packed"] = put(
+                    packed,
+                    bt.out,
+                    trail_b(take(packed, bt.a), take(packed, bt.b), take(packed, bt.c)),
                 )
             elif op == sch.TRSV:
-                sol = _trsv_batch(packed[bt.a], env["y"][bt.out], False)
-                env["y"] = env["y"].at[bt.out].set(sol)
+                sol = _trsv_batch(take(packed, bt.a), take(env["y"], bt.out), False)
+                env["y"] = put(env["y"], bt.out, sol)
                 # publish the solved row into the backward pass's buffer
-                env["alpha"] = env["alpha"].at[bt.out].set(sol)
+                env["alpha"] = put(env["alpha"], bt.out, sol)
             elif op == sch.GEMV:
-                upd = jnp.einsum("gab,gb->ga", packed[bt.a], env["y"][bt.b])
-                env["y"] = env["y"].at[bt.out].add(-upd.astype(dtype))
+                upd = jnp.einsum(
+                    f"{Z}gab,{Z}gb->{Z}ga", take(packed, bt.a), take(env["y"], bt.b)
+                )
+                env["y"] = add(env["y"], bt.out, -upd.astype(dtype))
             elif op == sch.TRSV_B:
-                sol = _trsv_batch(packed[bt.a], env["alpha"][bt.out], True)
-                env["alpha"] = env["alpha"].at[bt.out].set(sol)
+                sol = _trsv_batch(take(packed, bt.a), take(env["alpha"], bt.out), True)
+                env["alpha"] = put(env["alpha"], bt.out, sol)
             elif op == sch.GEMV_B:
-                upd = jnp.einsum("gba,gb->ga", packed[bt.a], env["alpha"][bt.b])
-                env["alpha"] = env["alpha"].at[bt.out].add(-upd.astype(dtype))
+                upd = jnp.einsum(
+                    f"{Z}gba,{Z}gb->{Z}ga", take(packed, bt.a), take(env["alpha"], bt.b)
+                )
+                env["alpha"] = add(env["alpha"], bt.out, -upd.astype(dtype))
             elif op == sch.XGEMV:
-                rows = env["cross"].reshape(q_tiles, m_tiles, m, m)[bt.out]
-                env["mean"] = env["mean"].at[bt.out].set(
-                    jnp.einsum("gqab,qb->ga", rows, env["alpha"])
+                rows = take(cross_grid(), bt.out)
+                env["mean"] = put(
+                    env["mean"],
+                    bt.out,
+                    jnp.einsum(f"{Z}gqab,{Z}qb->{Z}ga", rows, env["alpha"]),
                 )
             elif op == sch.VINIT:
-                cols = env["cross"].reshape(q_tiles, m_tiles, m, m)[:, bt.out]
-                env["v"] = env["v"].at[bt.out].set(cols.transpose(1, 0, 3, 2))
+                if batched:
+                    cols = cross_grid()[:, :, bt.out]      # (B, Q, G, m, m)
+                    vrows = cols.transpose(0, 2, 1, 4, 3)  # (B, G, Q, m, m)
+                else:
+                    cols = cross_grid()[:, bt.out]         # (Q, G, m, m)
+                    vrows = cols.transpose(1, 0, 3, 2)     # (G, Q, m, m)
+                env["v"] = put(env["v"], bt.out, vrows)
             elif op == sch.VTRSV:
-                sol = _trsv_batch(packed[bt.a], env["v"][bt.out], False)
-                env["v"] = env["v"].at[bt.out].set(sol)
+                sol = _trsv_batch(take(packed, bt.a), take(env["v"], bt.out), False)
+                env["v"] = put(env["v"], bt.out, sol)
             elif op == sch.VGEMV:
-                upd = jnp.einsum("gab,gqbc->gqac", packed[bt.a], env["v"][bt.b])
-                env["v"] = env["v"].at[bt.out].add(-upd.astype(dtype))
+                upd = jnp.einsum(
+                    f"{Z}gab,{Z}gqbc->{Z}gqac", take(packed, bt.a), take(env["v"], bt.b)
+                )
+                env["v"] = add(env["v"], bt.out, -upd.astype(dtype))
             elif op == sch.GRAM:
-                w = jnp.einsum("ipab,iqac->pqbc", env["v"], env["v"])
-                env["prior"] = env["prior"] - w.reshape(q_tiles * q_tiles, m, m)
+                w = jnp.einsum(f"{Z}ipab,{Z}iqac->{Z}pqbc", env["v"], env["v"])
+                env["prior"] = env["prior"] - w.reshape(
+                    lead + (q_tiles * q_tiles, m, m)
+                )
             else:
                 raise ValueError(op)
     return env
@@ -603,25 +766,31 @@ def run_solve(
     (reading the stored lower tiles transposed).  Unlike the old per-row
     loops there is no O(M) restacking: the rhs stays one array and every
     level is a single gather/einsum/scatter.
+
+    With lpacked (B, T, m, m) and rhs (B, M, m) / (B, M, Q, m, mq) the same
+    Plan solves B independent systems at once (DESIGN.md §9).
     """
-    m_tiles = rhs.shape[0]
-    if tiling.num_packed_tiles(m_tiles) != lpacked.shape[0]:
+    batched = lpacked.ndim == 4
+    take, put, add = _env_ops(batched)
+    m_tiles = rhs.shape[1] if batched else rhs.shape[0]
+    if tiling.num_packed_tiles(m_tiles) != lpacked.shape[-3]:
         raise ValueError(
             f"rhs rows {m_tiles} inconsistent with packed store {lpacked.shape}"
         )
     plan = solve_plan(m_tiles, lower=lower, n_streams=n_streams)
     transpose = not lower
-    matrix = rhs.ndim == 4
+    matrix = rhs.ndim == (5 if batched else 4)
+    Z = "z" if batched else ""
     if matrix:
-        ein = "gba,gqbc->gqac" if transpose else "gab,gqbc->gqac"
+        ein = f"{Z}gba,{Z}gqbc->{Z}gqac" if transpose else f"{Z}gab,{Z}gqbc->{Z}gqac"
     else:
-        ein = "gba,gb->ga" if transpose else "gab,gb->ga"
+        ein = f"{Z}gba,{Z}gb->{Z}ga" if transpose else f"{Z}gab,{Z}gb->{Z}ga"
     for level in plan.levels:
         for bt in level:
             if bt.op == sch.TRSV:
-                sol = _trsv_batch(lpacked[bt.a], rhs[bt.out], transpose)
-                rhs = rhs.at[bt.out].set(sol)
+                sol = _trsv_batch(take(lpacked, bt.a), take(rhs, bt.out), transpose)
+                rhs = put(rhs, bt.out, sol)
             else:
-                upd = jnp.einsum(ein, lpacked[bt.a], rhs[bt.b])
-                rhs = rhs.at[bt.out].add(-upd.astype(rhs.dtype))
+                upd = jnp.einsum(ein, take(lpacked, bt.a), take(rhs, bt.b))
+                rhs = add(rhs, bt.out, -upd.astype(rhs.dtype))
     return rhs

@@ -20,6 +20,12 @@ program's buffer environment) across ``predict`` calls; the cache is
 invalidated automatically when hyperparameters change (see ``posterior``).
 Warm predictions at new test points reuse the cached factor through the
 staged cross-covariance/mean stages, skipping the O(n^3) work entirely.
+
+:class:`GPBatch` is the fleet front-end (DESIGN.md §9): B independent GPs
+with stacked ``(B, n, D)`` inputs and per-problem hyperparameters, executed
+as ONE problem-batched fused program — same validation / posterior-cache /
+invalidation contract as :class:`GaussianProcess`, same executor Plan as a
+single GP, every launch B times wider.
 """
 
 from __future__ import annotations
@@ -29,9 +35,11 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import kernels_math as km
 from repro.core import predict as pred
+from repro.core import tiling
 
 
 @dataclasses.dataclass
@@ -235,3 +243,245 @@ class GaussianProcess:
         if x_test.ndim == 1:
             x_test = x_test[:, None]
         return x_test
+
+
+@dataclasses.dataclass
+class GPBatch:
+    """B independent GPs executed as ONE problem-batched fused program.
+
+    Stacked inputs: ``x_train`` (B, n, D) (or (B, n) for 1-D problems),
+    ``y_train`` (B, n) — ragged-free, every problem shares n and D so the
+    whole fleet shares one executor Plan (the DAG depends only on the tile
+    geometry, never on B; see DESIGN.md §9).  ``params`` leaves may be
+    scalars (shared across the fleet — keeps the Pallas assembly kernels
+    usable, with B folded into their grid) or vectors (B,) (per-problem —
+    assembly routes through the vmapped jnp tile kernel).  Scalars are kept
+    as scalars; :meth:`optimize` always returns per-problem (B,) leaves.
+
+    Same contract as :class:`GaussianProcess`: shape validation raises
+    instead of silently transposing, the stacked
+    :class:`repro.core.predict.PosteriorState` is cached across ``predict``
+    calls and invalidated when hyperparameters or pipeline knobs change,
+    and :meth:`optimize` trains all B GPs' hyperparameters in one jitted
+    Adam scan with independent optimizer states.
+    """
+
+    x_train: jax.Array
+    y_train: jax.Array
+    params: km.SEKernelParams = dataclasses.field(
+        default_factory=km.SEKernelParams.paper_defaults
+    )
+    tile_size: int = 256
+    n_streams: Optional[int] = None
+    op_backend: str = "jnp"
+    update_dtype: Optional[object] = None
+    dtype: object = jnp.float32
+    batch_dispatch: str = "flat"
+
+    def __post_init__(self):
+        x = jnp.asarray(self.x_train, self.dtype)
+        if x.ndim == 2:  # (B, n) convenience for 1-D problems
+            x = x[..., None]
+        y = jnp.asarray(self.y_train, self.dtype)
+        if x.ndim != 3 or y.ndim != 2 or x.shape[:2] != y.shape:
+            raise ValueError(
+                f"GPBatch needs stacked x_train (B, n, D) or (B, n) and "
+                f"y_train (B, n) with matching leading axes; got "
+                f"x {tuple(jnp.asarray(self.x_train).shape)}, "
+                f"y {tuple(y.shape)}. Stack ragged problems to a common n "
+                "(they are not padded silently)."
+            )
+        self.x_train = x
+        self.y_train = y
+        b = x.shape[0]
+        for name in ("lengthscale", "vertical", "noise"):
+            leaf = getattr(self.params, name)
+            if jnp.ndim(leaf) > 0 and jnp.shape(leaf) != (b,):
+                raise ValueError(
+                    f"GPBatch params.{name} must be a scalar (shared) or "
+                    f"shape ({b},) (per-problem); got {jnp.shape(leaf)}"
+                )
+        self._posterior: Optional[pred.PosteriorState] = None
+        self._posterior_key = None
+        self._params_bytes = None  # (params object, host bytes) memo
+
+    @property
+    def batch_size(self) -> int:
+        return self.x_train.shape[0]
+
+    # -- cached posterior ---------------------------------------------------
+
+    def _cache_key(self):
+        p = self.params
+        # memoize the device->host transfer of the param leaves: params are
+        # immutable jax arrays/floats, so the identity of the SEKernelParams
+        # (kept referenced here, so its id cannot be reused) is a sound
+        # staleness signal — rebinding self.params (optimize()) refreshes it
+        if self._params_bytes is None or self._params_bytes[0] is not p:
+            self._params_bytes = (
+                p,
+                (
+                    np.asarray(p.lengthscale).tobytes(),
+                    np.asarray(p.vertical).tobytes(),
+                    np.asarray(p.noise).tobytes(),
+                ),
+            )
+        return (
+            id(self.x_train),
+            id(self.y_train),
+            self._params_bytes[1],
+            self.tile_size,
+            self.n_streams,
+            self.op_backend,
+            str(self.update_dtype),
+            str(jnp.dtype(self.dtype)),
+            self.batch_dispatch,
+        )
+
+    def posterior(self) -> pred.PosteriorState:
+        """Stacked factors + weights (leading B axis), cached across calls.
+
+        Runs the q_tiles=0 prefix of the problem-batched program (assembly →
+        factorization → both substitutions) — the NLML program IS the
+        prediction program with zero test tiles, so this shares every
+        plan/jit cache with prediction.
+        """
+        key = self._cache_key()
+        if self._posterior is None or self._posterior_key != key:
+            env, _ = pred.nlml_program_env(
+                self.x_train,
+                self.y_train,
+                self.params,
+                self.tile_size,
+                n_streams=self.n_streams,
+                backend=self.op_backend,
+                update_dtype=self.update_dtype,
+                dtype=self.dtype,
+                batch_dispatch=self.batch_dispatch,
+            )
+            self._posterior = pred.PosteriorState(
+                lpacked=env["packed"],
+                alpha=env["alpha"],
+                x_chunks=tiling.pad_features(self.x_train, self.tile_size, dtype=self.dtype),
+                n=self.x_train.shape[1],
+                m=self.tile_size,
+                params=self.params,
+            )
+            self._posterior_key = key
+        return self._posterior
+
+    def invalidate_cache(self) -> None:
+        self._posterior = None
+        self._posterior_key = None
+
+    # -- prediction ---------------------------------------------------------
+
+    def _predict_batched(self, x_test: jax.Array, full_cov: bool):
+        """Cold: ONE problem-batched fused program (populates the posterior
+        cache from its buffer env).  Warm: batched cross/mean tail off the
+        cached stacked factor."""
+        key = self._cache_key()
+        if self._posterior is not None and self._posterior_key == key:
+            return pred.predict_from_state_batched(
+                self._posterior,
+                x_test,
+                full_cov=full_cov,
+                n_streams=self.n_streams,
+                dtype=self.dtype,
+            )
+        result, state = pred.predict_fused_batched(
+            self.x_train,
+            self.y_train,
+            x_test,
+            self.params,
+            self.tile_size,
+            full_cov=full_cov,
+            n_streams=self.n_streams,
+            backend=self.op_backend,
+            update_dtype=self.update_dtype,
+            dtype=self.dtype,
+            with_state=True,
+            batch_dispatch=self.batch_dispatch,
+        )
+        self._posterior, self._posterior_key = state, key
+        return result
+
+    def predict(self, x_test: jax.Array) -> jax.Array:
+        """Predictive means (B, n̂) for stacked test points (B, n̂, D).
+
+        A shared (n̂, D) test block is broadcast to every problem."""
+        return self._predict_batched(self._prep(x_test), full_cov=False)
+
+    def predict_full_cov(self, x_test: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Means (B, n̂) and posterior covariances (B, n̂, n̂)."""
+        return self._predict_batched(self._prep(x_test), full_cov=True)
+
+    def predict_with_uncertainty(self, x_test: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        mean, sigma = self.predict_full_cov(x_test)
+        return mean, jnp.diagonal(sigma, axis1=-2, axis2=-1)
+
+    # -- hyperparameters ----------------------------------------------------
+
+    def nlml(self) -> jax.Array:
+        """Per-problem NLML vector (B,) from the cached stacked posterior."""
+        from repro.core import mll
+
+        return mll.nlml_from_state(self.posterior(), self.y_train, dtype=self.dtype)
+
+    def log_marginal_likelihood(self) -> jax.Array:
+        return -self.nlml()
+
+    def optimize(self, steps: int = 100, lr: float = 0.05) -> "GPBatch":
+        """Adam on all B NLMLs in ONE jitted scan (independent Adam states,
+        per-problem losses — mll.optimize_hyperparameters_batched)."""
+        from repro.core import mll
+
+        new_params, _ = mll.optimize_hyperparameters_batched(
+            self.x_train,
+            self.y_train,
+            self.params,
+            steps=steps,
+            lr=lr,
+            dtype=self.dtype,
+            method="tiled",
+            tile_size=self.tile_size,
+            n_streams=self.n_streams,
+            op_backend=self.op_backend,
+            update_dtype=self.update_dtype,
+            batch_dispatch=self.batch_dispatch,
+        )
+        self.params = new_params
+        self.invalidate_cache()  # the factors belong to the old hyperparameters
+        return self
+
+    def _prep(self, x_test: jax.Array) -> jax.Array:
+        """Normalize test inputs to stacked (B, n̂, D).
+
+        Accepted forms: (B, n̂, D) stacked; (n̂, D) shared across the fleet
+        (broadcast); (n̂,) shared 1-D points; and — for 1-D fleets only —
+        (B, n̂) stacked per-problem points, mirroring the constructor's
+        (B, n) convenience.  When D == 1 and the leading axis equals B, a
+        2-D input is read as *stacked* (the constructor's convention), so
+        pass shared points for a size-B 1-D fleet as (n̂, 1) with n̂ != B or
+        stack them explicitly.
+        """
+        x_test = jnp.asarray(x_test, self.dtype)
+        d = self.x_train.shape[-1]
+        b = self.batch_size
+        if x_test.ndim == 1:  # shared 1-D test points
+            x_test = x_test[:, None]
+        if x_test.ndim == 2:
+            if d == 1 and x_test.shape[0] == b:
+                x_test = x_test[..., None]          # stacked (B, n̂) 1-D points
+            elif x_test.shape[-1] == d:
+                x_test = jnp.broadcast_to(          # shared (n̂, D) block
+                    x_test[None], (b,) + x_test.shape
+                )
+        if x_test.ndim != 3 or x_test.shape[0] != b or x_test.shape[-1] != d:
+            raise ValueError(
+                f"x_test must be (n̂, {d}) shared, (B, n̂, {d}) stacked"
+                + (", (n̂,) shared or (B, n̂) stacked 1-D points" if d == 1 else "")
+                + f" with B == {b}; got {tuple(x_test.shape)}"
+            )
+        return x_test
+

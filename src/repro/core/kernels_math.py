@@ -41,6 +41,21 @@ class SEKernelParams:
         return SEKernelParams(1.0, 1.0, 0.1)
 
 
+def broadcast_params(params: SEKernelParams, b: int) -> SEKernelParams:
+    """Broadcast every hyperparameter leaf to per-problem shape (B,).
+
+    Mixed leaves are legal inputs (e.g. per-problem lengthscales with a
+    shared noise); this normalizes them for code that vmaps over the
+    problem axis (DESIGN.md §9).
+    """
+    bcast = lambda leaf: jnp.broadcast_to(jnp.asarray(leaf), (b,))
+    return SEKernelParams(
+        lengthscale=bcast(params.lengthscale),
+        vertical=bcast(params.vertical),
+        noise=bcast(params.noise),
+    )
+
+
 def sq_dists(x1: jax.Array, x2: jax.Array) -> jax.Array:
     """Pairwise squared euclidean distances. x1: (n1, D), x2: (n2, D) -> (n1, n2).
 

@@ -27,6 +27,13 @@ Three evaluation paths:
 ``lax.scan`` — the whole optimization is a single compiled program, not a
 Python loop that re-enters jit every step.  Hyperparameters live in
 unconstrained log-space (softplus).
+
+Problem-batched variants (DESIGN.md §9): :func:`nlml_tiled_batched`
+evaluates B stacked GPs' NLMLs through ONE problem-batched fused program
+(per-problem losses (B,), per-problem hyperparameter leaves (B,)), and
+:func:`optimize_hyperparameters_batched` trains all B GPs in one jitted
+``lax.scan`` with independent elementwise Adam states
+(:func:`adam_scan_batched`).
 """
 
 from __future__ import annotations
@@ -69,14 +76,15 @@ def nlml_from_state(state, y: jax.Array, *, dtype=jnp.float32) -> jax.Array:
                                    rows contribute 0 because y pads with 0)
     logdet = 2 sum log diag(L)    (packed factor's diagonal tiles; padded
                                    rows contribute log 1 = 0)
-    """
-    from repro.core import predict as pred
 
+    Batch-aware: a stacked state (leading B axis) with y (B, n) returns the
+    per-problem NLML vector (B,).
+    """
     y = y.astype(dtype)
-    n = y.shape[0]
-    yc = pred.pad_vector(y, state.m)
-    quad = jnp.sum(yc * state.alpha)
-    m_tiles = state.alpha.shape[0]
+    n = y.shape[-1]
+    yc = tiling.pad_vector(y, state.m)
+    quad = jnp.sum(yc * state.alpha, axis=(-2, -1))
+    m_tiles = state.alpha.shape[-2]
     logdet = triangular.logdet_from_factor(state.lpacked, m_tiles)
     return 0.5 * (quad + logdet + n * math.log(2.0 * math.pi))
 
@@ -107,18 +115,29 @@ def nlml_from_state(state, y: jax.Array, *, dtype=jnp.float32) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _nlml_cfg(tile_size, n_streams, backend, update_dtype, dtype):
+def _nlml_cfg(tile_size, n_streams, backend, update_dtype, dtype, batch_dispatch="flat"):
     """Hashable static config for the custom-vjp / jit caches."""
-    return (int(tile_size), n_streams, backend, update_dtype, jnp.dtype(dtype).name)
+    return (
+        int(tile_size),
+        n_streams,
+        backend,
+        update_dtype,
+        jnp.dtype(dtype).name,
+        batch_dispatch,
+    )
 
 
 def _nlml_forward(cfg, x, y, params):
-    """Run the tiled NLML program; returns (value, residuals for the vjp)."""
+    """Run the tiled NLML program; returns (value, residuals for the vjp).
+
+    Batch-aware: with x (B, n, D) / y (B, n) the program env is
+    problem-batched and the value is the per-problem loss vector (B,).
+    """
     from repro.core import predict as pred
 
-    tile_size, n_streams, backend, update_dtype, dtype_name = cfg
+    tile_size, n_streams, backend, update_dtype, dtype_name, batch_dispatch = cfg
     dtype = jnp.dtype(dtype_name)
-    n = y.shape[0]
+    n = y.shape[-1]
     env, yc = pred.nlml_program_env(
         x,
         y,
@@ -128,9 +147,10 @@ def _nlml_forward(cfg, x, y, params):
         backend=backend,
         update_dtype=update_dtype,
         dtype=dtype,
+        batch_dispatch=batch_dispatch,
     )
-    quad = jnp.sum(yc * env["alpha"])
-    logdet = triangular.logdet_from_factor(env["packed"], env["alpha"].shape[0])
+    quad = jnp.sum(yc * env["alpha"], axis=(-2, -1))
+    logdet = triangular.logdet_from_factor(env["packed"], env["alpha"].shape[-2])
     val = 0.5 * (quad + logdet + n * math.log(2.0 * math.pi))
     return val, (env["packed"], env["alpha"])
 
@@ -146,8 +166,26 @@ def _nlml_cv_fwd(cfg, x, y, params):
     return val, (x, y, params, lpacked, alpha_c)
 
 
+def _nlml_dense_grads(xd, alpha, kinv, l, v):
+    """O(n^2) dense contraction of S = 0.5(K^{-1} - aa^T) with dK/dtheta.
+
+    One problem: xd (n, D), alpha (n,), kinv (n, n), scalar l / v.  Returns
+    (g_x, g_y, g_l, g_v, g_noise).  The batched backward pass vmaps this
+    over the problem axis.
+    """
+    s = 0.5 * (kinv - jnp.outer(alpha, alpha))
+    d2 = km.sq_dists(xd, xd)
+    kse = v * jnp.exp(-0.5 / l * d2)
+    g = s * kse
+    g_l = jnp.sum(g * d2) / (2.0 * l * l)
+    g_v = jnp.sum(g) / v
+    g_noise = jnp.trace(s)
+    g_x = -(2.0 / l) * (jnp.sum(g, axis=1, keepdims=True) * xd - g @ xd)
+    return g_x, alpha, g_l, g_v, g_noise
+
+
 def _nlml_cv_bwd(cfg, res, ct):
-    _, n_streams, _, _, dtype_name = cfg
+    _, n_streams, _, _, dtype_name, _ = cfg
     dtype = jnp.dtype(dtype_name)
     x, y, params, lpacked, alpha_c = res
     n = y.shape[0]
@@ -155,19 +193,14 @@ def _nlml_cv_bwd(cfg, res, ct):
     kinv_t = triangular.kinv_tiles_from_factor(lpacked, n_streams=n_streams)
     kinv = tiling.untile_dense(kinv_t)[:n, :n]
     alpha = alpha_c.reshape(-1)[:n]
-    s = 0.5 * (kinv - jnp.outer(alpha, alpha))
     # O(n^2): contract S with the analytic kernel derivatives.
-    xd = x.astype(dtype)
-    l = jnp.asarray(params.lengthscale, dtype)
-    v = jnp.asarray(params.vertical, dtype)
-    d2 = km.sq_dists(xd, xd)
-    kse = v * jnp.exp(-0.5 / l * d2)
-    g = s * kse
-    g_l = jnp.sum(g * d2) / (2.0 * l * l)
-    g_v = jnp.sum(g) / v
-    g_noise = jnp.trace(s)
-    g_y = alpha
-    g_x = -(2.0 / l) * (jnp.sum(g, axis=1, keepdims=True) * xd - g @ xd)
+    g_x, g_y, g_l, g_v, g_noise = _nlml_dense_grads(
+        x.astype(dtype),
+        alpha,
+        kinv,
+        jnp.asarray(params.lengthscale, dtype),
+        jnp.asarray(params.vertical, dtype),
+    )
     ct = jnp.asarray(ct, dtype)
     return (
         ct * g_x,
@@ -177,6 +210,95 @@ def _nlml_cv_bwd(cfg, res, ct):
 
 
 _nlml_tiled_cv.defvjp(_nlml_cv_fwd, _nlml_cv_bwd)
+
+
+# -- problem-batched trainable NLML (DESIGN.md §9) --------------------------
+#
+# Forward: ONE problem-batched program (q_tiles=0) evaluates B independent
+# NLMLs; the per-problem losses come back as a vector (B,).  Backward: the
+# blocked reverse-mode rule per problem — K^{-1} for all B factors through
+# ONE batched tiled matrix solve + gram, then the O(n^2) dense contraction
+# vmapped over the problem axis.  Hyperparameter leaves are (B,) throughout
+# (callers broadcast shared scalars up front).
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _nlml_tiled_batched_cv(cfg, x, y, params):
+    val, _ = _nlml_forward(cfg, x, y, params)
+    return val
+
+
+def _nlml_batched_cv_fwd(cfg, x, y, params):
+    val, (lpacked, alpha_c) = _nlml_forward(cfg, x, y, params)
+    return val, (x, y, params, lpacked, alpha_c)
+
+
+def _nlml_batched_cv_bwd(cfg, res, ct):
+    _, n_streams, _, _, dtype_name, _ = cfg
+    dtype = jnp.dtype(dtype_name)
+    x, y, params, lpacked, alpha_c = res
+    b, n = y.shape
+    # O(n^3): B inverses through ONE problem-batched tiled solve + gram.
+    kinv_t = triangular.kinv_tiles_from_factor(lpacked, n_streams=n_streams)
+    kinv = tiling.untile_dense(kinv_t)[:, :n, :n]
+    alpha = alpha_c.reshape(b, -1)[:, :n]
+    l = jnp.broadcast_to(jnp.asarray(params.lengthscale, dtype), (b,))
+    v = jnp.broadcast_to(jnp.asarray(params.vertical, dtype), (b,))
+    g_x, g_y, g_l, g_v, g_noise = jax.vmap(_nlml_dense_grads)(
+        x.astype(dtype), alpha, kinv, l, v
+    )
+    ct = jnp.asarray(ct, dtype)  # (B,) — one cotangent per problem loss
+    return (
+        ct[:, None, None] * g_x,
+        ct[:, None] * g_y,
+        km.SEKernelParams(ct * g_l, ct * g_v, ct * g_noise),
+    )
+
+
+_nlml_tiled_batched_cv.defvjp(_nlml_batched_cv_fwd, _nlml_batched_cv_bwd)
+
+
+def nlml_tiled_batched(
+    x: jax.Array,
+    y: jax.Array,
+    params: km.SEKernelParams,
+    *,
+    tile_size: int = 256,
+    n_streams=None,
+    op_backend: str = "jnp",
+    update_dtype=None,
+    dtype=jnp.float32,
+    vjp: str = "custom",
+    batch_dispatch: str = "flat",
+) -> jax.Array:
+    """Per-problem NLML vector (B,) for B stacked GPs, in ONE batched program.
+
+    x (B, n, D) / y (B, n); hyperparameter leaves scalar (shared) or (B,)
+    (per-problem) — scalars are broadcast so the gradient contract is always
+    per-problem leaves (B,).  Differentiable like :func:`nlml_tiled`:
+    ``vjp="custom"`` (default) runs the blocked reverse-mode rule batched,
+    ``vjp="autodiff"`` differentiates straight through the program.
+    """
+    x = jnp.asarray(x, dtype)
+    if x.ndim == 2:
+        x = x[..., None]
+    y = jnp.asarray(y, dtype)
+    if x.ndim != 3 or y.ndim != 2 or x.shape[:2] != y.shape:
+        raise ValueError(
+            f"batched NLML needs x (B, n, D) and y (B, n); got {x.shape}, {y.shape}"
+        )
+    from repro.core import predict as pred
+
+    params = pred._broadcast_params(params, x.shape[0])
+    cfg = _nlml_cfg(
+        tile_size, n_streams, op_backend, update_dtype, dtype, batch_dispatch
+    )
+    if vjp == "custom":
+        return _nlml_tiled_batched_cv(cfg, x, y, params)
+    if vjp == "autodiff":
+        val, _ = _nlml_forward(cfg, x, y, params)
+        return val
+    raise ValueError(f"vjp must be 'custom' or 'autodiff', got {vjp!r}")
 
 
 def nlml_tiled(
@@ -219,21 +341,25 @@ def nlml_tiled(
 
 
 def _unpack(raw: jax.Array) -> km.SEKernelParams:
-    # softplus keeps hyperparameters positive; raw is in R^3
+    # softplus keeps hyperparameters positive; raw is in R^3 — or (B, 3) for
+    # B problems (the hyperparameter triple always lives on the last axis)
     sp = lambda z: jnp.logaddexp(z, 0.0)
-    return km.SEKernelParams(lengthscale=sp(raw[0]), vertical=sp(raw[1]), noise=sp(raw[2]))
+    return km.SEKernelParams(
+        lengthscale=sp(raw[..., 0]), vertical=sp(raw[..., 1]), noise=sp(raw[..., 2])
+    )
 
 
 def _pack(params: km.SEKernelParams, dtype=None) -> jax.Array:
-    """Inverse softplus into R^3.  ``dtype=None`` keeps the leaves' common
-    dtype (float64 params no longer silently round-trip through float32)."""
+    """Inverse softplus into R^3 (or (B, 3) for per-problem leaves (B,)).
+    ``dtype=None`` keeps the leaves' common dtype (float64 params no longer
+    silently round-trip through float32)."""
     leaves = [
         jnp.asarray(p) for p in (params.lengthscale, params.vertical, params.noise)
     ]
     if dtype is None:
         dtype = jnp.result_type(*leaves)
     inv_sp = lambda p: jnp.log(jnp.expm1(jnp.maximum(p.astype(dtype), 1e-6)))
-    return jnp.stack([inv_sp(p) for p in leaves])
+    return jnp.stack([inv_sp(p) for p in leaves], axis=-1)
 
 
 def nlml_loss_fn(
@@ -268,6 +394,37 @@ def nlml_loss_fn(
     raise ValueError(f"method must be 'monolithic' or 'tiled', got {method!r}")
 
 
+def _adam_scan_impl(vg, steps: int, lr: float):
+    """Shared Adam core: ``vg(raw) -> ((objective, report), grad)``.
+
+    The scan records ``report`` (the loss value(s) *before* update t) and
+    updates elementwise — the same code serves one problem (scalar
+    objective == report) and B independent problems (objective = sum of
+    per-problem losses, report = the (B,) loss vector; independence makes
+    the summed gradient the stacked per-problem gradients, and elementwise
+    moments on (B, 3) raws ARE B independent optimizers).
+    """
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def step(carry, t):
+        raw, m, v = carry
+        (_, report), g = vg(raw)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1**t)
+        vhat = v / (1 - b2**t)
+        raw = raw - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return (raw, m, v), report
+
+    def run(raw0):
+        z = jnp.zeros_like(raw0)
+        ts = jnp.arange(1, steps + 1, dtype=raw0.dtype)
+        (raw, _, _), losses = jax.lax.scan(step, (raw0, z, z), ts)
+        return raw, losses
+
+    return jax.jit(run)
+
+
 def adam_scan(loss, steps: int, lr: float):
     """The whole Adam run as ONE jitted ``lax.scan`` over optimizer steps.
 
@@ -277,26 +434,30 @@ def adam_scan(loss, steps: int, lr: float):
     trace, one compile, zero per-step dispatch from Python — the paper's
     "recurring O(n^3) cost per optimizer step" runs entirely on device.
     """
-    vg = jax.value_and_grad(loss)
-    b1, b2, eps = 0.9, 0.999, 1e-8
 
-    def step(carry, t):
-        raw, m, v = carry
-        val, g = vg(raw)
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * g * g
-        mhat = m / (1 - b1**t)
-        vhat = v / (1 - b2**t)
-        raw = raw - lr * mhat / (jnp.sqrt(vhat) + eps)
-        return (raw, m, v), val
+    def total(raw):
+        val = loss(raw)
+        return val, val
 
-    def run(raw0):
-        z = jnp.zeros_like(raw0)
-        ts = jnp.arange(1, steps + 1, dtype=raw0.dtype)
-        (raw, _, _), losses = jax.lax.scan(step, (raw0, z, z), ts)
-        return raw, losses
+    return _adam_scan_impl(jax.value_and_grad(total, has_aux=True), steps, lr)
 
-    return jax.jit(run)
+
+def adam_scan_batched(loss, steps: int, lr: float):
+    """B independent Adam runs in ONE jitted ``lax.scan`` (DESIGN.md §9).
+
+    ``loss`` maps raw (B, 3) -> per-problem losses (B,).  Differentiating the
+    *sum* of independent per-problem losses yields exactly the stacked
+    per-problem gradients (zero cross-terms), and Adam's update is
+    elementwise, so one (B, 3) moment pair IS B independent optimizers.
+    Returns ``raw0 (B, 3) -> (raw_final (B, 3), losses (steps, B))`` with
+    the same loss-before-update-t semantics as :func:`adam_scan`.
+    """
+
+    def total(raw):
+        losses = loss(raw)
+        return jnp.sum(losses), losses
+
+    return _adam_scan_impl(jax.value_and_grad(total, has_aux=True), steps, lr)
 
 
 def optimize_hyperparameters(
@@ -337,4 +498,69 @@ def optimize_hyperparameters(
         vjp=vjp,
     )
     raw, losses = adam_scan(loss, steps, lr)(_pack(init, dtype=dtype))
+    return _unpack(raw), losses
+
+
+def optimize_hyperparameters_batched(
+    x: jax.Array,
+    y: jax.Array,
+    init: km.SEKernelParams,
+    *,
+    steps: int = 100,
+    lr: float = 0.05,
+    dtype=jnp.float32,
+    method: str = "tiled",
+    tile_size: int = 256,
+    n_streams=None,
+    op_backend: str = "jnp",
+    update_dtype=None,
+    vjp: str = "custom",
+    batch_dispatch: str = "flat",
+) -> Tuple[km.SEKernelParams, jax.Array]:
+    """Train B GPs' hyperparameters in ONE jitted Adam scan (DESIGN.md §9).
+
+    x (B, n, D) / y (B, n); ``init`` leaves scalar (shared start) or (B,)
+    (per-problem starts).  Returns (params with (B,) leaves, loss curves
+    (steps, B)).  ``method="tiled"`` (default) evaluates all B NLMLs through
+    one problem-batched fused program per optimizer step;
+    ``method="monolithic"`` vmaps the dense reference NLML — the
+    equivalence baseline.
+    """
+    x = jnp.asarray(x, dtype)
+    if x.ndim == 2:
+        x = x[..., None]
+    y = jnp.asarray(y, dtype)
+    if x.ndim != 3 or y.ndim != 2 or x.shape[:2] != y.shape:
+        raise ValueError(
+            f"batched optimize needs x (B, n, D) and y (B, n); got "
+            f"{tuple(x.shape)}, {tuple(y.shape)}"
+        )
+    b = x.shape[0]
+    from repro.core import predict as pred
+
+    init = pred._broadcast_params(init, b)
+    if method == "tiled":
+        loss = lambda raw: nlml_tiled_batched(
+            x,
+            y,
+            _unpack(raw),
+            tile_size=tile_size,
+            n_streams=n_streams,
+            op_backend=op_backend,
+            update_dtype=update_dtype,
+            dtype=dtype,
+            vjp=vjp,
+            batch_dispatch=batch_dispatch,
+        )
+    elif method == "monolithic":
+        mono = jax.vmap(
+            lambda x1, y1, raw1: negative_log_marginal_likelihood(
+                x1, y1, _unpack(raw1), dtype=dtype
+            ),
+            in_axes=(0, 0, 0),
+        )
+        loss = lambda raw: mono(x, y, raw)
+    else:
+        raise ValueError(f"method must be 'monolithic' or 'tiled', got {method!r}")
+    raw, losses = adam_scan_batched(loss, steps, lr)(_pack(init, dtype=dtype))
     return _unpack(raw), losses

@@ -128,26 +128,56 @@ def assemble_prior_tiles(
     return jax.vmap(one)(xt_chunks, jnp.arange(mh) * m)
 
 
+# per-problem (B,) leaf normalization — canonical impl in kernels_math
+_broadcast_params = km.broadcast_params
+
+
+def assemble_cross_tiles_batched(
+    xt_chunks: jax.Array,
+    x_chunks: jax.Array,
+    params: km.SEKernelParams,
+    nt_valid: int,
+    n_valid: int,
+) -> jax.Array:
+    """Problem-batched K_{X̂,X} grid: (B, Mhat, M, m, m) with per-problem params.
+
+    Always the jnp tile kernel: the Pallas assembly kernel bakes
+    hyperparameters in as compile-time constants and cannot vary them across
+    the problem axis (see executor._cov_batch_fn_batched).
+    """
+    b = xt_chunks.shape[0]
+    params = _broadcast_params(params, b)
+    return jax.vmap(
+        lambda xt1, x1, p: assemble_cross_tiles(xt1, x1, p, nt_valid, n_valid)
+    )(xt_chunks, x_chunks, params)
+
+
+def assemble_prior_tiles_batched(
+    xt_chunks: jax.Array, params: km.SEKernelParams, nt_valid: int
+) -> jax.Array:
+    """Problem-batched prior K_{X̂,X̂} grid (B, Mhat, Mhat, m, m)."""
+    params = _broadcast_params(params, xt_chunks.shape[0])
+    return jax.vmap(lambda xt1, p: assemble_prior_tiles(xt1, p, nt_valid))(
+        xt_chunks, params
+    )
+
+
 # ---------------------------------------------------------------------------
-# Padding helpers.
+# Padding helpers — canonical implementations live in repro.core.tiling
+# (batch- and dtype-aware); these aliases are kept as deprecated re-exports
+# for callers of the old predict.* names.
 # ---------------------------------------------------------------------------
 
-
-def pad_features(x: jax.Array, m: int) -> jax.Array:
-    """(n, D) -> (M, m, D) chunked with zero padding."""
-    n = x.shape[0]
-    pad = tiling.pad_amount(n, m)
-    if pad:
-        x = jnp.pad(x, ((0, pad), (0, 0)))
-    return x.reshape(-1, m, x.shape[-1])
+pad_features = tiling.pad_features
+pad_vector = tiling.pad_vector
 
 
-def pad_vector(y: jax.Array, m: int) -> jax.Array:
-    n = y.shape[0]
-    pad = tiling.pad_amount(n, m)
-    if pad:
-        y = jnp.pad(y, (0, pad))
-    return y.reshape(-1, m)
+def _resolve_dtype(dtype, *arrays):
+    """``dtype=None`` means "preserve the (canonicalized) input dtype" —
+    the explicit alternative to the old implicit float32 default."""
+    if dtype is not None:
+        return jnp.dtype(dtype)
+    return jnp.result_type(*(jnp.asarray(a).dtype for a in arrays))
 
 
 # ---------------------------------------------------------------------------
@@ -163,11 +193,13 @@ def cholesky_factor(
     n_streams: Optional[int] = None,
     backend: str = "jnp",
     update_dtype=None,
-    dtype=jnp.float32,
+    dtype=None,
 ) -> Tuple[jax.Array, int]:
-    """Assemble K and factor it.  Returns (packed L, n_valid)."""
+    """Assemble K and factor it.  Returns (packed L, n_valid).
+
+    ``dtype=None`` preserves the input dtype (no implicit float32 cast)."""
     n = x.shape[0]
-    xc = pad_features(x.astype(dtype), m)
+    xc = tiling.pad_features(x, m, dtype=_resolve_dtype(dtype, x))
     packed = assemble_packed_covariance(xc, params, n, backend=backend)
     lpacked = chol.tiled_cholesky(
         packed, n_streams=n_streams, backend=backend, update_dtype=update_dtype
@@ -201,12 +233,13 @@ def posterior_state(
     n_streams: Optional[int] = None,
     backend: str = "jnp",
     update_dtype=None,
-    dtype=jnp.float32,
+    dtype=None,
 ) -> PosteriorState:
     """Assemble + factor K and solve for alpha = K^{-1} y (the cacheable part)."""
     n = x_train.shape[0]
-    xc = pad_features(x_train.astype(dtype), m)
-    yc = pad_vector(y_train.astype(dtype), m)
+    dtype = _resolve_dtype(dtype, x_train)
+    xc = tiling.pad_features(x_train, m, dtype=dtype)
+    yc = tiling.pad_vector(y_train, m, dtype=dtype)
     packed = assemble_packed_covariance(xc, params, n, backend=backend)
     lpacked = chol.tiled_cholesky(
         packed, n_streams=n_streams, backend=backend, update_dtype=update_dtype
@@ -225,17 +258,19 @@ def predict_from_state(
     full_cov: bool = False,
     n_streams: Optional[int] = None,
     backend: str = "jnp",
-    dtype=jnp.float32,
+    dtype=None,
 ):
     """Prediction given a (possibly cached) :class:`PosteriorState`.
 
     The kernel hyperparameters come from the state itself — alpha and the
     factor are only valid for the params K was assembled with, so accepting
-    them separately would invite a silent mismatch.
+    them separately would invite a silent mismatch.  ``dtype=None`` follows
+    the state's storage dtype.
     """
     params = state.params
     nh = x_test.shape[0]
-    xtc = pad_features(x_test.astype(dtype), state.m)
+    dtype = state.x_chunks.dtype if dtype is None else jnp.dtype(dtype)
+    xtc = tiling.pad_features(x_test, state.m, dtype=dtype)
     kstar = assemble_cross_tiles(xtc, state.x_chunks, params, nh, state.n, backend=backend)
     mean = triangular.tiled_matvec(kstar, state.alpha).reshape(-1)[:nh]
     if not full_cov:
@@ -264,14 +299,17 @@ def _fused_program_fn(
     update_dtype,
     n_valid: int,
     nt_valid: int,
+    batch_dispatch: str = "flat",
 ):
     """The ONE jit of the fused pipeline, cached per static configuration.
 
     Shapes are implied by the traced operands; the program plan itself is
-    lru-cached inside :func:`repro.core.executor.program_plan`.  The Pallas
-    backend bakes hyperparameters into its assembly kernels as compile-time
-    constants, so it runs unjitted at this level (each Pallas call is its own
-    compiled kernel).
+    lru-cached inside :func:`repro.core.executor.program_plan`.  The cache
+    is shared by the single-problem and problem-batched paths — B enters
+    only through the traced operand shapes (jit re-specializes per B), never
+    through the plan.  The Pallas backend bakes hyperparameters into its
+    assembly kernels as compile-time constants, so it runs unjitted at this
+    level (each Pallas call is its own compiled kernel).
     """
 
     def fn(xc, yc, xtc, params):
@@ -286,6 +324,7 @@ def _fused_program_fn(
             n_streams=n_streams,
             backend=backend,
             update_dtype=update_dtype,
+            batch_dispatch=batch_dispatch,
         )
 
     return jax.jit(fn) if backend == "jnp" else fn
@@ -302,7 +341,7 @@ def predict_fused(
     n_streams: Optional[int] = None,
     backend: str = "jnp",
     update_dtype=None,
-    dtype=jnp.float32,
+    dtype=None,
     with_state: bool = False,
 ):
     """Whole-pipeline fused prediction: one program, one jit, one plan cache.
@@ -316,9 +355,10 @@ def predict_fused(
     """
     n = x_train.shape[0]
     nh = x_test.shape[0]
-    xc = pad_features(x_train.astype(dtype), m)
-    yc = pad_vector(y_train.astype(dtype), m)
-    xtc = pad_features(x_test.astype(dtype), m)
+    dtype = _resolve_dtype(dtype, x_train)
+    xc = tiling.pad_features(x_train, m, dtype=dtype)
+    yc = tiling.pad_vector(y_train, m, dtype=dtype)
+    xtc = tiling.pad_features(x_test, m, dtype=dtype)
     fn = _fused_program_fn(full_cov, n_streams, backend, update_dtype, n, nh)
     env = fn(xc, yc, xtc, params)
     mean = env["mean"].reshape(-1)[:nh]
@@ -336,6 +376,94 @@ def predict_fused(
     return result, state
 
 
+def predict_fused_batched(
+    x_train: jax.Array,
+    y_train: jax.Array,
+    x_test: jax.Array,
+    params: km.SEKernelParams,
+    m: int,
+    *,
+    full_cov: bool = False,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    update_dtype=None,
+    dtype=None,
+    with_state: bool = False,
+    batch_dispatch: str = "flat",
+):
+    """Fused prediction for B independent GPs in ONE batched program.
+
+    x_train (B, n, D) / y_train (B, n) / x_test (B, n̂, D) stacked problems
+    of identical shape; ``params`` leaves may be scalars (shared) or (B,)
+    (per-problem).  The same lru-cached Plan as the single-problem program
+    drives all B problems — identical launch count, every launch B times
+    wider (DESIGN.md §9).  Shares :func:`_fused_program_fn`'s jit cache with
+    the unbatched path (jit re-specializes on the leading B axis).
+
+    Returns mean (B, n̂), or ``(mean, sigma)`` with sigma (B, n̂, n̂) when
+    ``full_cov``; with ``with_state=True`` also the stacked
+    :class:`PosteriorState` (leading B axis on lpacked/alpha/x_chunks).
+    """
+    b, n = x_train.shape[0], x_train.shape[1]
+    nh = x_test.shape[1]
+    dtype = _resolve_dtype(dtype, x_train)
+    xc = tiling.pad_features(x_train, m, dtype=dtype)    # (B, M, m, D)
+    yc = tiling.pad_vector(y_train, m, dtype=dtype)      # (B, M, m)
+    xtc = tiling.pad_features(x_test, m, dtype=dtype)    # (B, Q, m, D)
+    fn = _fused_program_fn(
+        full_cov, n_streams, backend, update_dtype, n, nh, batch_dispatch
+    )
+    env = fn(xc, yc, xtc, params)
+    mean = env["mean"].reshape(b, -1)[:, :nh]
+    if full_cov:
+        q_tiles = xtc.shape[1]
+        sigma_tiles = env["prior"].reshape(b, q_tiles, q_tiles, m, m)
+        result = (mean, tiling.untile_dense(sigma_tiles)[:, :nh, :nh])
+    else:
+        result = mean
+    if not with_state:
+        return result
+    state = PosteriorState(
+        lpacked=env["packed"], alpha=env["alpha"], x_chunks=xc, n=n, m=m, params=params
+    )
+    return result, state
+
+
+def predict_from_state_batched(
+    state: PosteriorState,
+    x_test: jax.Array,
+    *,
+    full_cov: bool = False,
+    n_streams: Optional[int] = None,
+    dtype=None,
+):
+    """Warm batched prediction from a stacked :class:`PosteriorState`.
+
+    The state holds B factors/weights (leading B axis); x_test (B, n̂, D).
+    Reuses the cached O(n^3) work and runs only the cross-covariance / mean
+    (and optionally the matrix-solve tail) — all through the batched
+    executor plans.  Assembly uses the jnp tile kernel (per-problem params).
+    """
+    params = state.params
+    b, nh = x_test.shape[0], x_test.shape[1]
+    dtype = state.x_chunks.dtype if dtype is None else jnp.dtype(dtype)
+    xtc = tiling.pad_features(x_test, state.m, dtype=dtype)
+    kstar = assemble_cross_tiles_batched(xtc, state.x_chunks, params, nh, state.n)
+    mean = triangular.tiled_matvec(kstar, state.alpha).reshape(b, -1)[:, :nh]
+    if not full_cov:
+        return mean
+
+    # L V = K_{X,X̂}:  B tiles are the per-problem transpose grids of K_*.
+    b_tiles = jnp.einsum("zqiab->ziqba", kstar)
+    v = triangular.forward_substitution_matrix(
+        state.lpacked, b_tiles, n_streams=n_streams
+    )
+    w = triangular.tiled_gram(v)                         # (B, Q, Q, mq, mq)
+    prior = assemble_prior_tiles_batched(xtc, params, nh)
+    sigma = tiling.untile_dense(prior - w)[:, :nh, :nh]
+    return mean, sigma
+
+
 def nlml_program_env(
     x_train: jax.Array,
     y_train: jax.Array,
@@ -345,7 +473,8 @@ def nlml_program_env(
     n_streams: Optional[int] = None,
     backend: str = "jnp",
     update_dtype=None,
-    dtype=jnp.float32,
+    dtype=None,
+    batch_dispatch: str = "flat",
 ):
     """Run the NLML prefix of the fused program (DESIGN.md §8).
 
@@ -360,12 +489,19 @@ def nlml_program_env(
     Fully traceable under ``jax.grad``: jnp ops differentiate natively and
     the Pallas tile ops carry reference VJPs; assembly falls back to the jnp
     tile kernel when the hyperparameters are traced (executor._cov_batch_fn).
+
+    Problem-batched with x_train (B, n, D) / y_train (B, n): the env buffers
+    gain the leading B axis and ``env["alpha"]`` / ``env["packed"]`` hold B
+    independent weight chunks / factors (DESIGN.md §9).
     """
-    n = x_train.shape[0]
-    xc = pad_features(x_train.astype(dtype), m)
-    yc = pad_vector(y_train.astype(dtype), m)
-    xtc = jnp.zeros((0, m, xc.shape[-1]), dtype)
-    fn = _fused_program_fn(False, n_streams, backend, update_dtype, n, 0)
+    n = x_train.shape[-2]
+    dtype = _resolve_dtype(dtype, x_train)
+    xc = tiling.pad_features(x_train, m, dtype=dtype)
+    yc = tiling.pad_vector(y_train, m, dtype=dtype)
+    xtc = jnp.zeros(xc.shape[:-3] + (0, m, xc.shape[-1]), dtype)
+    fn = _fused_program_fn(
+        False, n_streams, backend, update_dtype, n, 0, batch_dispatch
+    )
     return fn(xc, yc, xtc, params), yc
 
 
@@ -380,7 +516,7 @@ def predict(
     n_streams: Optional[int] = None,
     backend: str = "jnp",
     update_dtype=None,
-    dtype=jnp.float32,
+    dtype=None,
     fused: bool = True,
 ):
     """Tiled GP prediction.
@@ -433,9 +569,10 @@ def predict_monolithic(
     params: km.SEKernelParams,
     *,
     full_cov: bool = False,
-    dtype=jnp.float32,
+    dtype=None,
 ):
     """Reference (cuSOLVER-analogue) dense pipeline: one-call Cholesky."""
+    dtype = _resolve_dtype(dtype, x_train)
     x = x_train.astype(dtype)
     y = y_train.astype(dtype)
     xt = x_test.astype(dtype)

@@ -53,6 +53,31 @@ def pad_amount(n: int, m: int) -> int:
     return (-n) % m
 
 
+def pad_features(x: jax.Array, m: int, *, dtype=None) -> jax.Array:
+    """(n, D) -> (M, m, D) or (B, n, D) -> (B, M, m, D) zero-padded chunks.
+
+    The problem-batch axis B is optional and preserved (DESIGN.md §9).
+    ``dtype=None`` keeps the input dtype — callers pass an explicit dtype
+    when they want a cast, instead of relying on an implicit float32.
+    """
+    if dtype is not None:
+        x = x.astype(dtype)
+    pad = pad_amount(x.shape[-2], m)
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)])
+    return x.reshape(x.shape[:-2] + (-1, m, x.shape[-1]))
+
+
+def pad_vector(y: jax.Array, m: int, *, dtype=None) -> jax.Array:
+    """(n,) -> (M, m) or (B, n) -> (B, M, m) zero-padded chunks."""
+    if dtype is not None:
+        y = y.astype(dtype)
+    pad = pad_amount(y.shape[-1], m)
+    if pad:
+        y = jnp.pad(y, [(0, 0)] * (y.ndim - 1) + [(0, pad)])
+    return y.reshape(y.shape[:-1] + (-1, m))
+
+
 def tile_dense(a: jax.Array, m: int) -> jax.Array:
     """(R, C) -> (R/m, C/m, m, m) tile grid.  R, C must divide by m."""
     r, c = a.shape
@@ -62,9 +87,9 @@ def tile_dense(a: jax.Array, m: int) -> jax.Array:
 
 
 def untile_dense(tiles: jax.Array) -> jax.Array:
-    """(Mr, Mc, m, m) -> (Mr*m, Mc*m)."""
-    mr, mc, m, _ = tiles.shape
-    return tiles.transpose(0, 2, 1, 3).reshape(mr * m, mc * m)
+    """(Mr, Mc, m, m) -> (Mr*m, Mc*m); leading batch axes are preserved."""
+    mr, mc, m, mc2 = tiles.shape[-4:]
+    return tiles.swapaxes(-3, -2).reshape(tiles.shape[:-4] + (mr * m, mc * mc2))
 
 
 def tile_vector(v: jax.Array, m: int) -> jax.Array:

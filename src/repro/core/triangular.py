@@ -18,6 +18,10 @@ prediction program (DESIGN.md §7) the same TRSV/GEMV task DAGs are embedded
 into the whole-pipeline schedule with cross-stage edges, so solve rows start
 the moment their factor tiles resolve instead of waiting for the full
 factorization.
+
+All helpers accept an optional leading problem-batch axis B (DESIGN.md §9):
+a packed factor (B, T, m, m) with rhs (B, M, m) / (B, M, Q, m, mq) solves B
+independent systems through the same lru-cached executor plan.
 """
 
 from __future__ import annotations
@@ -51,7 +55,8 @@ def _solve_lower(lii: jax.Array, rhs: jax.Array, *, transpose: bool = False) -> 
 
 
 def _check_shapes(lpacked: jax.Array, chunks: jax.Array) -> None:
-    assert tiling.num_packed_tiles(chunks.shape[0]) == lpacked.shape[0]
+    m_tiles = chunks.shape[1] if lpacked.ndim == 4 else chunks.shape[0]
+    assert tiling.num_packed_tiles(m_tiles) == lpacked.shape[-3]
 
 
 def forward_substitution(
@@ -90,12 +95,22 @@ def backward_substitution_matrix(
 
 
 def tiled_matvec(a_tiles: jax.Array, x_chunks: jax.Array) -> jax.Array:
-    """(P, Q, m, mq) tile grid times (Q, mq) chunked vector -> (P, m)."""
+    """(P, Q, m, mq) tile grid times (Q, mq) chunked vector -> (P, m).
+
+    Batched: (B, P, Q, m, mq) x (B, Q, mq) -> (B, P, m).
+    """
+    if a_tiles.ndim == 5:
+        return jnp.einsum("zpqab,zqb->zpa", a_tiles, x_chunks)
     return jnp.einsum("pqab,qb->pa", a_tiles, x_chunks)
 
 
 def tiled_gram(v_tiles: jax.Array) -> jax.Array:
-    """W = V^T V for V tiles (M, Q, m, mq) -> W tiles (Q, Q, mq, mq)."""
+    """W = V^T V for V tiles (M, Q, m, mq) -> W tiles (Q, Q, mq, mq).
+
+    Batched: (B, M, Q, m, mq) -> (B, Q, Q, mq, mq).
+    """
+    if v_tiles.ndim == 5:
+        return jnp.einsum("zipab,ziqac->zpqbc", v_tiles, v_tiles)
     return jnp.einsum("ipab,iqac->pqbc", v_tiles, v_tiles)
 
 
@@ -120,9 +135,10 @@ def kinv_tiles_from_factor(
     """
     m_tiles = executor.m_tiles_of_packed(lpacked)
     m = lpacked.shape[-1]
-    z = forward_substitution_matrix(
-        lpacked, identity_tiles(m_tiles, m, lpacked.dtype), n_streams=n_streams
-    )
+    eye = identity_tiles(m_tiles, m, lpacked.dtype)
+    if lpacked.ndim == 4:  # problem-batched factor: one RHS per problem
+        eye = jnp.broadcast_to(eye, (lpacked.shape[0],) + eye.shape)
+    z = forward_substitution_matrix(lpacked, eye, n_streams=n_streams)
     return tiled_gram(z)
 
 
@@ -131,7 +147,10 @@ def logdet_from_factor(lpacked: jax.Array, m_tiles: int, n_valid: Optional[int] 
 
     Padded rows contribute log(1) = 0 by construction (identity padding), so
     no masking is required; n_valid is accepted for interface clarity.
+    Batched factors (B, T, m, m) return per-problem log-determinants (B,).
     """
     del n_valid
-    diags = jax.vmap(jnp.diag)(lpacked[_diag_slots(m_tiles)])  # (M, m)
-    return 2.0 * jnp.sum(jnp.log(diags))
+    slots = _diag_slots(m_tiles)
+    tiles = lpacked[:, slots] if lpacked.ndim == 4 else lpacked[slots]
+    diags = jnp.diagonal(tiles, axis1=-2, axis2=-1)  # (..., M, m)
+    return 2.0 * jnp.sum(jnp.log(diags), axis=(-2, -1))

@@ -20,6 +20,20 @@ backend because both backends compute the same function.  Covariance
 the hyperparameters are traced (a gradient trace) the executor falls back to
 the differentiable jnp assembly tile automatically
 (``repro.core.executor._cov_batch_fn``).
+
+Problem batching (DESIGN.md §9): these per-tile signatures are what makes
+the executor's problem-batch dimension free on the Pallas backend.  A tile
+op never knows *which* problem a tile belongs to, so the executor's
+``batch_dispatch="flat"`` mode reshapes the gathered ``(B, G, m, m)``
+operands to ``(B*G, m, m)`` and the single ``jax.vmap`` level that batches
+a level's tiles becomes the Pallas grid axis covering all B problems — B is
+absorbed into the grid of ONE kernel launch.  ``batch_dispatch="vmap"``
+instead nests a second ``jax.vmap`` over the problem axis (two batching
+dims on the ``pallas_call``).  Both are measured by
+``benchmarks/fig9_batched_fleet.py``; the *assembly* kernels stay
+single-problem because their baked-in hyperparameters cannot vary across
+the batch (per-problem params use the jnp tile kernel,
+``executor._cov_batch_fn_batched``).
 """
 
 from __future__ import annotations
