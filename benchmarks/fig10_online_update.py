@@ -1,0 +1,81 @@
+"""Fig. 10 (ours): online update vs full re-factorization latency.
+
+The serving question of DESIGN.md §10: a live GP absorbs b new observations
+— how much cheaper is the tiled block Cholesky append (O(n^2 b),
+``PosteriorState.extend``) than the full O(n^3) refit the paper's fixed
+training set implies?  This sweeps n and the append size b and reports both
+latencies plus the speedup; the eviction sweep (``shrink``, the
+sliding-window downdate) is timed at one tile per eviction.
+
+The acceptance bar (ISSUE 5): the append beats the full re-factorization
+for n >= 256 with b <= tile_size.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, row
+from repro.core import predict as pred
+from repro.core.kernels_math import SEKernelParams
+
+
+def run(ns=(256, 512, 1024), bs=(1, 16, 64), d=8, out=print, backend="jnp"):
+    rng = np.random.default_rng(0)
+    params = SEKernelParams.paper_defaults()
+    results = []
+    for n in ns:
+        m = max(n // 8, 16)
+        x = jnp.asarray(rng.standard_normal((n + max(bs), d)).astype(np.float32))
+        y = jnp.asarray(rng.standard_normal(n + max(bs)).astype(np.float32))
+        state = pred.posterior_state(x[:n], y[:n], params, m, backend=backend)
+        for b in bs:
+            xb, yb = x[n : n + b], y[n : n + b]
+
+            def extend(xb, yb):
+                s = state.extend(xb, yb, backend=backend, check_finite=False)
+                return s.lpacked, s.alpha
+
+            def refit(xb, yb):
+                # the honest O(n^3) baseline: the jitted fused q_tiles=0
+                # program (assembly -> factorization -> both solves)
+                env, _ = pred.nlml_program_env(
+                    jnp.concatenate([x[:n], xb]),
+                    jnp.concatenate([y[:n], yb]),
+                    params,
+                    m,
+                    backend=backend,
+                )
+                return env["packed"], env["alpha"]
+
+            t_up, _ = bench(extend, xb, yb)
+            t_full, _ = bench(refit, xb, yb)
+            speed = t_full / t_up
+            out(row(
+                f"fig10/update/n{n}/b{b}/m{m}", t_up,
+                f"refactor_us={t_full * 1e6:.0f} speedup={speed:.2f}",
+            ))
+            results.append({
+                "kind": "append", "n": n, "b": b, "m": m, "backend": backend,
+                "us_update": t_up * 1e6, "us_refactor": t_full * 1e6,
+                "speedup": speed,
+            })
+
+        # sliding-window eviction: one leading tile out
+        def evict():
+            s = state.shrink(m, backend=backend, check_finite=False)
+            return s.lpacked
+
+        t_ev, _ = bench(evict)
+        out(row(f"fig10/evict/n{n}/k{m}", t_ev, f"tile_size={m}"))
+        results.append({
+            "kind": "evict", "n": n, "b": m, "m": m, "backend": backend,
+            "us_update": t_ev * 1e6, "us_refactor": None, "speedup": None,
+        })
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -13,7 +13,7 @@ import numpy as np
 from benchmarks.common import bench, row
 from repro.core import cholesky as chol
 from repro.core import predict as pred
-from repro.core import triangular
+from repro.core import tiling, triangular
 from repro.core.kernels_math import SEKernelParams
 
 
@@ -27,9 +27,9 @@ def run(n: int = 1024, n_test: int = 1024, out=print):
 
     for m_tiles in (4, 16):
         m = n // m_tiles
-        xc = pred.pad_features(x, m)
-        yc = pred.pad_vector(y, m)
-        xtc = pred.pad_features(xt, m)
+        xc = tiling.pad_features(x, m)
+        yc = tiling.pad_vector(y, m)
+        xtc = tiling.pad_features(xt, m)
 
         assemble = jax.jit(lambda xc: pred.assemble_packed_covariance(xc, params, n))
         t, _ = bench(assemble, xc)

@@ -9,6 +9,9 @@ end-to-end problems/second for:
 * ``batched``  — one problem-batched fused program (GPBatch cold path),
 * ``loop``     — the same B problems as a Python loop over the
   single-problem fused program (same jit cache, B dispatches),
+* ``autobatch`` — ``jax.vmap`` of the whole single-problem ``predict_fused``
+  (ROADMAP bench hygiene): XLA autobatching with no shared executor plan —
+  quantifies what the *explicit* executor batching buys beyond vmap,
 
 plus the two Pallas/tile batch-dispatch strategies (``flat`` folds B into
 the kernel's batch/grid axis, ``vmap`` nests one more vmap level) so the
@@ -45,6 +48,21 @@ def run(n=256, bs=(1, 2, 4, 8), d=8, out=print, backend="jnp"):
 
         t_loop, _ = bench(loop, x, y, xt)
         out(row(f"fig9/loop/B{b}/n{n}", t_loop, f"problems_per_s={b / t_loop:.1f}"))
+
+        autob = jax.jit(jax.vmap(
+            lambda x1, y1, xt1: pred.predict_fused(x1, y1, xt1, params, m, backend=backend)
+        ))
+        t_auto, _ = bench(autob, x, y, xt)
+        out(row(
+            f"fig9/autobatch/B{b}/n{n}",
+            t_auto,
+            f"problems_per_s={b / t_auto:.1f} speedup_vs_loop={t_loop / t_auto:.3f}",
+        ))
+        results.append({
+            "B": b, "n": n, "m": m, "dispatch": "autobatch",
+            "us_batched": t_auto * 1e6, "us_loop": t_loop * 1e6,
+            "speedup_vs_loop": t_loop / t_auto,
+        })
 
         for mode in ("flat", "vmap"):
             fn = lambda x, y, xt, mode=mode: pred.predict_fused_batched(

@@ -131,6 +131,7 @@ def main() -> None:
         fig7_predict_scaling,
         fig8_train_scaling,
         fig9_batched_fleet,
+        fig10_online_update,
         mem_tiles,
     )
 
@@ -142,6 +143,7 @@ def main() -> None:
         fig6_cholesky_scaling.run(sizes=(128,), out=col.out("fig6"))
         fig8_train_scaling.run(sizes=(64,), out=col.out("fig8"))
         fleet = fig9_batched_fleet.run(n=128, bs=(1, 4), out=col.out("fig9"))
+        online = fig10_online_update.run(ns=(128,), bs=(1, 8), out=col.out("fig10"))
         mem_tiles.run(n=256, out=col.out("mem"))
         pipeline = _fused_vs_staged(128, col.out("pipeline"))
         counts = _executor_counts(tile_counts=(8,))
@@ -158,6 +160,10 @@ def main() -> None:
         fig8_train_scaling.run(sizes=tsizes, out=col.out("fig8"))
         fbs = (1, 2, 4) if args.quick else (1, 2, 4, 8, 16)
         fleet = fig9_batched_fleet.run(n=min(n, 256), bs=fbs, out=col.out("fig9"))
+        osizes = (256, 512) if args.quick else (256, 512, 1024)
+        online = fig10_online_update.run(
+            ns=osizes, bs=(1, 16, 64), out=col.out("fig10")
+        )
         mem_tiles.run(n=n, out=col.out("mem"))
         pipeline = _fused_vs_staged(min(n, 512), col.out("pipeline"))
         counts = _executor_counts()
@@ -168,6 +174,7 @@ def main() -> None:
             "executor_batches": counts,
             "fused_vs_staged": pipeline,
             "batched_fleet": fleet,
+            "online_update": online,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -14,8 +14,16 @@ one problem-batched program factors the whole fleet, and each online batch
 answers B × batch requests in a single launch sequence — compare its
 req/s against the single-GP numbers to see the wavefront-width win.
 
+``--online`` turns the server into a *streaming* one (DESIGN.md §10):
+prediction requests interleave with observation arrivals, absorbed by
+`GaussianProcess.update` — the O(n^2 b) block Cholesky append — under a
+`sliding_window` cap that evicts the oldest tile when the window overflows.
+It reports the served latency alongside update-vs-full-refactorization
+latency, the number the streaming subsystem exists to shrink.
+
     PYTHONPATH=src python examples/serve_gp.py [--n 4096] [--batches 32]
     PYTHONPATH=src python examples/serve_gp.py --fleet 8 --n 512
+    PYTHONPATH=src python examples/serve_gp.py --online --n 1024 --arrive 32
 """
 
 import argparse
@@ -103,6 +111,52 @@ def serve_fleet(args, cfg):
     )
 
 
+def serve_online(args, cfg):
+    """Streaming serving: requests interleave with observation arrivals."""
+    x_tr, y_tr, _, _ = make_dataset(args.n, 1, cfg, seed=0)
+
+    gp = GaussianProcess(
+        x_tr, y_tr, tile_size=args.tile, sliding_window=args.n
+    )
+    warm_probe = next(request_batches(cfg, args.batch, 1))
+    t0 = time.perf_counter()
+    jax.block_until_ready(gp.predict(warm_probe))
+    print(f"fused factor+cache (offline): {time.perf_counter() - t0:.2f}s for n={args.n}")
+
+    # one full refit of the same window (the jitted fused q_tiles=0
+    # program — the honest O(n^3) baseline), warmed before timing
+    def refit():
+        env, _ = pred.nlml_program_env(gp.x_train, gp.y_train, gp.params, args.tile)
+        return env["alpha"]
+
+    jax.block_until_ready(refit())
+    t0 = time.perf_counter()
+    jax.block_until_ready(refit())
+    t_refit = time.perf_counter() - t0
+
+    serve_lat, upd_lat = [], []
+    for i, xt in enumerate(request_batches(cfg, args.batch, args.batches)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(gp.predict(xt))
+        serve_lat.append(time.perf_counter() - t0)
+        # observation arrivals: the request batch's first rows come back
+        # labelled; absorb them under the sliding window
+        u, yv = simulate(args.arrive + cfg.n_regressors - 1, cfg, seed=1000 + i)
+        x_new, y_new = nfir_features(u, yv, cfg.n_regressors)
+        t0 = time.perf_counter()
+        gp.update(x_new.astype(np.float32), y_new.astype(np.float32))
+        jax.block_until_ready(gp.posterior().alpha)
+        upd_lat.append(time.perf_counter() - t0)
+    report(f"online: served {args.batches} batches x {args.batch}", serve_lat, args.batch)
+    upd = np.asarray(upd_lat[1:]) * 1e3
+    print(
+        f"online: absorbed {args.arrive} obs/batch in p50={np.percentile(upd, 50):.2f}ms "
+        f"p99={np.percentile(upd, 99):.2f}ms vs full refactorize {t_refit * 1e3:.2f}ms "
+        f"({t_refit * 1e3 / np.percentile(upd, 50):.1f}x)"
+    )
+    assert gp.y_train.shape[0] <= args.n, "sliding window must cap the set"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=4096)
@@ -116,10 +170,20 @@ def main():
         metavar="B",
         help="serve B independent GPs through one GPBatch program",
     )
+    ap.add_argument(
+        "--online",
+        action="store_true",
+        help="interleave observation arrivals with requests (streaming updates)",
+    )
+    ap.add_argument(
+        "--arrive", type=int, default=32, help="observations arriving per batch (--online)"
+    )
     args = ap.parse_args()
 
     cfg = MSDConfig()
-    if args.fleet > 0:
+    if args.online:
+        serve_online(args, cfg)
+    elif args.fleet > 0:
         serve_fleet(args, cfg)
     else:
         serve_single(args, cfg)

@@ -2,5 +2,6 @@
 
 from repro.core.gp import GaussianProcess, GPBatch
 from repro.core.kernels_math import SEKernelParams
+from repro.core.update import CholeskyUpdateError
 
-__all__ = ["GaussianProcess", "GPBatch", "SEKernelParams"]
+__all__ = ["GaussianProcess", "GPBatch", "SEKernelParams", "CholeskyUpdateError"]

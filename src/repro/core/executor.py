@@ -281,7 +281,8 @@ def _tile_dispatch(fn, batched: bool, mode: str = "flat"):
     def flat(*arrays):
         b, g = arrays[0].shape[:2]
         out = f(*[a.reshape((b * g,) + a.shape[2:]) for a in arrays])
-        return out.reshape((b, g) + out.shape[1:])
+        unflatten = lambda o: o.reshape((b, g) + o.shape[1:])
+        return jax.tree_util.tree_map(unflatten, out)  # multi-output ops too
 
     return flat
 
@@ -794,3 +795,325 @@ def run_solve(
                 upd = jnp.einsum(ein, take(lpacked, bt.a), take(rhs, bt.b))
                 rhs = add(rhs, bt.out, -upd.astype(rhs.dtype))
     return rhs
+
+
+# ---------------------------------------------------------------------------
+# Streaming updates (DESIGN.md §10): block Cholesky append / rank update.
+#
+# The append plan's buffer environment:
+#   "packed" (T_store, m, m)  the frozen existing factor (read-only)
+#   "row"    (R + 1, m, m)    the appended tile-row; slot R is the corner
+# plus the read-only feature chunks xc and the new row chunk x_row.  The
+# rank-update plan's environment:
+#   "packed" (T', m, m)       the factor, rewritten column by column
+#   "w"      (M', m, m)       the rank-b carry blocks
+#   "xaux/yaux/caux" (M', m, m)  per-column X / Y / C auxiliaries
+# All buffers accept the optional leading problem-batch axis B (§9).
+# ---------------------------------------------------------------------------
+
+
+def _append_batch(
+    op: str, tasks: Sequence[sch.Task], r_tiles: int, m_store: int
+) -> Batch:
+    """Gather/scatter indices of one append batch.
+
+    The packed store may hold ``m_store`` tile-rows with ``m_store >
+    r_tiles`` (refilling a partially padded trailing row reads only the
+    frozen prefix rows < R but indexes slots of the full store).
+    """
+    slot = tiling.packed_index
+    tasks = tuple(tasks)
+    if op in (sch.UASM, sch.UASMD):
+        cols = _arr([i for _, i, _, _ in tasks])
+        return Batch(op, tasks, out=cols, a=cols)
+    if op == sch.UTRSM:
+        rows = _arr([i for _, i, _, _ in tasks])
+        diag = _arr([slot(i, i, m_store) for _, i, _, _ in tasks])
+        return Batch(op, tasks, out=rows, a=diag, b=rows)
+    if op == sch.UGEMM:  # row_i -= row_j L(i,j)^T
+        tgt = _arr([i for _, i, _, _ in tasks])
+        src = _arr([j for _, _, j, _ in tasks])
+        til = _arr([slot(i, j, m_store) for _, i, j, _ in tasks])
+        return Batch(op, tasks, out=tgt, a=tgt, b=src, c=til)
+    if op == sch.USYRK:  # corner -= row_i row_i^T
+        tgt = _arr([r_tiles] * len(tasks))
+        panel = _arr([i for _, i, _, _ in tasks])
+        return Batch(op, tasks, out=tgt, a=tgt, b=panel)
+    if op == sch.UPOTRF:
+        d = _arr([r_tiles])
+        return Batch(op, tasks, out=d, a=d)
+    raise ValueError(op)
+
+
+@functools.lru_cache(maxsize=None)
+def update_append_plan(
+    r_tiles: int, m_store: int, n_streams: Optional[int] = None
+) -> Plan:
+    """Compile the one-tile-row append DAG into batched launches."""
+    if n_streams is None:
+        schedule = sch.build_update_schedule(r_tiles, kind="update_append")
+    else:
+        schedule = sch.build_wavefront_schedule(
+            r_tiles, n_streams, kind="update_append"
+        )
+    levels = []
+    for level in schedule.levels:
+        batches = []
+        for op, tasks in sch.split_by_op(level).items():
+            width = None if op in sch.BULK_OPS else n_streams
+            for chunk in sch.chunk_tasks(tasks, width):
+                batches.append(_append_batch(op, chunk, r_tiles, m_store))
+        levels.append(tuple(batches))
+    return Plan("update_append", r_tiles, n_streams, tuple(levels))
+
+
+def run_append(
+    lpacked: jax.Array,
+    xc: jax.Array,
+    x_row: jax.Array,
+    params,
+    r_tiles: int,
+    n_valid_new,
+    *,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    update_dtype=None,
+    batch_dispatch: str = "flat",
+) -> jax.Array:
+    """Solve one appended tile-row against the frozen factor (DESIGN.md §10).
+
+    lpacked: the existing packed factor, (T_store, m, m) or (B, T_store,
+    m, m); xc the matching padded feature chunks; x_row (m, D) / (B, m, D)
+    the (padded) chunk of the appended row; ``r_tiles`` the number of frozen
+    prefix rows the new row is solved against (``r_tiles == m_store`` grows
+    the factor; ``r_tiles == m_store - 1`` recomputes a partially padded
+    trailing row in place).  ``n_valid_new`` is the total valid observation
+    count *after* the append — prefix rows must be fully valid (padding
+    lives only in the appended row).  It may be a traced scalar on the jnp
+    backend; the Pallas assembly bakes it in as a compile-time constant
+    (like the hyperparameters).
+
+    Returns the row buffer (R + 1, m, m): the R solved off-diagonal tiles
+    followed by the factored corner.  The caller scatters it into a grown
+    or refilled packed store (tiling.grow_packed_indices /
+    tiling.replace_last_row_indices).
+    """
+    batched = xc.ndim == 4
+    m_store = xc.shape[-3]
+    m = xc.shape[-2]
+    if r_tiles not in (m_store, m_store - 1):
+        raise ValueError(
+            f"r_tiles must be m_store ({m_store}, grow) or m_store - 1 "
+            f"(refill); got {r_tiles}"
+        )
+    if tiling.num_packed_tiles(m_store) != lpacked.shape[-3]:
+        raise ValueError(
+            f"feature chunks ({m_store} tiles) inconsistent with packed "
+            f"store {lpacked.shape}"
+        )
+    plan = update_append_plan(r_tiles, m_store, n_streams)
+    take, put, _ = _env_ops(batched)
+    lead = (xc.shape[0],) if batched else ()
+    dtype = lpacked.dtype
+
+    potrf, trsm, syrk, gemm = get_ops(backend)
+    potrf_b = _tile_dispatch(potrf, batched, batch_dispatch)
+    trsm_b = _tile_dispatch(trsm, batched, batch_dispatch)
+    syrk_b = _tile_dispatch(
+        functools.partial(syrk, update_dtype=update_dtype), batched, batch_dispatch
+    )
+    gemm_b = _tile_dispatch(
+        functools.partial(gemm, update_dtype=update_dtype), batched, batch_dispatch
+    )
+    cov_fn = _cov_batch_fn_batched if batched else _cov_batch_fn
+    # prefix columns are fully valid; the appended row masks at n_valid_new
+    crossf = cov_fn(backend, params, n_valid_new, r_tiles * m, False)
+    diagf = cov_fn(backend, params, n_valid_new, n_valid_new, True)
+
+    row = jnp.zeros(lead + (r_tiles + 1, m, m), dtype)
+    row0 = r_tiles * m
+
+    def bcast_row(g):  # the row chunk, repeated for each gathered tile
+        if batched:
+            return jnp.broadcast_to(x_row[:, None], lead + (g,) + x_row.shape[1:])
+        return jnp.broadcast_to(x_row[None], (g,) + x_row.shape)
+
+    def off(idx):
+        return jnp.asarray(idx * m, jnp.int32)
+
+    for level in plan.levels:
+        for bt in level:
+            if bt.op == sch.UASM:
+                tiles = crossf(
+                    bcast_row(bt.size), take(xc, bt.a),
+                    jnp.full((bt.size,), row0, jnp.int32), off(bt.a),
+                )
+                row = put(row, bt.out, tiles)
+            elif bt.op == sch.UASMD:
+                tiles = diagf(
+                    bcast_row(1), bcast_row(1),
+                    jnp.full((1,), row0, jnp.int32),
+                    jnp.full((1,), row0, jnp.int32),
+                )
+                row = put(row, bt.out, tiles)
+            elif bt.op == sch.UTRSM:
+                row = put(
+                    row, bt.out, trsm_b(take(lpacked, bt.a), take(row, bt.b))
+                )
+            elif bt.op == sch.UGEMM:
+                row = put(
+                    row,
+                    bt.out,
+                    gemm_b(take(row, bt.a), take(row, bt.b), take(lpacked, bt.c)),
+                )
+            elif bt.op == sch.USYRK:
+                row = put(
+                    row, bt.out, syrk_b(take(row, bt.a), take(row, bt.b))
+                )
+            elif bt.op == sch.UPOTRF:
+                row = put(row, bt.out, potrf_b(take(row, bt.a)))
+            else:
+                raise ValueError(bt.op)
+    return row
+
+
+# -- rank-b up/downdate ------------------------------------------------------
+
+
+def _rank_batch(op: str, tasks: Sequence[sch.Task], m: int) -> Batch:
+    """Gather/scatter indices of one rank-update batch."""
+    slot = tiling.packed_index
+    tasks = tuple(tasks)
+    if op == sch.UPREP:
+        rows = _arr([i for _, i, _, _ in tasks])
+        diag = _arr([slot(i, i, m) for _, i, _, _ in tasks])
+        return Batch(op, tasks, out=rows, a=diag)
+    if op == sch.UPROW:  # L'(i,j) = L(i,j) X_j^T + s W_i Y_j^T
+        tgt = _arr([slot(i, j, m) for _, i, j, _ in tasks])
+        wrows = _arr([i for _, i, _, _ in tasks])
+        cols = _arr([j for _, _, j, _ in tasks])
+        return Batch(op, tasks, out=tgt, a=tgt, b=wrows, c=cols)
+    if op == sch.UCARRY:  # W_i <- (W_i - L'(i,j) Y_j) C_j^{-T}
+        wrows = _arr([i for _, i, _, _ in tasks])
+        til = _arr([slot(i, j, m) for _, i, j, _ in tasks])
+        cols = _arr([j for _, _, j, _ in tasks])
+        return Batch(op, tasks, out=wrows, a=til, b=wrows, c=cols)
+    raise ValueError(op)
+
+
+@functools.lru_cache(maxsize=None)
+def update_rank_plan(m_tiles: int, n_streams: Optional[int] = None) -> Plan:
+    """Compile the blocked cholupdate sweep into batched launches."""
+    if n_streams is None:
+        schedule = sch.build_update_schedule(m_tiles, kind="update_rank")
+    else:
+        schedule = sch.build_wavefront_schedule(
+            m_tiles, n_streams, kind="update_rank"
+        )
+    return _compile(schedule, n_streams, _rank_batch)
+
+
+def get_update_ops(backend: str, sign: float):
+    """(uprep, uprow, ucarry) per-tile ops of the rank-update sweep.
+
+    ``sign=+1.0``: L' L'^T = L L^T + W W^T (eviction of a leading window is
+    a *positive* update of the trailing factor).  ``sign=-1.0``: the true
+    hyperbolic downdate L L^T - W W^T; its Cholesky heads go NaN when the
+    downdated matrix is not positive definite — callers check and fall back
+    to a full refactorization (repro.core.update).
+    """
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        potrf_tile = kops.potrf
+        carry = kops.carry_update
+    elif backend == "jnp":
+        potrf_tile = _potrf_jnp
+
+        def carry(wi, lij, yj, cj):
+            b = wi - lij @ yj
+            return jax.lax.linalg.triangular_solve(
+                cj, b, left_side=False, lower=True, transpose_a=True
+            )
+    else:
+        raise ValueError(f"unknown backend: {backend}")
+
+    def uprep(ljj, wj):
+        d = ljj @ ljj.T + sign * (wj @ wj.T)
+        lnew = potrf_tile(d)
+        x = jax.lax.linalg.triangular_solve(lnew, ljj, left_side=True, lower=True)
+        y = jax.lax.linalg.triangular_solve(lnew, wj, left_side=True, lower=True)
+        eye = jnp.eye(ljj.shape[-1], dtype=ljj.dtype)
+        c = potrf_tile(eye - sign * (y.T @ y))
+        return lnew, x, y, c
+
+    def uprow(lij, wi, xj, yj):
+        return (lij @ xj.T + sign * (wi @ yj.T)).astype(lij.dtype)
+
+    return uprep, uprow, carry
+
+
+def run_rank_update(
+    lpacked: jax.Array,
+    w: jax.Array,
+    *,
+    sign: float = 1.0,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    batch_dispatch: str = "flat",
+) -> Tuple[jax.Array, jax.Array]:
+    """Blocked rank-b up/downdate: L' L'^T = L L^T + sign * W W^T.
+
+    lpacked (T, m, m) packed factor; w (M, m, m) carry blocks (one per
+    tile-row; unused trailing columns of a rank-b < m carry must be zero —
+    they propagate zeros through Y and keep C identity there).  Optional
+    leading problem-batch axis B on both (§9).  Returns (new factor, final
+    carry).  NaNs in the new factor signal a failed (non-PD) downdate.
+    """
+    batched = lpacked.ndim == 4
+    take, put, _ = _env_ops(batched)
+    m_tiles = w.shape[1] if batched else w.shape[0]
+    if tiling.num_packed_tiles(m_tiles) != lpacked.shape[-3]:
+        raise ValueError(
+            f"carry rows {m_tiles} inconsistent with packed store {lpacked.shape}"
+        )
+    m = lpacked.shape[-1]
+    lead = (lpacked.shape[0],) if batched else ()
+    plan = update_rank_plan(m_tiles, n_streams)
+    uprep, uprow, ucarry = get_update_ops(backend, sign)
+    uprep_b = _tile_dispatch(uprep, batched, batch_dispatch)
+    uprow_b = _tile_dispatch(uprow, batched, batch_dispatch)
+    ucarry_b = _tile_dispatch(ucarry, batched, batch_dispatch)
+
+    xaux = jnp.zeros(lead + (m_tiles, m, m), lpacked.dtype)
+    yaux = jnp.zeros_like(xaux)
+    caux = jnp.zeros_like(xaux)
+    for level in plan.levels:
+        for bt in level:
+            if bt.op == sch.UPREP:
+                lnew, x, y, c = uprep_b(take(lpacked, bt.a), take(w, bt.out))
+                lpacked = put(lpacked, bt.a, lnew)
+                xaux = put(xaux, bt.out, x)
+                yaux = put(yaux, bt.out, y)
+                caux = put(caux, bt.out, c)
+            elif bt.op == sch.UPROW:
+                lpacked = put(
+                    lpacked,
+                    bt.out,
+                    uprow_b(
+                        take(lpacked, bt.a), take(w, bt.b),
+                        take(xaux, bt.c), take(yaux, bt.c),
+                    ),
+                )
+            elif bt.op == sch.UCARRY:
+                w = put(
+                    w,
+                    bt.out,
+                    ucarry_b(
+                        take(w, bt.b), take(lpacked, bt.a),
+                        take(yaux, bt.c), take(caux, bt.c),
+                    ).astype(w.dtype),
+                )
+            else:
+                raise ValueError(bt.op)
+    return lpacked, w

@@ -56,8 +56,11 @@ class GaussianProcess:
     update_dtype: Optional[object] = None
     dtype: object = jnp.float32
     fused: bool = True
+    sliding_window: Optional[int] = None  # keep at most n_max observations
 
     def __post_init__(self):
+        if self.sliding_window is not None and self.sliding_window < 1:
+            raise ValueError(f"sliding_window must be >= 1, got {self.sliding_window}")
         x = jnp.asarray(self.x_train, self.dtype)
         if x.ndim == 1:  # (n,) convenience for 1-D problems
             x = x[:, None]
@@ -117,6 +120,96 @@ class GaussianProcess:
     def invalidate_cache(self) -> None:
         self._posterior = None
         self._posterior_key = None
+
+    # -- streaming updates (DESIGN.md §10) ----------------------------------
+
+    def _cache_warm(self) -> bool:
+        return self._posterior is not None and self._posterior_key == self._cache_key()
+
+    def update(self, x_new: jax.Array, y_new: jax.Array) -> "GaussianProcess":
+        """Absorb new observations online in O(n^2 b) — no re-factorization.
+
+        Appends ``(x_new, y_new)`` to the training set; when the posterior
+        cache is warm the cached factor/weights are *extended* in place via
+        the tiled block Cholesky append (``PosteriorState.extend``), so the
+        next ``predict`` skips straight to the warm tail.  A cold cache (or
+        a numerically failed append — NaN heads) falls back to the
+        established contract: the cache is invalidated and the next
+        prediction re-factorizes.  With ``sliding_window=n_max``, the oldest
+        observations are evicted (:meth:`forget`) once n exceeds n_max — in
+        whole-tile chunks, so eviction stays on the O(n^2) fast path.
+        """
+        from repro.core import update as upd
+
+        x_new = self._prep(x_new)
+        y_new = jnp.asarray(y_new, self.dtype).reshape(-1)
+        if x_new.shape[0] != y_new.shape[0]:
+            raise ValueError(
+                f"update needs matching x_new (b, D) and y_new (b,); got "
+                f"{tuple(x_new.shape)} and {tuple(y_new.shape)}"
+            )
+        if x_new.shape[0] == 0:
+            return self
+        warm = self.pipeline == "tiled" and self._cache_warm()
+        state = self._posterior
+        self.x_train = jnp.concatenate([self.x_train, x_new], axis=0)
+        self.y_train = jnp.concatenate([self.y_train, y_new], axis=0)
+        if warm and x_new.shape[0] > 0:
+            try:
+                self._posterior = state.extend(
+                    x_new,
+                    y_new,
+                    n_streams=self.n_streams,
+                    backend=self.op_backend,
+                    update_dtype=self.update_dtype,
+                )
+                self._posterior_key = self._cache_key()
+            except upd.CholeskyUpdateError:
+                self.invalidate_cache()  # next predict refactorizes
+        else:
+            self.invalidate_cache()
+        if self.sliding_window is not None:
+            excess = self.y_train.shape[0] - self.sliding_window
+            if excess > 0:
+                # evict in whole-tile chunks so the O(n^2) downdate fast
+                # path applies: round the overflow up to a tile multiple
+                # (n stays <= n_max; slightly more than the overflow may
+                # go).  A window smaller than one tile evicts exactly.
+                m = self.tile_size
+                self.forget(min(-(-excess // m) * m, self.y_train.shape[0] - 1))
+        return self
+
+    def forget(self, k: int) -> "GaussianProcess":
+        """Evict the k oldest observations (sliding-window downdate).
+
+        Tile-aligned k on a warm cache runs the O(n^2 k) rank-update sweep
+        (``PosteriorState.shrink``); anything else (unaligned k, cold
+        cache, numerical failure) invalidates the cache so the next
+        prediction re-factorizes the kept window.
+        """
+        from repro.core import update as upd
+
+        n = self.y_train.shape[0]
+        if not 0 <= k < n:
+            raise ValueError(f"forget(k) needs 0 <= k < n = {n}; got {k}")
+        if k == 0:
+            return self
+        warm = self.pipeline == "tiled" and self._cache_warm()
+        state = self._posterior
+        self.x_train = self.x_train[k:]
+        self.y_train = self.y_train[k:]
+        # whole leading tiles on a warm cache; k < n already leaves >= 1 row
+        if warm and k % self.tile_size == 0:
+            try:
+                self._posterior = state.shrink(
+                    k, n_streams=self.n_streams, backend=self.op_backend
+                )
+                self._posterior_key = self._cache_key()
+            except upd.CholeskyUpdateError:
+                self.invalidate_cache()
+        else:
+            self.invalidate_cache()
+        return self
 
     # -- prediction ---------------------------------------------------------
 
@@ -348,7 +441,7 @@ class GPBatch:
         """
         key = self._cache_key()
         if self._posterior is None or self._posterior_key != key:
-            env, _ = pred.nlml_program_env(
+            env, yc = pred.nlml_program_env(
                 self.x_train,
                 self.y_train,
                 self.params,
@@ -366,6 +459,8 @@ class GPBatch:
                 n=self.x_train.shape[1],
                 m=self.tile_size,
                 params=self.params,
+                beta=env["y"],
+                y_chunks=yc,
             )
             self._posterior_key = key
         return self._posterior
@@ -373,6 +468,91 @@ class GPBatch:
     def invalidate_cache(self) -> None:
         self._posterior = None
         self._posterior_key = None
+
+    # -- streaming updates (DESIGN.md §10) ----------------------------------
+
+    def update(self, x_new: jax.Array, y_new: jax.Array) -> "GPBatch":
+        """Fleet-wide online absorption: every problem appends b points.
+
+        x_new (B, b, D) (or (B, b) for 1-D fleets) / y_new (B, b) — the
+        shared count b keeps the fleet on one tile geometry, so the whole
+        append runs as ONE problem-batched sweep through the same plans as
+        a single GP (every launch B times wider).  Warm caches are extended
+        in O(n^2 b); a cold cache or a numerically failed append (any
+        problem) invalidates and the next prediction re-factorizes the
+        fleet.
+        """
+        from repro.core import update as upd
+
+        x_new = jnp.asarray(x_new, self.dtype)
+        if x_new.ndim == 2 and self.x_train.shape[-1] == 1:
+            x_new = x_new[..., None]
+        y_new = jnp.asarray(y_new, self.dtype)
+        b = self.batch_size
+        if (
+            x_new.ndim != 3
+            or x_new.shape[0] != b
+            or x_new.shape[-1] != self.x_train.shape[-1]
+            or y_new.shape != x_new.shape[:-1]
+        ):
+            raise ValueError(
+                f"GPBatch.update needs stacked x_new (B, b, D) and y_new "
+                f"(B, b) with B == {b}; got x {tuple(jnp.asarray(x_new).shape)}, "
+                f"y {tuple(y_new.shape)}"
+            )
+        if x_new.shape[1] == 0:
+            return self
+        warm = self._cache_warm()
+        state = self._posterior
+        self.x_train = jnp.concatenate([self.x_train, x_new], axis=1)
+        self.y_train = jnp.concatenate([self.y_train, y_new], axis=1)
+        if warm and x_new.shape[1] > 0:
+            try:
+                self._posterior = state.extend(
+                    x_new,
+                    y_new,
+                    n_streams=self.n_streams,
+                    backend=self.op_backend,
+                    update_dtype=self.update_dtype,
+                    batch_dispatch=self.batch_dispatch,
+                )
+                self._posterior_key = self._cache_key()
+            except upd.CholeskyUpdateError:
+                self.invalidate_cache()
+        else:
+            self.invalidate_cache()
+        return self
+
+    def forget(self, k: int) -> "GPBatch":
+        """Evict every problem's k oldest observations (fleet downdate)."""
+        from repro.core import update as upd
+
+        n = self.y_train.shape[1]
+        if not 0 <= k < n:
+            raise ValueError(f"forget(k) needs 0 <= k < n = {n}; got {k}")
+        if k == 0:
+            return self
+        warm = self._cache_warm()
+        state = self._posterior
+        self.x_train = self.x_train[:, k:]
+        self.y_train = self.y_train[:, k:]
+        if warm and k % self.tile_size == 0:
+            try:
+                self._posterior = state.shrink(
+                    k,
+                    n_streams=self.n_streams,
+                    backend=self.op_backend,
+                    batch_dispatch=self.batch_dispatch,
+                )
+                self._posterior_key = self._cache_key()
+            except upd.CholeskyUpdateError:
+                self.invalidate_cache()
+        else:
+            self.invalidate_cache()
+        return self
+
+    def _cache_warm(self) -> bool:
+        return self._posterior is not None and self._posterior_key == self._cache_key()
 
     # -- prediction ---------------------------------------------------------
 

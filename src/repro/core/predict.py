@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -165,11 +166,26 @@ def assemble_prior_tiles_batched(
 # ---------------------------------------------------------------------------
 # Padding helpers — canonical implementations live in repro.core.tiling
 # (batch- and dtype-aware); these aliases are kept as deprecated re-exports
-# for callers of the old predict.* names.
+# for callers of the old predict.* names and warn on use.
 # ---------------------------------------------------------------------------
 
-pad_features = tiling.pad_features
-pad_vector = tiling.pad_vector
+
+def _deprecated_alias(fn, name: str):
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"repro.core.predict.{name} is deprecated; use "
+            f"repro.core.tiling.{name} (batch- and dtype-aware)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return fn(*args, **kwargs)
+
+    return wrapper
+
+
+pad_features = _deprecated_alias(tiling.pad_features, "pad_features")
+pad_vector = _deprecated_alias(tiling.pad_vector, "pad_vector")
 
 
 def _resolve_dtype(dtype, *arrays):
@@ -214,6 +230,14 @@ class PosteriorState:
     Everything a repeated ``predict`` needs that does not depend on x_test:
     re-using this skips covariance assembly, the factorization, and both
     substitutions — the O(n^3) part of the pipeline.
+
+    This is a *live* state (DESIGN.md §10): :meth:`extend` absorbs new
+    observations in O(n^2 b) via a block Cholesky append and :meth:`shrink`
+    evicts the oldest ones via tiled rank updates — no re-factorization.
+    The optional ``beta``/``y_chunks`` fields carry the forward-solve chunks
+    and padded targets the incremental maintenance needs; states built
+    before §10 (``None``) are reconstructed from the factor on demand
+    (two O(n^2) packed matvecs).
     """
 
     lpacked: jax.Array     # (T, m, m) packed Cholesky factor of K
@@ -222,6 +246,31 @@ class PosteriorState:
     n: int                 # valid training rows
     m: int                 # tile size
     params: km.SEKernelParams  # hyperparameters the factor was built with
+    beta: Optional[jax.Array] = None      # (M, m) forward-solve chunks L^{-1} y
+    y_chunks: Optional[jax.Array] = None  # (M, m) padded training targets
+
+    def extend(self, x_new: jax.Array, y_new: jax.Array, **kwargs) -> "PosteriorState":
+        """Absorb new observations in O(n^2 b) (block Cholesky append).
+
+        Keyword arguments are forwarded to
+        :func:`repro.core.update.extend_state` (``n_streams``, ``backend``,
+        ``update_dtype``, ``check_finite``).  Raises
+        :class:`repro.core.update.CholeskyUpdateError` on numerical failure
+        — callers fall back to a fresh :func:`posterior_state`.
+        """
+        from repro.core import update as upd
+
+        return upd.extend_state(self, x_new, y_new, **kwargs)
+
+    def shrink(self, k: int, **kwargs) -> "PosteriorState":
+        """Evict the k oldest observations in O(n^2 k) (tiled rank update).
+
+        ``k`` must be a multiple of the tile size (whole leading
+        tile-columns); see :func:`repro.core.update.shrink_state`.
+        """
+        from repro.core import update as upd
+
+        return upd.shrink_state(self, k, **kwargs)
 
 
 def posterior_state(
@@ -247,7 +296,8 @@ def posterior_state(
     beta = triangular.forward_substitution(lpacked, yc, n_streams=n_streams)
     alpha = triangular.backward_substitution(lpacked, beta, n_streams=n_streams)
     return PosteriorState(
-        lpacked=lpacked, alpha=alpha, x_chunks=xc, n=n, m=m, params=params
+        lpacked=lpacked, alpha=alpha, x_chunks=xc, n=n, m=m, params=params,
+        beta=beta, y_chunks=yc,
     )
 
 
@@ -370,8 +420,10 @@ def predict_fused(
         result = mean
     if not with_state:
         return result
+    # env["y"] holds beta after the in-place forward substitution (§7)
     state = PosteriorState(
-        lpacked=env["packed"], alpha=env["alpha"], x_chunks=xc, n=n, m=m, params=params
+        lpacked=env["packed"], alpha=env["alpha"], x_chunks=xc, n=n, m=m,
+        params=params, beta=env["y"], y_chunks=yc,
     )
     return result, state
 
@@ -424,7 +476,8 @@ def predict_fused_batched(
     if not with_state:
         return result
     state = PosteriorState(
-        lpacked=env["packed"], alpha=env["alpha"], x_chunks=xc, n=n, m=m, params=params
+        lpacked=env["packed"], alpha=env["alpha"], x_chunks=xc, n=n, m=m,
+        params=params, beta=env["y"], y_chunks=yc,
     )
     return result, state
 

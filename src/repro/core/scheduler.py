@@ -70,6 +70,35 @@ VTRSV = "vtrsv"          # matrix forward solve, diagonal tile of row i
 VGEMV = "vgemv"          # matrix forward propagation V_i -= L_ij V_j
 GRAM = "gram"            # Sigma = prior - V^T V (single closing task)
 
+# Streaming-update ops (DESIGN.md §10).  Two DAG families:
+#
+# *Append* ("update_append"): grow the factor by one tile-row R of new
+# observations.  The new row's tiles obey the same recurrence as the TRSM
+# row of a factorization step, solved against the frozen existing factor:
+#
+#   row_j = (K(R, j) - sum_{k<j} row_k L(j,k)^T) L(j,j)^{-T}      (j < R)
+#   corner = chol(K(R, R) - sum_j row_j row_j^T)
+#
+# *Rank update* ("update_rank"): L' L'^T = L L^T + sigma W W^T for a
+# tile-column carry W (sliding-window eviction uses sigma=+1 on the trailing
+# factor; a true downdate is sigma=-1 via hyperbolic rotations) — the
+# blocked cholupdate recurrence (per column j):
+#
+#   L'(j,j) = chol(L(j,j) L(j,j)^T + s W_j W_j^T)
+#   X_j = L'(j,j)^{-1} L(j,j);  Y_j = L'(j,j)^{-1} W_j
+#   C_j = chol(I - s Y_j^T Y_j)                 <- positivity check (s=-1)
+#   L'(i,j) = L(i,j) X_j^T + s W_i Y_j^T                          (i > j)
+#   W_i    <- (W_i - L'(i,j) Y_j) C_j^{-T}                        (i > j)
+UASM = "uasm"            # assemble cross tile K(x_row, x_j) of the new row
+UASMD = "uasmd"          # assemble the new diagonal (corner) tile
+UTRSM = "utrsm"          # row_j <- row_j L(j,j)^{-T}
+UGEMM = "ugemm"          # row_j -= row_k L(j,k)^T
+USYRK = "usyrk"          # corner -= row_j row_j^T
+UPOTRF = "upotrf"        # corner <- chol(corner)
+UPREP = "uprep"          # column head: L'(j,j) + the X/Y/C auxiliaries
+UPROW = "uprow"          # L'(i,j) = L(i,j) X_j^T + s W_i Y_j^T
+UCARRY = "ucarry"        # W_i <- (W_i - L'(i,j) Y_j) C_j^{-T}
+
 Task = Tuple[str, int, int, int]
 
 # Ops that the wavefront scheduler does NOT count against the stream pool:
@@ -80,11 +109,12 @@ Task = Tuple[str, int, int, int]
 # soon as their dependencies resolve — riding along with whatever BLAS wave
 # is current — so the cross-stage overlap is preserved without inflating the
 # launch count.
-BULK_OPS = frozenset({ASSEMBLE, CROSS, PRIOR, VINIT, XGEMV, GRAM})
+BULK_OPS = frozenset({ASSEMBLE, CROSS, PRIOR, VINIT, XGEMV, GRAM, UASM, UASMD})
 
 # Dispatch groups: tasks whose batched kernel is literally the same launch.
 # SYRK is GEMM with both panels equal, so the executor fuses both into one
-# trailing-update launch per level (executor.TRAIL).
+# trailing-update launch per level (executor.TRAIL).  The update-family bulk
+# ops are the assembly of the appended row (single batched launch).
 TRAIL_GROUP = "trail"
 
 
@@ -403,12 +433,119 @@ def build_nlml_schedule(m_tiles: int) -> Schedule:
     return build_program_schedule(m_tiles, 0, uncertainty=False)
 
 
+# ---------------------------------------------------------------------------
+# Streaming-update DAGs (DESIGN.md §10): block Cholesky append / rank update.
+# ---------------------------------------------------------------------------
+
+
+def append_tasks(r_tiles: int) -> List[Task]:
+    """Every task of a one-tile-row block-Cholesky append, in program order.
+
+    ``r_tiles`` is the number of *existing* factor tile-rows the new row is
+    solved against (the new row gets index R = r_tiles).  ``r_tiles=0``
+    degenerates to assembling + factoring a single corner tile (the very
+    first observations of a GP whose partial tile is being refilled).
+    """
+    r = r_tiles
+    tasks: List[Task] = []
+    for j in range(r):
+        tasks.append((UASM, j, -1, -1))
+    tasks.append((UASMD, r, -1, -1))
+    for j in range(r):
+        for k in range(j):
+            tasks.append((UGEMM, j, k, -1))
+        tasks.append((UTRSM, j, -1, -1))
+        tasks.append((USYRK, j, -1, -1))
+    tasks.append((UPOTRF, r, -1, -1))
+    return tasks
+
+
+def append_deps(task: Task, r_tiles: int) -> List[Task]:
+    """Direct dependencies of an append task.
+
+    The existing factor is a frozen *input* (its last writer completed in a
+    previous program), so edges only run between the new row's own tasks:
+    the TRSM-row recurrence chains UGEMM corrections before each diagonal
+    solve, and the corner accumulates SYRK contributions in program order.
+    """
+    op, i, j, _ = task
+    r = r_tiles
+    if op in (UASM, UASMD):
+        return []
+    if op == UTRSM:  # row_i <- row_i L(i,i)^{-T} after all corrections
+        return [(UGEMM, i, i - 1, -1) if i > 0 else (UASM, i, -1, -1)]
+    if op == UGEMM:  # row_i -= row_j L(i,j)^T; reads solved row_j
+        deps = [(UTRSM, j, -1, -1)]
+        deps.append((UGEMM, i, j - 1, -1) if j > 0 else (UASM, i, -1, -1))
+        return deps
+    if op == USYRK:  # corner -= row_i row_i^T (accumulation chain)
+        return [
+            (UTRSM, i, -1, -1),
+            (USYRK, i - 1, -1, -1) if i > 0 else (UASMD, r, -1, -1),
+        ]
+    if op == UPOTRF:
+        return [(USYRK, r - 1, -1, -1) if r > 0 else (UASMD, r, -1, -1)]
+    raise ValueError(op)
+
+
+def rank_update_tasks(m_tiles: int) -> List[Task]:
+    """Every task of a tiled rank-b up/downdate, in program order."""
+    tasks: List[Task] = []
+    for j in range(m_tiles):
+        tasks.append((UPREP, j, -1, -1))
+        for i in range(j + 1, m_tiles):
+            tasks.append((UPROW, i, j, -1))
+        for i in range(j + 1, m_tiles):
+            tasks.append((UCARRY, i, j, -1))
+    return tasks
+
+
+def rank_update_deps(task: Task, m_tiles: int) -> List[Task]:
+    """Direct dependencies of a rank-update task (blocked cholupdate).
+
+    The recurrence sweeps columns left to right; row i's carry W_i evolves
+    once per column, so every column-j task on row i waits for UCARRY(i,
+    j-1) — the last writer of W_i.  UPREP(j) writes the new diagonal into
+    the factor *and* the X/Y/C auxiliaries its column reads; UPROW(i,j)
+    overwrites L(i,j) in place (no later task reads the old value).
+    """
+    op, i, j, _ = task
+    if op == UPREP:  # reads L(j,j) and the settled carry W_j
+        return [(UCARRY, i, i - 1, -1)] if i > 0 else []
+    if op == UPROW:
+        deps = [(UPREP, j, -1, -1)]
+        if j > 0:
+            deps.append((UCARRY, i, j - 1, -1))
+        return deps
+    if op == UCARRY:
+        return [(UPROW, i, j, -1), (UPREP, j, -1, -1)]
+    raise ValueError(op)
+
+
+def build_update_schedule(
+    m_tiles: int, *, kind: str = "update_append"
+) -> Schedule:
+    """ASAP level schedule of an update DAG.
+
+    ``kind="update_append"``: ``m_tiles`` is the *existing* row count R the
+    appended row solves against.  ``kind="update_rank"``: ``m_tiles`` is the
+    size of the factor being up/downdated.
+    """
+    tasks, deps_fn = _dag(m_tiles, kind)
+    levels = _asap_levels(tasks, deps_fn)
+    return Schedule(m_tiles=m_tiles, levels=levels, kind=kind)
+
+
 def task_deps(task: Task, schedule: Schedule) -> List[Task]:
     """Dependencies of ``task`` under the DAG family of ``schedule.kind``."""
     if schedule.kind == "cholesky":
         return _deps(task, schedule.m_tiles)
     if schedule.kind == "program":
         return program_deps(task, schedule.m_tiles, schedule.q_tiles)
+    if schedule.kind == "update_append":
+        return append_deps(task, schedule.m_tiles)
+    if schedule.kind == "update_rank":
+        return rank_update_deps(task, schedule.m_tiles)
     return solve_deps(task, schedule.m_tiles, lower=schedule.kind == "forward")
 
 
@@ -427,6 +564,10 @@ def _dag(m_tiles: int, kind: str, q_tiles: int = 0, uncertainty: bool = False):
             program_tasks(m_tiles, q_tiles, uncertainty=uncertainty),
             lambda t: program_deps(t, m_tiles, q_tiles),
         )
+    if kind == "update_append":
+        return append_tasks(m_tiles), lambda t: append_deps(t, m_tiles)
+    if kind == "update_rank":
+        return rank_update_tasks(m_tiles), lambda t: rank_update_deps(t, m_tiles)
     raise ValueError(kind)
 
 

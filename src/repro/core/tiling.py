@@ -22,6 +22,7 @@ the TRSM panel of step J — tiles (J+1..M-1, J) — is one contiguous slice.
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Tuple
 
@@ -145,6 +146,62 @@ def unpack_lower(packed: jax.Array, *, fill: str = "lower") -> jax.Array:
     if fill == "lower":
         full = jnp.tril(full)  # zero the upper triangle inside diagonal tiles
     return full
+
+
+@functools.lru_cache(maxsize=None)
+def grow_packed_indices(m_tiles_old: int) -> np.ndarray:
+    """Gather indices that append one tile-row to a packed store.
+
+    Let ``cat = concat(old_packed (T_old), row_buffer (M_old + 1))`` where
+    the row buffer holds the new row's tiles (R, 0..R-1) plus the corner
+    (R, R), R = M_old.  Then ``cat[grow_packed_indices(M_old)]`` is the
+    packed store of the grown (M_old + 1)-tile factor: the column-major
+    packing interleaves the new row's tile at the end of every column
+    (DESIGN.md §10 env growth).
+    """
+    m_old, m_new = m_tiles_old, m_tiles_old + 1
+    t_old = num_packed_tiles(m_old)
+    idx = np.empty(num_packed_tiles(m_new), np.int32)
+    for j in range(m_new):
+        for i in range(j, m_new):
+            idx[packed_index(i, j, m_new)] = (
+                t_old + j if i == m_old else packed_index(i, j, m_old)
+            )
+    return idx
+
+
+@functools.lru_cache(maxsize=None)
+def replace_last_row_indices(m_tiles: int) -> np.ndarray:
+    """Packed slots of the last tile-row (R, 0..R), R = m_tiles - 1.
+
+    Scattering a row buffer (R + 1 tiles, corner last) into these slots
+    overwrites the last tile-row of an existing packed store in place —
+    the append path that refills a partially padded trailing tile.
+    """
+    r = m_tiles - 1
+    return np.array(
+        [packed_index(r, j, m_tiles) for j in range(m_tiles)], np.int32
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def shrink_packed_indices(m_tiles_old: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(trailing, evicted) gather indices that drop the leading tile-column.
+
+    ``old_packed[trailing]`` is the packed store of the trailing
+    (M_old - 1)-tile block (tiles (i, j) with i, j >= 1);
+    ``old_packed[evicted]`` is the evicted column's sub-diagonal panel
+    (tiles (1.., 0)) — the rank-m carry W of the eviction update.
+    """
+    m_old, m_new = m_tiles_old, m_tiles_old - 1
+    trailing = np.empty(num_packed_tiles(m_new), np.int32)
+    for j in range(m_new):
+        for i in range(j, m_new):
+            trailing[packed_index(i, j, m_new)] = packed_index(i + 1, j + 1, m_old)
+    evicted = np.array(
+        [packed_index(i, 0, m_old) for i in range(1, m_old)], np.int32
+    )
+    return trailing, evicted
 
 
 def packed_bytes(m_tiles: int, m: int, dtype=jnp.float32) -> int:

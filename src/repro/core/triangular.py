@@ -114,6 +114,36 @@ def tiled_gram(v_tiles: jax.Array) -> jax.Array:
     return jnp.einsum("ipab,iqac->pqbc", v_tiles, v_tiles)
 
 
+def packed_matvec(
+    lpacked: jax.Array, chunks: jax.Array, *, transpose: bool = False
+) -> jax.Array:
+    """y = L x (or L^T x) against the packed lower factor; chunks (M, m).
+
+    Used by the streaming-update path (DESIGN.md §10) to reconstruct the
+    forward-solve chunks beta = L^T alpha (and y = L beta) from posterior
+    states that predate the live-state fields.  Batched: (B, T, m, m) x
+    (B, M, m) -> (B, M, m).
+    """
+    batched = lpacked.ndim == 4
+    m_tiles = chunks.shape[-2]
+    if tiling.num_packed_tiles(m_tiles) != lpacked.shape[-3]:
+        raise ValueError(
+            f"chunk rows {m_tiles} inconsistent with packed store {lpacked.shape}"
+        )
+    rows, cols = tiling._packed_coords(m_tiles)
+    m = lpacked.shape[-1]
+    dense = jnp.zeros(
+        lpacked.shape[:-3] + (m_tiles, m_tiles, m, m), lpacked.dtype
+    )
+    if batched:
+        dense = dense.at[:, rows, cols].set(lpacked)
+        ein = "zjiba,zjb->zia" if transpose else "zijab,zjb->zia"
+    else:
+        dense = dense.at[rows, cols].set(lpacked)
+        ein = "jiba,jb->ia" if transpose else "ijab,jb->ia"
+    return jnp.einsum(ein, dense, chunks.astype(lpacked.dtype))
+
+
 def identity_tiles(m_tiles: int, m: int, dtype=jnp.float32) -> jax.Array:
     """Identity matrix as an (M, M, m, m) tile grid (matrix-solve RHS layout)."""
     eye = jnp.eye(m, dtype=dtype)

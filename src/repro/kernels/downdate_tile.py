@@ -1,0 +1,92 @@
+"""Pallas kernel: fused carry transform of the block Cholesky up/downdate.
+
+The rank-b update/downdate sweep (DESIGN.md §10) rewrites each sub-diagonal
+carry block once per column:
+
+    W_i <- (W_i - L'(i,j) Y_j) C_j^{-T}
+
+i.e. one (m × m)·(m × m) matmul (MXU) followed by a right triangular solve
+against the small correction factor C_j = chol(I ∓ Y_jᵀY_j).  Fusing both
+into one VMEM pass avoids materializing the intermediate W_i - L'(i,j) Y_j
+in HBM between two launches — the carry is touched once per column per row,
+so this is the bandwidth-critical op of the update sweep (the analogue of
+the trailing update in the factorization).
+
+The solve loop is the same column recurrence as the TRSM panel kernel
+(X · Cᵀ = B):  X[:, j] = (B[:, j] - Σ_{k<j} X[:, k] C[j, k]) / C[j, j],
+every step one masked (m × m)·(m,) matvec — no scalar code.  Accumulation
+is in f32 (f64 preserved when given, matching the POTRF tile kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _carry_kernel(w_ref, l_ref, y_ref, c_ref, o_ref):
+    dt = jnp.promote_types(w_ref.dtype, jnp.float32)  # keep f64 if given
+    w = w_ref[0].astype(dt)
+    l = l_ref[0].astype(dt)
+    y = y_ref[0].astype(dt)
+    c = c_ref[0].astype(dt)
+    b = w - l @ y                                     # MXU: the carry residual
+    m = c.shape[0]
+    idx = lax.iota(jnp.int32, m)
+    x0 = jnp.zeros_like(b)
+
+    def body(j, x):
+        crow = lax.dynamic_slice_in_dim(c, j, 1, axis=0)[0]           # (m,)
+        cjj = lax.dynamic_index_in_dim(crow, j, keepdims=False)
+        crow = jnp.where(idx < j, crow, 0.0)                          # k < j
+        s = x @ crow                                                  # (m,)
+        bcol = lax.dynamic_slice_in_dim(b, j, 1, axis=1)[:, 0]
+        col = (bcol - s) / cjj
+        return lax.dynamic_update_slice_in_dim(x, col[:, None], j, axis=1)
+
+    x = lax.fori_loop(0, m, body, x0)
+    o_ref[0] = x.astype(o_ref.dtype)
+
+
+def carry_update(
+    w: jax.Array,
+    l_new: jax.Array,
+    y: jax.Array,
+    c: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """(W - L' Y) C^{-T} for one carry tile; all operands (m, m)."""
+    m = w.shape[-1]
+    spec = pl.BlockSpec((1, m, m), lambda i: (0, 0, 0))
+    return pl.pallas_call(
+        _carry_kernel,
+        grid=(1,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((1, m, m), w.dtype),
+        interpret=interpret,
+    )(w[None], l_new[None], y[None], c[None])[0]
+
+
+def carry_update_batched(
+    w_stack: jax.Array,
+    l_stack: jax.Array,
+    y_stack: jax.Array,
+    c_stack: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """One launch covering a whole wave of carry transforms (G, m, m)."""
+    g, m, _ = w_stack.shape
+    spec = pl.BlockSpec((1, m, m), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _carry_kernel,
+        grid=(g,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((g, m, m), w_stack.dtype),
+        interpret=interpret,
+    )(w_stack, l_stack, y_stack, c_stack)

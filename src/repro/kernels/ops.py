@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core import tiling
 from repro.kernels import cov_assembly as _cov
+from repro.kernels import downdate_tile as _down
 from repro.kernels import potrf_tile as _potrf
 from repro.kernels import trailing_update as _trail
 from repro.kernels import trsm_tile as _trsm
@@ -165,6 +166,15 @@ def _pick_block(m: int) -> int:
     while b * 2 <= min(m, 256):
         b *= 2
     return b
+
+
+def carry_update(w: jax.Array, l_new: jax.Array, y: jax.Array, c: jax.Array) -> jax.Array:
+    """Fused up/downdate carry transform  (W - L' Y) C^{-T}  (DESIGN.md §10).
+
+    The streaming-update sweep is not differentiated (it maintains a cached
+    posterior, it is not a training path), so no reference VJP is attached.
+    """
+    return _down.carry_update(w, l_new, y, c, interpret=_interpret())
 
 
 # ---------------------------------------------------------------------------

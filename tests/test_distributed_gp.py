@@ -36,9 +36,9 @@ Xt = rng.standard_normal((nte, 3)).astype(np.float32)
 params = SEKernelParams.paper_defaults()
 pfn = dist.distributed_gp_predict_fn(mesh, m_tiles=8, tile_size=m, n_valid=ntr,
                                      n_test_valid=nte, params=params)
-mu, var = jax.jit(pfn)(pred.pad_features(jnp.asarray(X), m),
-                       pred.pad_vector(jnp.asarray(Y), m),
-                       pred.pad_features(jnp.asarray(Xt), m))
+mu, var = jax.jit(pfn)(tiling.pad_features(jnp.asarray(X), m),
+                       tiling.pad_vector(jnp.asarray(Y), m),
+                       tiling.pad_features(jnp.asarray(Xt), m))
 mu_ref, cov_ref = pred.predict(jnp.asarray(X), jnp.asarray(Y), jnp.asarray(Xt),
                                params, m, full_cov=True)
 assert np.allclose(np.asarray(mu).reshape(-1)[:nte], np.asarray(mu_ref), atol=1e-3)

@@ -138,9 +138,10 @@ def test_cov_tiles_padding_and_diagonal(rng):
 
 def test_assembled_covariance_matches_jnp_path(rng):
     from repro.core import predict as pred
+    from repro.core import tiling
 
     x = rng.standard_normal((50, 4)).astype(np.float32)
-    xc = pred.pad_features(jnp.asarray(x), 16)
+    xc = tiling.pad_features(jnp.asarray(x), 16)
     p = SEKernelParams.paper_defaults()
     a = np.asarray(ops.assemble_packed_covariance(xc, p, 50))
     b = np.asarray(pred.assemble_packed_covariance(xc, p, 50, backend="jnp"))

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import mll
+from repro.core import mll, tiling
 from repro.core import predict as pred
 from repro.core.kernels_math import SEKernelParams
 
@@ -264,5 +264,5 @@ def test_nlml_program_env_matches_posterior_state(rng):
         np.asarray(env["alpha"]), np.asarray(state.alpha), rtol=1e-4, atol=1e-5
     )
     np.testing.assert_allclose(
-        np.asarray(yc), np.asarray(pred.pad_vector(y, 16)), rtol=0, atol=0
+        np.asarray(yc), np.asarray(tiling.pad_vector(y, 16)), rtol=0, atol=0
     )
