@@ -1,0 +1,150 @@
+"""Fig. 11 (ours): ragged fleets — bucketed batching vs pad-to-max vs loop.
+
+B independent GPs with a *skewed* size mix (log-uniform: many small, a heavy
+tail) can be served three ways:
+
+* ``loop``       — a Python loop of single-problem fused programs: no
+  padding waste, but one underfilled launch sequence per problem;
+* ``pad-to-max`` — one GPBatch-style stacked program padded to the largest
+  problem: one launch sequence, but every small problem pays the largest
+  problem's O(n^3);
+* ``bucketed``   — :class:`repro.core.gp.GPFleet` with k geometric bucket
+  boundaries (DESIGN.md §11): problems share a fused program per bucket,
+  per-problem ``n_valid`` frontiers mask the padding inside it.
+
+``pad-to-max`` is exactly ``bucketed`` with one bucket, so the figure sweeps
+the bucket count k and reports, per k: cold factor+predict wall time, the
+padded-FLOP proxy sum((cap_i)^3) against the loop's no-waste floor, and —
+through :class:`repro.serve.ContinuousBatcher` — served req/s and p99
+latency for a mixed predict/observe request stream.  More buckets cut the
+padding waste but split the fleet into thinner launches; the sweet spot is
+the figure's point.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench, row
+from repro.core import predict as pred
+from repro.core import tiling
+from repro.core.gp import GPFleet
+from repro.core.kernels_math import SEKernelParams
+from repro.serve import ContinuousBatcher
+
+
+def skewed_sizes(b, lo, hi, rng):
+    """Log-uniform sizes in [lo, hi] — many small problems, a heavy tail."""
+    ns = np.exp(rng.uniform(np.log(lo), np.log(hi), b)).astype(int)
+    ns[ns < lo] = lo
+    # pin the extremes so every mix actually spans the range
+    ns[0], ns[-1] = lo, hi
+    return np.sort(ns)
+
+
+def _flop_proxy(ns, m, boundaries):
+    """sum(cap_i^3) over the bucket assignment — the padded-work proxy."""
+    assign = tiling.bucket_problems([int(n) for n in ns], m, boundaries)
+    return float(sum(float(cap * m) ** 3 * len(idx) for cap, idx in assign.items()))
+
+
+def run(
+    b=16,
+    n_max=512,
+    tile=32,
+    bucket_counts=(1, 2, 3, 4),
+    waves=4,
+    batch=32,
+    arrive=8,
+    d=4,
+    out=print,
+    backend="jnp",
+    seed=0,
+):
+    rng = np.random.default_rng(seed)
+    params = SEKernelParams.paper_defaults()
+    ns = skewed_sizes(b, tile, n_max, rng)
+    xs = [rng.standard_normal((int(n), d)).astype(np.float32) for n in ns]
+    ys = [rng.standard_normal(int(n)).astype(np.float32) for n in ns]
+    nh = max(batch, 8)
+    xt = rng.standard_normal((nh, d)).astype(np.float32)
+
+    # -- loop baseline: per-problem fused programs, zero padding waste ------
+    def loop():
+        return [
+            pred.predict_fused(x, y, xt, params, tile, backend=backend)
+            for x, y in zip(xs, ys)
+        ]
+
+    t_loop, _ = bench(loop, reps=3)
+    proxy_floor = float(sum((np.ceil(ns / tile) * tile) ** 3))
+    out(row(f"fig11/loop/B{b}", t_loop, f"flop_proxy={proxy_floor:.3g}"))
+
+    results = []
+    proxy_pad = _flop_proxy(ns, tile, 1)
+    t_pad = None
+    for k in bucket_counts:
+        fleet = GPFleet(
+            xs, ys, params=params, tile_size=tile,
+            op_backend=backend, boundaries=int(k),
+        )
+        n_buckets = len(fleet.bucket_assignment())
+        proxy = _flop_proxy(ns, tile, int(k))
+
+        def cold(fleet=fleet):
+            fleet.invalidate_cache()
+            return fleet.predict(xt)
+
+        t_cold, _ = bench(cold, reps=3)
+        if k == 1:
+            t_pad = t_cold
+        label = "pad_to_max" if k == 1 else f"bucketed_k{k}"
+
+        # -- serving: mixed predict/observe waves over warm buckets ---------
+        fleet.invalidate_cache()
+        fleet.predict(xt)                      # warm every bucket
+        srv = ContinuousBatcher(fleet)
+        wrng = np.random.default_rng(seed + 1)
+        for w in range(waves):
+            rows = np.array_split(np.arange(nh), b)
+            for i, rr in enumerate(rows):
+                if rr.size:
+                    srv.submit_predict(i, xt[rr])
+            for i in wrng.choice(b, size=max(b // 4, 1), replace=False):
+                xo = wrng.standard_normal((arrive, d)).astype(np.float32)
+                yo = wrng.standard_normal(arrive).astype(np.float32)
+                srv.submit_observe(int(i), xo, yo)
+            srv.step()
+        s = srv.summary()
+
+        out(row(
+            f"fig11/{label}/B{b}",
+            t_cold,
+            f"buckets={n_buckets} flop_proxy={proxy:.3g} "
+            f"waste_vs_floor={proxy / proxy_floor:.2f} "
+            f"speedup_vs_loop={t_loop / t_cold:.3f} "
+            f"req_per_s={s['req_per_s']:.1f} p99_ms={s['p99_ms']:.1f}",
+        ))
+        results.append({
+            "B": b,
+            "n_max": n_max,
+            "tile": tile,
+            "k": int(k),
+            "buckets": n_buckets,
+            "strategy": label,
+            "us_cold": t_cold * 1e6,
+            "us_loop": t_loop * 1e6,
+            "flop_proxy": proxy,
+            "flop_proxy_floor": proxy_floor,
+            "flop_ratio_vs_pad": proxy_pad / proxy,
+            "speedup_vs_loop": t_loop / t_cold,
+            "speedup_vs_pad": (t_pad / t_cold) if t_pad else 1.0,
+            "req_per_s": s["req_per_s"],
+            "p99_ms": s["p99_ms"],
+            "migrations_seen": int(s["waves"]),
+        })
+    return results
+
+
+if __name__ == "__main__":
+    run()

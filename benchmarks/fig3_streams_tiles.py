@@ -1,14 +1,12 @@
 """Fig. 3 analogue: tiled Cholesky runtime vs stream count and tile count.
 
 The paper sweeps CUDA streams × tiles at n=32768 on an A30.  Here the same
-sweep runs on the host CPU (single XLA device) and compares three execution
+sweep runs on the host CPU (single XLA device) and compares two execution
 strategies (DESIGN.md §2–3):
 
 * ``monolithic``  — single-call Cholesky (the cuSOLVER reference analogue)
-* ``column_loop`` — the legacy per-column loop (TRSM -> SYRK -> GEMM
-  serialized inside each column; ``schedule=False``)
 * ``executor``    — the schedule-driven level-batched executor
-  (``schedule=True``; wavefront plan for finite ``n_streams``)
+  (wavefront plan for finite ``n_streams``)
 
 ``n_streams`` is the batching-granularity knob and tiles per dimension
 sweeps M.  Sizes are scaled to CPU (default n=1024; use --n).
@@ -38,18 +36,17 @@ def run(n: int = 1024, tile_counts=(4, 8, 16), streams=(1, 4, 16, None), out=pri
         m = n // m_tiles
         for ns in streams:
             tag = "inf" if ns is None else str(ns)
-            for strategy, sched in (("executor", True), ("column_loop", False)):
-                fn = jax.jit(
-                    lambda kk, m=m, ns=ns, sched=sched: chol.cholesky_dense_via_tiles(
-                        kk, m, n_streams=ns, schedule=sched
-                    )
+            fn = jax.jit(
+                lambda kk, m=m, ns=ns: chol.cholesky_dense_via_tiles(
+                    kk, m, n_streams=ns
                 )
-                t, ci = bench(fn, k)
-                out(row(
-                    f"fig3/{strategy}/n{n}/tiles{m_tiles}/streams{tag}",
-                    t,
-                    f"speedup_vs_monolithic={base/t:.3f}",
-                ))
+            )
+            t, ci = bench(fn, k)
+            out(row(
+                f"fig3/executor/n{n}/tiles{m_tiles}/streams{tag}",
+                t,
+                f"speedup_vs_monolithic={base/t:.3f}",
+            ))
 
 
 if __name__ == "__main__":

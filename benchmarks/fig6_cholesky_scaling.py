@@ -1,9 +1,9 @@
 """Fig. 6 analogue: Cholesky problem-size scaling, tiled vs monolithic.
 
 The paper compares CPU vs GPU over n; on this host the comparison is the
-schedule-driven executor vs the legacy column loop vs the monolithic single
-call (cuSOLVER analogue), plus the crossover behaviour at small n (paper:
-n < 128 favors the untiled path because task scheduling overhead dominates).
+schedule-driven executor vs the monolithic single call (cuSOLVER analogue),
+plus the crossover behaviour at small n (paper: n < 128 favors the untiled
+path because task scheduling overhead dominates).
 """
 
 from __future__ import annotations
@@ -25,17 +25,14 @@ def run(sizes=(128, 256, 512, 1024, 2048), out=print):
         t_m, _ = bench(mono, k)
         out(row(f"fig6/monolithic/n{n}", t_m, f"gflops={(n**3/3)/t_m/1e9:.2f}"))
         m = max(n // 8, 64)
-        for strategy, sched in (("executor", True), ("column_loop", False)):
-            fn = jax.jit(
-                lambda kk, m=m, sched=sched: chol.cholesky_dense_via_tiles(
-                    kk, m, schedule=sched
-                )
-            )
-            t_t, _ = bench(fn, k)
-            out(row(
-                f"fig6/{strategy}/n{n}/m{m}", t_t,
-                f"gflops={(n**3/3)/t_t/1e9:.2f};speedup={t_m/t_t:.3f}",
-            ))
+        fn = jax.jit(
+            lambda kk, m=m: chol.cholesky_dense_via_tiles(kk, m)
+        )
+        t_t, _ = bench(fn, k)
+        out(row(
+            f"fig6/executor/n{n}/m{m}", t_t,
+            f"gflops={(n**3/3)/t_t/1e9:.2f};speedup={t_m/t_t:.3f}",
+        ))
 
 
 if __name__ == "__main__":

@@ -132,6 +132,7 @@ def main() -> None:
         fig8_train_scaling,
         fig9_batched_fleet,
         fig10_online_update,
+        fig11_ragged_fleet,
         mem_tiles,
     )
 
@@ -144,6 +145,10 @@ def main() -> None:
         fig8_train_scaling.run(sizes=(64,), out=col.out("fig8"))
         fleet = fig9_batched_fleet.run(n=128, bs=(1, 4), out=col.out("fig9"))
         online = fig10_online_update.run(ns=(128,), bs=(1, 8), out=col.out("fig10"))
+        ragged = fig11_ragged_fleet.run(
+            b=8, n_max=96, tile=16, bucket_counts=(1, 2), waves=1, batch=8,
+            out=col.out("fig11"),
+        )
         mem_tiles.run(n=256, out=col.out("mem"))
         pipeline = _fused_vs_staged(128, col.out("pipeline"))
         counts = _executor_counts(tile_counts=(8,))
@@ -164,6 +169,10 @@ def main() -> None:
         online = fig10_online_update.run(
             ns=osizes, bs=(1, 16, 64), out=col.out("fig10")
         )
+        rb, rn = ((8, 256) if args.quick else (16, 512))
+        ragged = fig11_ragged_fleet.run(
+            b=rb, n_max=rn, tile=32, out=col.out("fig11")
+        )
         mem_tiles.run(n=n, out=col.out("mem"))
         pipeline = _fused_vs_staged(min(n, 512), col.out("pipeline"))
         counts = _executor_counts()
@@ -175,6 +184,7 @@ def main() -> None:
             "fused_vs_staged": pipeline,
             "batched_fleet": fleet,
             "online_update": online,
+            "ragged_fleet": ragged,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -14,6 +14,12 @@ one problem-batched program factors the whole fleet, and each online batch
 answers B × batch requests in a single launch sequence — compare its
 req/s against the single-GP numbers to see the wavefront-width win.
 
+``--ragged B`` serves B GPs of *different* sizes through `GPFleet` + the
+continuous-batching loop (DESIGN.md §11): problems are bucketed by tile
+geometry, each wave drains a mixed queue of prediction and observation
+requests (one ragged fused launch per occupied bucket), and buckets are
+re-formed between waves as problems grow and migrate.
+
 ``--online`` turns the server into a *streaming* one (DESIGN.md §10):
 prediction requests interleave with observation arrivals, absorbed by
 `GaussianProcess.update` — the O(n^2 b) block Cholesky append — under a
@@ -24,6 +30,7 @@ latency, the number the streaming subsystem exists to shrink.
     PYTHONPATH=src python examples/serve_gp.py [--n 4096] [--batches 32]
     PYTHONPATH=src python examples/serve_gp.py --fleet 8 --n 512
     PYTHONPATH=src python examples/serve_gp.py --online --n 1024 --arrive 32
+    PYTHONPATH=src python examples/serve_gp.py --ragged 12 --n 512 --tile 64
 """
 
 import argparse
@@ -32,9 +39,10 @@ import time
 import jax
 import numpy as np
 
-from repro.core import GaussianProcess, GPBatch
+from repro.core import GaussianProcess, GPBatch, GPFleet
 from repro.core import predict as pred
 from repro.data.msd import MSDConfig, make_dataset, nfir_features, simulate
+from repro.serve import ContinuousBatcher
 
 
 def request_batches(cfg, batch, batches, seed0=100):
@@ -111,6 +119,60 @@ def serve_fleet(args, cfg):
     )
 
 
+def serve_ragged(args, cfg):
+    """Continuous batching over a ragged fleet (DESIGN.md §11).
+
+    B problems with a skewed size mix (most small, a heavy tail up to --n)
+    share bucketed fused programs; every wave mixes prediction requests with
+    observation arrivals, so problems grow — and migrate buckets — live."""
+    rng = np.random.default_rng(7)
+    b = args.ragged
+    # skewed mix: sizes log-uniform in [tile/2, n] — many small, few large
+    lo, hi = max(args.tile // 2, 8), max(args.n, args.tile)
+    ns = np.exp(rng.uniform(np.log(lo), np.log(hi), b)).astype(int)
+    xs, ys = [], []
+    for i, n in enumerate(ns):
+        x_tr, y_tr, _, _ = make_dataset(int(n), 1, cfg, seed=i)
+        xs.append(x_tr)
+        ys.append(y_tr)
+
+    t0 = time.perf_counter()
+    fleet = GPFleet(xs, ys, tile_size=args.tile)
+    srv = ContinuousBatcher(fleet)
+    warm_probe = next(request_batches(cfg, args.batch, 1))
+    jax.block_until_ready(fleet.predict(warm_probe))  # factor every bucket
+    caps = {c: len(i) for c, i in fleet.bucket_assignment().items()}
+    print(
+        f"ragged fleet factor+cache (offline): {time.perf_counter() - t0:.2f}s "
+        f"for B={b}, sizes {int(ns.min())}..{int(ns.max())}, buckets {caps}"
+    )
+
+    migrations = 0
+    for w, xt in enumerate(request_batches(cfg, args.batch, args.batches)):
+        # every wave: each problem gets a slice of the request batch ...
+        splits = np.array_split(np.arange(xt.shape[0]), b)
+        for i, rows in enumerate(splits):
+            if rows.size:
+                srv.submit_predict(i, xt[rows])
+        # ... and a few problems receive labelled arrivals
+        for i in rng.choice(b, size=max(b // 4, 1), replace=False):
+            u, yv = simulate(args.arrive + cfg.n_regressors - 1, cfg, seed=5000 + 97 * w + i)
+            x_new, y_new = nfir_features(u, yv, cfg.n_regressors)
+            srv.submit_observe(int(i), x_new.astype(np.float32), y_new.astype(np.float32))
+        stats = srv.step()
+        migrations += stats.migrations
+    s = srv.summary()
+    print(
+        f"ragged: served {int(s['requests'])} requests in {int(s['waves'])} waves "
+        f"(p50={s['p50_ms']:.2f}ms p99={s['p99_ms']:.2f}ms, {s['req_per_s']:.0f} req/s)"
+    )
+    print(
+        f"ragged: {migrations} bucket migrations, final sizes "
+        f"{min(fleet.sizes)}..{max(fleet.sizes)}, buckets "
+        f"{ {c: len(i) for c, i in fleet.bucket_assignment().items()} }"
+    )
+
+
 def serve_online(args, cfg):
     """Streaming serving: requests interleave with observation arrivals."""
     x_tr, y_tr, _, _ = make_dataset(args.n, 1, cfg, seed=0)
@@ -171,17 +233,26 @@ def main():
         help="serve B independent GPs through one GPBatch program",
     )
     ap.add_argument(
+        "--ragged",
+        type=int,
+        default=0,
+        metavar="B",
+        help="serve B differently-sized GPs through GPFleet + continuous batching",
+    )
+    ap.add_argument(
         "--online",
         action="store_true",
         help="interleave observation arrivals with requests (streaming updates)",
     )
     ap.add_argument(
-        "--arrive", type=int, default=32, help="observations arriving per batch (--online)"
+        "--arrive", type=int, default=32, help="observations arriving per batch (--online/--ragged)"
     )
     args = ap.parse_args()
 
     cfg = MSDConfig()
-    if args.online:
+    if args.ragged > 0:
+        serve_ragged(args, cfg)
+    elif args.online:
         serve_online(args, cfg)
     elif args.fleet > 0:
         serve_fleet(args, cfg)

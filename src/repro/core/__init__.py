@@ -1,7 +1,13 @@
 """Core: the paper's contribution — tiled, device-resident GP regression."""
 
-from repro.core.gp import GaussianProcess, GPBatch
+from repro.core.gp import GaussianProcess, GPBatch, GPFleet
 from repro.core.kernels_math import SEKernelParams
 from repro.core.update import CholeskyUpdateError
 
-__all__ = ["GaussianProcess", "GPBatch", "SEKernelParams", "CholeskyUpdateError"]
+__all__ = [
+    "GaussianProcess",
+    "GPBatch",
+    "GPFleet",
+    "SEKernelParams",
+    "CholeskyUpdateError",
+]

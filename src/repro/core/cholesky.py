@@ -1,18 +1,16 @@
 """Tiled right-looking Cholesky decomposition (paper Fig. 1) on packed tiles.
 
 The factorization runs on the packed symmetric-lower store of
-:mod:`repro.core.tiling`.  Two execution strategies exist (DESIGN.md §2–3):
+:mod:`repro.core.tiling` through the level-batched executor (DESIGN.md
+§2–3): the ASAP level schedule from :mod:`repro.core.scheduler` is compiled
+by :mod:`repro.core.executor` into one batched kernel per (level, op,
+stream-chunk).  Independent tasks from *different* columns batch together
+(e.g. the GEMM tail of column j with the TRSM panel of column j+1) — the
+cross-column overlap HPX dataflow achieves with its stream pool.  (A legacy
+per-column loop baseline was removed once the executor covered every
+caller; ``monolithic_cholesky`` remains the reference baseline.)
 
-* ``schedule=True`` (default) — the level-batched executor: the ASAP level
-  schedule from :mod:`repro.core.scheduler` is compiled by
-  :mod:`repro.core.executor` into one batched kernel per (level, op,
-  stream-chunk).  Independent tasks from *different* columns batch together
-  (e.g. the GEMM tail of column j with the TRSM panel of column j+1) —
-  the cross-column overlap HPX dataflow achieves with its stream pool.
-* ``schedule=False`` — the legacy per-column loop, kept as a benchmark
-  baseline: TRSM -> SYRK -> GEMM serialized within each column.
-
-``n_streams`` is the CUDA-stream-pool analogue in both modes:
+``n_streams`` is the CUDA-stream-pool analogue:
 
 * ``n_streams=None``  — whole-level (resp. whole-panel) batching: the
   TPU-native limit (maximum exposed concurrency).
@@ -41,17 +39,15 @@ with one tiled matrix solve + gram (triangular.kinv_tiles_from_factor).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import executor, tiling
 
-# Tile-op definitions live in the executor (shared by both strategies);
-# re-exported here for backwards compatibility.
+# Tile-op definitions live in the executor; re-exported here for backwards
+# compatibility.
 from repro.core.executor import (  # noqa: F401
     _gemm_jnp,
     _potrf_jnp,
@@ -72,95 +68,17 @@ def tiled_cholesky(
     n_streams: Optional[int] = None,
     backend: str = "jnp",
     update_dtype=None,
-    schedule: bool = True,
 ) -> jax.Array:
     """Factor a packed symmetric-lower tile store in place: K -> L.
 
     packed: (T, m, m) with T = M(M+1)/2 (see tiling.pack_lower).
-    Returns the packed Cholesky factor (diagonal tiles lower-triangular).
-
-    ``schedule=True`` runs the level-batched executor (the Schedule is the
-    execution plan); ``schedule=False`` runs the legacy per-column loop.
+    Returns the packed Cholesky factor (diagonal tiles lower-triangular),
+    computed through the level-batched executor (the Schedule is the
+    execution plan).
     """
-    if schedule:
-        return executor.run_cholesky(
-            packed, n_streams=n_streams, backend=backend, update_dtype=update_dtype
-        )
-    return _column_loop_cholesky(
+    return executor.run_cholesky(
         packed, n_streams=n_streams, backend=backend, update_dtype=update_dtype
     )
-
-
-def _column_loop_cholesky(
-    packed: jax.Array,
-    *,
-    n_streams: Optional[int] = None,
-    backend: str = "jnp",
-    update_dtype=None,
-) -> jax.Array:
-    """Legacy baseline: serialize TRSM -> SYRK -> GEMM within each column."""
-    m_tiles = executor.m_tiles_of_packed(packed)
-    potrf, trsm, syrk, gemm = _get_ops(backend)
-    trsm_b = jax.vmap(trsm, in_axes=(None, 0))
-    syrk_b = jax.vmap(functools.partial(syrk, update_dtype=update_dtype))
-    gemm_b = jax.vmap(functools.partial(gemm, update_dtype=update_dtype))
-
-    for j in range(m_tiles):
-        dslot = tiling.packed_index(j, j, m_tiles)
-        ljj = potrf(packed[dslot])
-        packed = packed.at[dslot].set(ljj)
-        n_below = m_tiles - j - 1
-        if n_below == 0:
-            continue
-
-        # --- TRSM panel: tiles (j+1..M-1, j), contiguous slots ------------
-        lo, hi = dslot + 1, dslot + 1 + n_below
-        for c0, c1 in _chunks(n_below, n_streams):
-            sol = trsm_b(ljj, jax.lax.dynamic_slice_in_dim(packed, lo + c0, c1 - c0))
-            packed = jax.lax.dynamic_update_slice_in_dim(packed, sol, lo + c0, axis=0)
-        panel = packed[lo:hi]  # (n_below, m, m), rows j+1..M-1
-
-        # --- trailing update: SYRK on diagonals, GEMM off-diagonal --------
-        # SYRK: tile (i, i) -= L(i,j) L(i,j)^T      for i in j+1..M-1
-        syrk_slots = np.array(
-            [tiling.packed_index(i, i, m_tiles) for i in range(j + 1, m_tiles)]
-        )
-        for c0, c1 in _chunks(n_below, n_streams):
-            sl = syrk_slots[c0:c1]
-            packed = packed.at[sl].set(syrk_b(packed[sl], panel[c0:c1]))
-
-        # GEMM: tile (i, k) -= L(i,j) L(k,j)^T      for j < k < i < M
-        gi, gk, gslots = _gemm_indices(j, m_tiles)
-        for c0, c1 in _chunks(len(gslots), n_streams):
-            sl = gslots[c0:c1]
-            a = panel[gi[c0:c1] - (j + 1)]
-            b = panel[gk[c0:c1] - (j + 1)]
-            packed = packed.at[sl].set(gemm_b(packed[sl], a, b))
-    return packed
-
-
-@functools.lru_cache(maxsize=None)
-def _gemm_indices_cached(j: int, m_tiles: int):
-    gi, gk, gslots = [], [], []
-    for i in range(j + 1, m_tiles):
-        for k in range(j + 1, i):
-            gi.append(i)
-            gk.append(k)
-            gslots.append(tiling.packed_index(i, k, m_tiles))
-    return (np.array(gi, np.int32), np.array(gk, np.int32), np.array(gslots, np.int32))
-
-
-def _gemm_indices(j: int, m_tiles: int):
-    return _gemm_indices_cached(j, m_tiles)
-
-
-def _chunks(n: int, n_streams: Optional[int]):
-    """(start, stop) chunk bounds covering range(n) with width n_streams."""
-    if n <= 0:
-        return []
-    if n_streams is None or n_streams >= n:
-        return [(0, n)]
-    return [(i, min(i + n_streams, n)) for i in range(0, n, n_streams)]
 
 
 # ---------------------------------------------------------------------------
@@ -175,7 +93,6 @@ def cholesky_dense_via_tiles(
     n_streams: Optional[int] = None,
     backend: str = "jnp",
     update_dtype=None,
-    schedule: bool = True,
 ) -> jax.Array:
     """Dense (n,n) SPD -> dense lower Cholesky factor, via the tiled path."""
     packed = tiling.pack_lower(a, m)
@@ -184,7 +101,6 @@ def cholesky_dense_via_tiles(
         n_streams=n_streams,
         backend=backend,
         update_dtype=update_dtype,
-        schedule=schedule,
     )
     return tiling.unpack_lower(lpacked, fill="lower")
 

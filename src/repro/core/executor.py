@@ -569,7 +569,7 @@ def _params_per_problem(params) -> bool:
     )
 
 
-def _cov_batch_fn_batched(backend: str, params, nvr: int, nvc: int, symmetric: bool):
+def _cov_batch_fn_batched(backend: str, params, nvr, nvc, symmetric: bool):
     """Problem-batched assembly: (B,G,m,D) x (B,G,m,D) -> (B,G,m,m).
 
     Shared hyperparameters (scalar leaves) flatten B into the single
@@ -578,21 +578,60 @@ def _cov_batch_fn_batched(backend: str, params, nvr: int, nvc: int, symmetric: b
     tile kernel over the problem axis — the Pallas assembly kernel bakes
     hyperparameters in as compile-time constants, so it cannot vary them
     across the batch; assembly is O(n^2), cheap next to the tile BLAS.
+
+    **Ragged batches (DESIGN.md §11):** ``nvr``/``nvc`` may be (B,) arrays
+    of per-problem validity frontiers instead of one shared scalar.  On the
+    jnp tile path the frontiers simply join the problem-axis vmap; on the
+    Pallas path (concrete shared params) the (B,) frontiers expand to
+    per-tile (B*G,) i32 operands and B problems of different valid sizes
+    still share ONE flat kernel launch.
     """
-    if _params_per_problem(params):
+    ragged = jnp.ndim(nvr) > 0 or jnp.ndim(nvc) > 0
+    pallas_ok = backend == "pallas" and _params_concrete(params)
+    if _params_per_problem(params) or (ragged and not pallas_ok):
         from repro.core import kernels_math as km
 
         def per_problem(xa, xb, row0, col0):
             # mixed scalar/(B,) leaves are legal — normalize before the vmap
-            pb = km.broadcast_params(params, xa.shape[0])
+            b = xa.shape[0]
+            pb = km.broadcast_params(params, b)
+            nvr_b = jnp.broadcast_to(jnp.asarray(nvr), (b,))
+            nvc_b = jnp.broadcast_to(jnp.asarray(nvc), (b,))
 
-            def one(xa1, xb1, p):
-                f = lambda a, b, r, c: km.cov_tile(a, b, r, c, p, nvr, nvc, symmetric)
+            def one(xa1, xb1, p, nr, nc):
+                f = lambda a, b, r, c: km.cov_tile(a, b, r, c, p, nr, nc, symmetric)
                 return jax.vmap(f)(xa1, xb1, row0, col0)
 
-            return jax.vmap(one, in_axes=(0, 0, 0))(xa, xb, pb)
+            return jax.vmap(one, in_axes=(0, 0, 0, 0, 0))(xa, xb, pb, nvr_b, nvc_b)
 
         return per_problem
+
+    if ragged:
+        # concrete shared params on Pallas: per-problem frontiers become
+        # per-tile (1,)-block operands of the ONE flattened launch.
+        from repro.kernels import cov_assembly as cova
+        from repro.kernels import ops as kops
+
+        def flat_ragged(xa, xb, row0, col0):
+            b, g = xa.shape[:2]
+            nvr_t = jnp.repeat(jnp.broadcast_to(jnp.asarray(nvr), (b,)), g)
+            nvc_t = jnp.repeat(jnp.broadcast_to(jnp.asarray(nvc), (b,)), g)
+            out = cova.cov_tiles(
+                xa.reshape((b * g,) + xa.shape[2:]),
+                xb.reshape((b * g,) + xb.shape[2:]),
+                jnp.tile(row0, b),
+                jnp.tile(col0, b),
+                lengthscale=float(params.lengthscale),
+                vertical=float(params.vertical),
+                noise=float(params.noise),
+                n_valid_r=nvr_t,
+                n_valid_c=nvc_t,
+                symmetric=symmetric,
+                interpret=kops._interpret(),
+            )
+            return out.reshape((b, g) + out.shape[1:])
+
+        return flat_ragged
 
     single = _cov_batch_fn(backend, params, nvr, nvc, symmetric)
 
@@ -614,8 +653,8 @@ def run_program(
     yc: jax.Array,
     xtc: jax.Array,
     params,
-    n_valid: int,
-    nt_valid: int,
+    n_valid,
+    nt_valid,
     *,
     uncertainty: bool = False,
     n_streams: Optional[int] = None,
@@ -640,6 +679,12 @@ def run_program(
     per-problem (leaves of shape (B,)).  ``batch_dispatch`` picks how the
     tile kernels absorb B: ``"flat"`` folds it into the launch's batch/grid
     axis, ``"vmap"`` nests one more vmap level.
+
+    **Ragged batches:** ``n_valid``/``nt_valid`` may also be (B,) arrays of
+    per-problem row counts (or traced scalars) — problems of *different*
+    valid sizes share the bucket's tile geometry, the same Plan, and the
+    same jit trace; only the masked assembly sees the frontiers
+    (DESIGN.md §11).
     """
     batched = xc.ndim == 4
     m_tiles, m = xc.shape[-3], xc.shape[-2]
@@ -886,25 +931,28 @@ def run_append(
     m, m); xc the matching padded feature chunks; x_row (m, D) / (B, m, D)
     the (padded) chunk of the appended row; ``r_tiles`` the number of frozen
     prefix rows the new row is solved against (``r_tiles == m_store`` grows
-    the factor; ``r_tiles == m_store - 1`` recomputes a partially padded
-    trailing row in place).  ``n_valid_new`` is the total valid observation
-    count *after* the append — prefix rows must be fully valid (padding
-    lives only in the appended row).  It may be a traced scalar on the jnp
-    backend; the Pallas assembly bakes it in as a compile-time constant
-    (like the hyperparameters).
+    the factor; ``r_tiles < m_store`` recomputes tile-row ``r_tiles`` of the
+    store in place — the trailing partially padded row in the scalar case,
+    or ANY interior row of a ragged batch's sweep, see
+    ``update.extend_state_ragged``).  ``n_valid_new`` is the total valid
+    observation count *after* the append — a scalar, a traced scalar, or a
+    (B,) per-problem array for ragged batches.  For problems whose frontier
+    lies at or below ``r_tiles * m`` the masked assembly degenerates to
+    identity/zero tiles and the recomputed row reproduces the padding
+    contract exactly (the refill is idempotent).
 
     Returns the row buffer (R + 1, m, m): the R solved off-diagonal tiles
     followed by the factored corner.  The caller scatters it into a grown
     or refilled packed store (tiling.grow_packed_indices /
-    tiling.replace_last_row_indices).
+    tiling.replace_row_indices).
     """
     batched = xc.ndim == 4
     m_store = xc.shape[-3]
     m = xc.shape[-2]
-    if r_tiles not in (m_store, m_store - 1):
+    if not 0 <= r_tiles <= m_store:
         raise ValueError(
-            f"r_tiles must be m_store ({m_store}, grow) or m_store - 1 "
-            f"(refill); got {r_tiles}"
+            f"r_tiles must be in [0, m_store] = [0, {m_store}] "
+            f"(m_store grows, less refills a row in place); got {r_tiles}"
         )
     if tiling.num_packed_tiles(m_store) != lpacked.shape[-3]:
         raise ValueError(
@@ -926,8 +974,11 @@ def run_append(
         functools.partial(gemm, update_dtype=update_dtype), batched, batch_dispatch
     )
     cov_fn = _cov_batch_fn_batched if batched else _cov_batch_fn
-    # prefix columns are fully valid; the appended row masks at n_valid_new
-    crossf = cov_fn(backend, params, n_valid_new, r_tiles * m, False)
+    # both axes mask at n_valid_new: prefix columns past a problem's
+    # frontier (possible only in the ragged sweep) zero out, and for the
+    # scalar callers every prefix column < r_tiles*m <= n_valid_new is
+    # valid anyway — identical to the old r_tiles*m column mask.
+    crossf = cov_fn(backend, params, n_valid_new, n_valid_new, False)
     diagf = cov_fn(backend, params, n_valid_new, n_valid_new, True)
 
     row = jnp.zeros(lead + (r_tiles + 1, m, m), dtype)

@@ -31,7 +31,7 @@ single GP, every launch B times wider.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -664,4 +664,407 @@ class GPBatch:
                 + f" with B == {b}; got {tuple(x_test.shape)}"
             )
         return x_test
+
+
+@dataclasses.dataclass
+class _Bucket:
+    """One bucket of a :class:`GPFleet`: a ragged slice sharing a geometry."""
+
+    idx: Tuple[int, ...]                       # fleet indices, bucket order
+    state: Optional[pred.PosteriorState]       # stacked ragged state (warm)
+    key: object                                # fleet cache key at build time
+
+
+@dataclasses.dataclass
+class GPFleet:
+    """B independent GPs of *different* sizes, bucketed by tile geometry.
+
+    The ragged front-end (DESIGN.md §11): problems are grouped into buckets
+    whose tile-count capacities come from ``tiling.bucket_boundaries``
+    (default powers of two), zero-padded to the bucket capacity, and each
+    bucket runs as ONE ragged problem-batched fused program with per-problem
+    ``n_valid`` frontiers as *traced* operands.  One jit trace and one
+    lru-cached executor Plan per bucket geometry serve every size mix and
+    every batch width — never one per problem.
+
+    ``update`` absorbs ragged arrival counts b_i in-place per bucket
+    (``update.extend_state_ragged``) and transparently *migrates* problems
+    that outgrow their bucket: the factor is re-embedded into the larger
+    geometry as ``blockdiag(L, I)`` — a pure gather (``tiling.embed_packed``,
+    zero FLOPs) — before the warm append, so migration never re-factorizes.
+
+    Same caching contract as :class:`GPBatch`; hyperparameter leaves may be
+    scalars (shared) or (B,) vectors (per-problem, gathered per bucket).
+    """
+
+    x_train: Sequence            # length-B list of (n_i, D) or (n_i,) arrays
+    y_train: Sequence            # length-B list of (n_i,) arrays
+    params: km.SEKernelParams = dataclasses.field(
+        default_factory=km.SEKernelParams.paper_defaults
+    )
+    tile_size: int = 64
+    n_streams: Optional[int] = None
+    op_backend: str = "jnp"
+    update_dtype: Optional[object] = None
+    dtype: object = jnp.float32
+    batch_dispatch: str = "flat"
+    boundaries: object = tiling.DEFAULT_BUCKETS
+
+    def __post_init__(self):
+        xs, ys = [], []
+        if len(self.x_train) != len(self.y_train) or not len(self.x_train):
+            raise ValueError(
+                f"GPFleet needs equal-length, non-empty x/y lists; got "
+                f"{len(self.x_train)} and {len(self.y_train)}"
+            )
+        d = None
+        for i, (x, y) in enumerate(zip(self.x_train, self.y_train)):
+            x = jnp.asarray(x, self.dtype)
+            if x.ndim == 1:
+                x = x[:, None]
+            y = jnp.asarray(y, self.dtype).reshape(-1)
+            if x.ndim != 2 or x.shape[0] != y.shape[0] or y.shape[0] < 1:
+                raise ValueError(
+                    f"problem {i}: x must be (n, D) or (n,) with n == "
+                    f"len(y) >= 1; got x {tuple(x.shape)}, y {tuple(y.shape)}"
+                )
+            if d is None:
+                d = x.shape[1]
+            elif x.shape[1] != d:
+                raise ValueError(
+                    f"problem {i}: feature dim {x.shape[1]} != {d} — all "
+                    "fleet problems must share D"
+                )
+            xs.append(x)
+            ys.append(y)
+        self._xs: List[jax.Array] = xs
+        self._ys: List[jax.Array] = ys
+        b = len(xs)
+        for name in ("lengthscale", "vertical", "noise"):
+            leaf = getattr(self.params, name)
+            if jnp.ndim(leaf) > 0 and jnp.shape(leaf) != (b,):
+                raise ValueError(
+                    f"GPFleet params.{name} must be a scalar (shared) or "
+                    f"shape ({b},) (per-problem); got {jnp.shape(leaf)}"
+                )
+        self._buckets: Dict[int, _Bucket] = {}
+        self._version = 0
+        self._params_bytes = None
+
+    @property
+    def batch_size(self) -> int:
+        return len(self._xs)
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(y.shape[0] for y in self._ys)
+
+    def bucket_assignment(self) -> Dict[int, List[int]]:
+        """Current ``{cap_tiles: [fleet indices]}`` map (recomputed)."""
+        return tiling.bucket_problems(self.sizes, self.tile_size, self.boundaries)
+
+    # -- cached per-bucket posteriors ---------------------------------------
+
+    def _cache_key(self):
+        p = self.params
+        if self._params_bytes is None or self._params_bytes[0] is not p:
+            self._params_bytes = (
+                p,
+                (
+                    np.asarray(p.lengthscale).tobytes(),
+                    np.asarray(p.vertical).tobytes(),
+                    np.asarray(p.noise).tobytes(),
+                ),
+            )
+        return (
+            self._version,
+            self._params_bytes[1],
+            self.tile_size,
+            self.n_streams,
+            self.op_backend,
+            str(self.update_dtype),
+            str(jnp.dtype(self.dtype)),
+            self.batch_dispatch,
+            self.boundaries if not isinstance(self.boundaries, (list, tuple))
+            else tuple(self.boundaries),
+        )
+
+    def invalidate_cache(self) -> None:
+        self._buckets = {}
+
+    def _bucket_params(self, idx) -> km.SEKernelParams:
+        gather = jnp.asarray(idx)
+
+        def pick(leaf):
+            return leaf if jnp.ndim(leaf) == 0 else jnp.asarray(leaf)[gather]
+
+        p = self.params
+        return km.SEKernelParams(
+            lengthscale=pick(p.lengthscale),
+            vertical=pick(p.vertical),
+            noise=pick(p.noise),
+        )
+
+    def _stack(self, idx, cap_tiles):
+        """Zero-pad the bucket's problems to the capacity and stack them."""
+        capn = cap_tiles * self.tile_size
+        xs = jnp.stack(
+            [jnp.pad(self._xs[i], ((0, capn - self._xs[i].shape[0]), (0, 0)))
+             for i in idx]
+        )
+        ys = jnp.stack(
+            [jnp.pad(self._ys[i], (0, capn - self._ys[i].shape[0]))
+             for i in idx]
+        )
+        nv = jnp.asarray([self._ys[i].shape[0] for i in idx], jnp.int32)
+        return xs, ys, nv
+
+    def _bucket_state(self, cap_tiles, idx) -> pred.PosteriorState:
+        """Warm cached stacked state for one bucket, (re)built cold on miss."""
+        key = self._cache_key()
+        rec = self._buckets.get(cap_tiles)
+        if rec is not None and rec.key == key and rec.idx == tuple(idx) \
+                and rec.state is not None:
+            return rec.state
+        xs, ys, nv = self._stack(idx, cap_tiles)
+        bp = self._bucket_params(idx)
+        env, yc = pred.nlml_program_env(
+            xs, ys, bp, self.tile_size,
+            n_streams=self.n_streams, backend=self.op_backend,
+            update_dtype=self.update_dtype, dtype=self.dtype,
+            batch_dispatch=self.batch_dispatch, n_valid=nv,
+        )
+        state = pred.PosteriorState(
+            lpacked=env["packed"], alpha=env["alpha"],
+            x_chunks=tiling.pad_features(xs, self.tile_size, dtype=self.dtype),
+            n=cap_tiles * self.tile_size, m=self.tile_size, params=bp,
+            beta=env["y"], y_chunks=yc, n_valid=nv,
+        )
+        self._buckets[cap_tiles] = _Bucket(tuple(idx), state, key)
+        return state
+
+    # -- prediction ---------------------------------------------------------
+
+    def _prep_shared(self, x_test) -> jax.Array:
+        x_test = jnp.asarray(x_test, self.dtype)
+        d = self._xs[0].shape[-1]
+        if x_test.ndim == 1:
+            x_test = x_test[:, None]
+        if x_test.ndim != 2 or x_test.shape[-1] != d:
+            raise ValueError(
+                f"GPFleet shared x_test must be (n̂, {d})"
+                + (" or (n̂,)" if d == 1 else "")
+                + f"; got {tuple(jnp.asarray(x_test).shape)}. "
+                "Use predict_each for per-problem test sets."
+            )
+        return x_test
+
+    def _predict_shared(self, x_test, full_cov):
+        """One shared (n̂, D) test block evaluated under every problem."""
+        x_test = self._prep_shared(x_test)
+        nh = x_test.shape[0]
+        b = self.batch_size
+        mean = jnp.zeros((b, nh), self.dtype)
+        sigma = jnp.zeros((b, nh, nh), self.dtype) if full_cov else None
+        for cap, idx in self.bucket_assignment().items():
+            state = self._bucket_state(cap, idx)
+            xt = jnp.broadcast_to(x_test[None], (len(idx),) + x_test.shape)
+            out = pred.predict_from_state_batched(
+                state, xt, full_cov=full_cov,
+                n_streams=self.n_streams, dtype=self.dtype,
+            )
+            gather = jnp.asarray(idx)
+            if full_cov:
+                mean = mean.at[gather].set(out[0])
+                sigma = sigma.at[gather].set(out[1])
+            else:
+                mean = mean.at[gather].set(out)
+        return (mean, sigma) if full_cov else mean
+
+    def predict(self, x_test) -> jax.Array:
+        """Means (B, n̂) for one shared (n̂, D) test block."""
+        return self._predict_shared(x_test, full_cov=False)
+
+    def predict_full_cov(self, x_test) -> Tuple[jax.Array, jax.Array]:
+        return self._predict_shared(x_test, full_cov=True)
+
+    def predict_with_uncertainty(self, x_test) -> Tuple[jax.Array, jax.Array]:
+        mean, sigma = self.predict_full_cov(x_test)
+        return mean, jnp.diagonal(sigma, axis1=-2, axis2=-1)
+
+    def predict_each(self, x_test_list, *, full_cov: bool = False):
+        """Per-problem test sets (list of (n̂_i, D)); ragged n̂_i are padded
+        to each bucket's max and masked with ``nt_valid`` — one batched warm
+        launch per bucket, results sliced back to each problem's own n̂_i.
+
+        Returns a length-B list of (n̂_i,) means (or ``(mean, cov)`` tuples
+        with cov (n̂_i, n̂_i) when ``full_cov``)."""
+        b = self.batch_size
+        if len(x_test_list) != b:
+            raise ValueError(
+                f"predict_each needs one test set per problem ({b}); "
+                f"got {len(x_test_list)}"
+            )
+        d = self._xs[0].shape[-1]
+        tests = []
+        for i, xt in enumerate(x_test_list):
+            xt = jnp.asarray(xt, self.dtype)
+            if xt.ndim == 1:
+                xt = xt[:, None]
+            if xt.ndim != 2 or xt.shape[-1] != d:
+                raise ValueError(
+                    f"test set {i} must be (n̂, {d}); got {tuple(xt.shape)}"
+                )
+            tests.append(xt)
+        out: List[object] = [None] * b
+        empty = jnp.zeros((0,), self.dtype)
+        empty_cov = jnp.zeros((0, 0), self.dtype)
+        for cap, idx in self.bucket_assignment().items():
+            nts = [tests[i].shape[0] for i in idx]
+            if not any(nts):  # no pending queries touch this bucket
+                for i in idx:
+                    out[i] = (empty, empty_cov) if full_cov else empty
+                continue
+            state = self._bucket_state(cap, idx)
+            nt_max = max(nts)
+            xt = jnp.stack(
+                [jnp.pad(tests[i], ((0, nt_max - tests[i].shape[0]), (0, 0)))
+                 for i in idx]
+            )
+            res = pred.predict_from_state_batched(
+                state, xt, full_cov=full_cov, n_streams=self.n_streams,
+                dtype=self.dtype, nt_valid=jnp.asarray(nts, jnp.int32),
+            )
+            for pos, i in enumerate(idx):
+                if full_cov:
+                    out[i] = (
+                        res[0][pos, : nts[pos]],
+                        res[1][pos, : nts[pos], : nts[pos]],
+                    )
+                else:
+                    out[i] = res[pos, : nts[pos]]
+        return out
+
+    # -- NLML ---------------------------------------------------------------
+
+    def nlml(self) -> jax.Array:
+        """Per-problem NLML vector (B,), one masked head per bucket."""
+        from repro.core import mll
+
+        b = self.batch_size
+        out = jnp.zeros((b,), self.dtype)
+        for cap, idx in self.bucket_assignment().items():
+            state = self._bucket_state(cap, idx)
+            _, ys, nv = self._stack(idx, cap)
+            vals = mll.nlml_from_state(state, ys, dtype=self.dtype, n_valid=nv)
+            out = out.at[jnp.asarray(idx)].set(vals.astype(self.dtype))
+        return out
+
+    def log_marginal_likelihood(self) -> jax.Array:
+        return -self.nlml()
+
+    # -- ragged streaming updates (DESIGN.md §11) ---------------------------
+
+    def update(self, x_new_list, y_new_list) -> "GPFleet":
+        """Absorb ragged arrivals: problem i gains ``len(y_new_list[i])``
+        points (0 allowed).  Problems that stay inside their bucket extend
+        warm in O(n^2 b); problems that outgrow it migrate — the factor is
+        re-embedded into the destination geometry as ``blockdiag(L, I)``
+        (pure gather) and extended there.  A cold or numerically failed
+        bucket re-factorizes lazily on the next predict/nlml."""
+        from repro.core import update as upd
+
+        b = self.batch_size
+        if len(x_new_list) != b or len(y_new_list) != b:
+            raise ValueError(
+                f"update needs one arrival block per problem ({b}); got "
+                f"{len(x_new_list)} and {len(y_new_list)}"
+            )
+        d = self._xs[0].shape[-1]
+        xn, yn = [], []
+        for i, (x, y) in enumerate(zip(x_new_list, y_new_list)):
+            x = jnp.asarray(x, self.dtype).reshape(-1, d)
+            y = jnp.asarray(y, self.dtype).reshape(-1)
+            if x.shape[0] != y.shape[0]:
+                raise ValueError(
+                    f"arrival {i}: x has {x.shape[0]} rows, y {y.shape[0]}"
+                )
+            xn.append(x)
+            yn.append(y)
+        counts = np.asarray([y.shape[0] for y in yn], np.int64)
+        if not counts.any():
+            return self
+
+        old_assign = self.bucket_assignment()
+        old_key = self._cache_key()
+        # per-problem warm source rows: i -> (cap_old, state, row position)
+        src: Dict[int, Tuple[int, pred.PosteriorState, int]] = {}
+        for cap, idx in old_assign.items():
+            rec = self._buckets.get(cap)
+            if rec is not None and rec.key == old_key \
+                    and rec.idx == tuple(idx) and rec.state is not None:
+                for pos, i in enumerate(idx):
+                    src[i] = (cap, rec.state, pos)
+
+        old_ns = np.asarray(self.sizes, np.int64)
+        for i in range(b):
+            if counts[i]:
+                self._xs[i] = jnp.concatenate([self._xs[i], xn[i]])
+                self._ys[i] = jnp.concatenate([self._ys[i], yn[i]])
+        self._version += 1
+        new_key = self._cache_key()
+
+        new_buckets: Dict[int, _Bucket] = {}
+        for cap, idx in self.bucket_assignment().items():
+            state = None
+            if all(i in src for i in idx):
+                try:
+                    state = self._transfer_bucket(cap, idx, src, old_ns)
+                    cnt = counts[np.asarray(idx)]
+                    if cnt.any():
+                        b_max = int(cnt.max())
+                        xa = jnp.stack(
+                            [jnp.pad(xn[i], ((0, b_max - xn[i].shape[0]), (0, 0)))
+                             for i in idx]
+                        )
+                        ya = jnp.stack(
+                            [jnp.pad(yn[i], (0, b_max - yn[i].shape[0]))
+                             for i in idx]
+                        )
+                        state = upd.extend_state_ragged(
+                            state, xa, ya, cnt,
+                            n_streams=self.n_streams, backend=self.op_backend,
+                            update_dtype=self.update_dtype,
+                            batch_dispatch=self.batch_dispatch,
+                        )
+                except upd.CholeskyUpdateError:
+                    state = None
+            new_buckets[cap] = _Bucket(tuple(idx), state, new_key)
+        self._buckets = new_buckets
+        return self
+
+    def _transfer_bucket(self, cap, idx, src, old_ns) -> pred.PosteriorState:
+        """Assemble a destination bucket's pre-append state from warm source
+        rows, re-embedding factors that cross a geometry boundary as
+        blockdiag(L, I) — a gather, zero FLOPs (``tiling.embed_packed``)."""
+        m = self.tile_size
+        d = self._xs[0].shape[-1]
+        lp, al, xc, be, yc = [], [], [], [], []
+        for i in idx:
+            cap_s, st, pos = src[i]
+            lpi = st.lpacked[pos]
+            if cap_s != cap:
+                lpi = tiling.embed_packed(lpi, cap_s, cap)
+            pad = cap - cap_s
+            lp.append(lpi)
+            al.append(jnp.pad(st.alpha[pos], ((0, pad), (0, 0))))
+            be.append(jnp.pad(st.beta[pos], ((0, pad), (0, 0))))
+            yc.append(jnp.pad(st.y_chunks[pos], ((0, pad), (0, 0))))
+            xc.append(jnp.pad(st.x_chunks[pos], ((0, pad), (0, 0), (0, 0))))
+        return pred.PosteriorState(
+            lpacked=jnp.stack(lp), alpha=jnp.stack(al), x_chunks=jnp.stack(xc),
+            n=cap * m, m=m, params=self._bucket_params(idx),
+            beta=jnp.stack(be), y_chunks=jnp.stack(yc),
+            n_valid=jnp.asarray(old_ns[np.asarray(idx)], jnp.int32),
+        )
 

@@ -69,7 +69,7 @@ def negative_log_marginal_likelihood(
     return 0.5 * (quad + logdet + n * math.log(2.0 * math.pi))
 
 
-def nlml_from_state(state, y: jax.Array, *, dtype=jnp.float32) -> jax.Array:
+def nlml_from_state(state, y: jax.Array, *, dtype=jnp.float32, n_valid=None) -> jax.Array:
     """NLML from a cached tiled posterior (no re-factorization).
 
     quad   = y^T alpha            (alpha = K^{-1} y, cached chunks; padded
@@ -79,13 +79,19 @@ def nlml_from_state(state, y: jax.Array, *, dtype=jnp.float32) -> jax.Array:
 
     Batch-aware: a stacked state (leading B axis) with y (B, n) returns the
     per-problem NLML vector (B,).
+
+    Ragged states (DESIGN.md §11): per-problem frontiers from ``n_valid``
+    (or ``state.n_valid``) replace the shared n in the constant term and
+    mask the factor diagonal — per-problem NLMLs stay exact even though
+    every problem in the bucket shares the padded stack shape.
     """
     y = y.astype(dtype)
-    n = y.shape[-1]
     yc = tiling.pad_vector(y, state.m)
     quad = jnp.sum(yc * state.alpha, axis=(-2, -1))
     m_tiles = state.alpha.shape[-2]
-    logdet = triangular.logdet_from_factor(state.lpacked, m_tiles)
+    nv = getattr(state, "n_valid", None) if n_valid is None else n_valid
+    n = y.shape[-1] if nv is None else jnp.asarray(nv, yc.dtype)
+    logdet = triangular.logdet_from_factor(state.lpacked, m_tiles, n_valid=nv)
     return 0.5 * (quad + logdet + n * math.log(2.0 * math.pi))
 
 

@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -137,55 +136,38 @@ def assemble_cross_tiles_batched(
     xt_chunks: jax.Array,
     x_chunks: jax.Array,
     params: km.SEKernelParams,
-    nt_valid: int,
-    n_valid: int,
+    nt_valid,
+    n_valid,
 ) -> jax.Array:
     """Problem-batched K_{X̂,X} grid: (B, Mhat, M, m, m) with per-problem params.
 
     Always the jnp tile kernel: the Pallas assembly kernel bakes
     hyperparameters in as compile-time constants and cannot vary them across
     the problem axis (see executor._cov_batch_fn_batched).
+
+    ``nt_valid``/``n_valid`` may be shared scalars or (B,) per-problem
+    validity frontiers (the ragged-fleet path, DESIGN.md §11) — either way
+    they join the problem-axis vmap.
     """
     b = xt_chunks.shape[0]
     params = _broadcast_params(params, b)
+    ntb = jnp.broadcast_to(jnp.asarray(nt_valid), (b,))
+    nb = jnp.broadcast_to(jnp.asarray(n_valid), (b,))
     return jax.vmap(
-        lambda xt1, x1, p: assemble_cross_tiles(xt1, x1, p, nt_valid, n_valid)
-    )(xt_chunks, x_chunks, params)
+        lambda xt1, x1, p, nt1, n1: assemble_cross_tiles(xt1, x1, p, nt1, n1)
+    )(xt_chunks, x_chunks, params, ntb, nb)
 
 
 def assemble_prior_tiles_batched(
-    xt_chunks: jax.Array, params: km.SEKernelParams, nt_valid: int
+    xt_chunks: jax.Array, params: km.SEKernelParams, nt_valid
 ) -> jax.Array:
     """Problem-batched prior K_{X̂,X̂} grid (B, Mhat, Mhat, m, m)."""
-    params = _broadcast_params(params, xt_chunks.shape[0])
-    return jax.vmap(lambda xt1, p: assemble_prior_tiles(xt1, p, nt_valid))(
-        xt_chunks, params
+    b = xt_chunks.shape[0]
+    params = _broadcast_params(params, b)
+    ntb = jnp.broadcast_to(jnp.asarray(nt_valid), (b,))
+    return jax.vmap(lambda xt1, p, nt1: assemble_prior_tiles(xt1, p, nt1))(
+        xt_chunks, params, ntb
     )
-
-
-# ---------------------------------------------------------------------------
-# Padding helpers — canonical implementations live in repro.core.tiling
-# (batch- and dtype-aware); these aliases are kept as deprecated re-exports
-# for callers of the old predict.* names and warn on use.
-# ---------------------------------------------------------------------------
-
-
-def _deprecated_alias(fn, name: str):
-    @functools.wraps(fn)
-    def wrapper(*args, **kwargs):
-        warnings.warn(
-            f"repro.core.predict.{name} is deprecated; use "
-            f"repro.core.tiling.{name} (batch- and dtype-aware)",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return fn(*args, **kwargs)
-
-    return wrapper
-
-
-pad_features = _deprecated_alias(tiling.pad_features, "pad_features")
-pad_vector = _deprecated_alias(tiling.pad_vector, "pad_vector")
 
 
 def _resolve_dtype(dtype, *arrays):
@@ -243,11 +225,15 @@ class PosteriorState:
     lpacked: jax.Array     # (T, m, m) packed Cholesky factor of K
     alpha: jax.Array       # (M, m) chunks of K^{-1} y
     x_chunks: jax.Array    # (M, m, D) padded training features
-    n: int                 # valid training rows
+    n: int                 # valid training rows (bucket capacity when ragged)
     m: int                 # tile size
     params: km.SEKernelParams  # hyperparameters the factor was built with
     beta: Optional[jax.Array] = None      # (M, m) forward-solve chunks L^{-1} y
     y_chunks: Optional[jax.Array] = None  # (M, m) padded training targets
+    # ragged stacked states only (DESIGN.md §11): per-problem validity
+    # frontiers (B,) — each problem's factor is identity past its frontier
+    # and the prediction/NLML heads mask with these instead of ``n``.
+    n_valid: Optional[jax.Array] = None
 
     def extend(self, x_new: jax.Array, y_new: jax.Array, **kwargs) -> "PosteriorState":
         """Absorb new observations in O(n^2 b) (block Cholesky append).
@@ -347,8 +333,8 @@ def _fused_program_fn(
     n_streams: Optional[int],
     backend: str,
     update_dtype,
-    n_valid: int,
-    nt_valid: int,
+    n_valid: Optional[int],
+    nt_valid: Optional[int],
     batch_dispatch: str = "flat",
 ):
     """The ONE jit of the fused pipeline, cached per static configuration.
@@ -360,7 +346,32 @@ def _fused_program_fn(
     through the plan.  The Pallas backend bakes hyperparameters into its
     assembly kernels as compile-time constants, so it runs unjitted at this
     level (each Pallas call is its own compiled kernel).
+
+    **Ragged variant:** keyed with ``n_valid=None`` the returned function
+    takes the validity frontiers as two extra *traced* operands
+    ``fn(xc, yc, xtc, params, n_valid, nt_valid)`` — (B,) arrays or
+    scalars.  One jit trace (and one executor Plan) then serves every
+    per-problem size mix of a bucket geometry: frontier values never force
+    a retrace (DESIGN.md §11).
     """
+    if n_valid is None:
+
+        def ragged_fn(xc, yc, xtc, params, nv, ntv):
+            return executor.run_program(
+                xc,
+                yc,
+                xtc,
+                params,
+                nv,
+                ntv,
+                uncertainty=uncertainty,
+                n_streams=n_streams,
+                backend=backend,
+                update_dtype=update_dtype,
+                batch_dispatch=batch_dispatch,
+            )
+
+        return jax.jit(ragged_fn) if backend == "jnp" else ragged_fn
 
     def fn(xc, yc, xtc, params):
         return executor.run_program(
@@ -442,6 +453,8 @@ def predict_fused_batched(
     dtype=None,
     with_state: bool = False,
     batch_dispatch: str = "flat",
+    n_valid=None,
+    nt_valid=None,
 ):
     """Fused prediction for B independent GPs in ONE batched program.
 
@@ -451,6 +464,14 @@ def predict_fused_batched(
     drives all B problems — identical launch count, every launch B times
     wider (DESIGN.md §9).  Shares :func:`_fused_program_fn`'s jit cache with
     the unbatched path (jit re-specializes on the leading B axis).
+
+    **Ragged batches (DESIGN.md §11):** pass ``n_valid`` — a (B,) vector of
+    per-problem valid training counts — when the stacked problems are
+    zero-padded to a shared bucket capacity; rows past each frontier must
+    be zero.  ``nt_valid`` optionally masks per-problem test counts the
+    same way (mean/sigma rows past a problem's own count come back zero).
+    The frontiers are traced operands: every size mix of the same stacked
+    shape shares one jit trace and one executor Plan.
 
     Returns mean (B, n̂), or ``(mean, sigma)`` with sigma (B, n̂, n̂) when
     ``full_cov``; with ``with_state=True`` also the stacked
@@ -462,10 +483,20 @@ def predict_fused_batched(
     xc = tiling.pad_features(x_train, m, dtype=dtype)    # (B, M, m, D)
     yc = tiling.pad_vector(y_train, m, dtype=dtype)      # (B, M, m)
     xtc = tiling.pad_features(x_test, m, dtype=dtype)    # (B, Q, m, D)
-    fn = _fused_program_fn(
-        full_cov, n_streams, backend, update_dtype, n, nh, batch_dispatch
-    )
-    env = fn(xc, yc, xtc, params)
+    ragged = n_valid is not None
+    if ragged:
+        nv = jnp.asarray(n_valid, jnp.int32)
+        ntv = jnp.asarray(nh if nt_valid is None else nt_valid, jnp.int32)
+        fn = _fused_program_fn(
+            full_cov, n_streams, backend, update_dtype, None, None,
+            batch_dispatch,
+        )
+        env = fn(xc, yc, xtc, params, nv, ntv)
+    else:
+        fn = _fused_program_fn(
+            full_cov, n_streams, backend, update_dtype, n, nh, batch_dispatch
+        )
+        env = fn(xc, yc, xtc, params)
     mean = env["mean"].reshape(b, -1)[:, :nh]
     if full_cov:
         q_tiles = xtc.shape[1]
@@ -478,6 +509,7 @@ def predict_fused_batched(
     state = PosteriorState(
         lpacked=env["packed"], alpha=env["alpha"], x_chunks=xc, n=n, m=m,
         params=params, beta=env["y"], y_chunks=yc,
+        n_valid=nv if ragged else None,
     )
     return result, state
 
@@ -489,6 +521,7 @@ def predict_from_state_batched(
     full_cov: bool = False,
     n_streams: Optional[int] = None,
     dtype=None,
+    nt_valid=None,
 ):
     """Warm batched prediction from a stacked :class:`PosteriorState`.
 
@@ -496,12 +529,21 @@ def predict_from_state_batched(
     Reuses the cached O(n^3) work and runs only the cross-covariance / mean
     (and optionally the matrix-solve tail) — all through the batched
     executor plans.  Assembly uses the jnp tile kernel (per-problem params).
+
+    Ragged states (``state.n_valid`` set) mask the cross covariance at each
+    problem's own frontier — required for correctness, not just economy:
+    the padded feature rows are zeros, so an unmasked K_* column against
+    them would be k(x̂, 0) ≠ 0 and corrupt the solve tail (the masked
+    factor is identity there).  ``nt_valid`` (scalar or (B,)) optionally
+    masks per-problem test counts; rows past a problem's count come back 0.
     """
     params = state.params
     b, nh = x_test.shape[0], x_test.shape[1]
     dtype = state.x_chunks.dtype if dtype is None else jnp.dtype(dtype)
     xtc = tiling.pad_features(x_test, state.m, dtype=dtype)
-    kstar = assemble_cross_tiles_batched(xtc, state.x_chunks, params, nh, state.n)
+    nv = state.n if state.n_valid is None else state.n_valid
+    ntv = nh if nt_valid is None else nt_valid
+    kstar = assemble_cross_tiles_batched(xtc, state.x_chunks, params, ntv, nv)
     mean = triangular.tiled_matvec(kstar, state.alpha).reshape(b, -1)[:, :nh]
     if not full_cov:
         return mean
@@ -512,7 +554,7 @@ def predict_from_state_batched(
         state.lpacked, b_tiles, n_streams=n_streams
     )
     w = triangular.tiled_gram(v)                         # (B, Q, Q, mq, mq)
-    prior = assemble_prior_tiles_batched(xtc, params, nh)
+    prior = assemble_prior_tiles_batched(xtc, params, ntv)
     sigma = tiling.untile_dense(prior - w)[:, :nh, :nh]
     return mean, sigma
 
@@ -528,6 +570,7 @@ def nlml_program_env(
     update_dtype=None,
     dtype=None,
     batch_dispatch: str = "flat",
+    n_valid=None,
 ):
     """Run the NLML prefix of the fused program (DESIGN.md §8).
 
@@ -545,13 +588,21 @@ def nlml_program_env(
 
     Problem-batched with x_train (B, n, D) / y_train (B, n): the env buffers
     gain the leading B axis and ``env["alpha"]`` / ``env["packed"]`` hold B
-    independent weight chunks / factors (DESIGN.md §9).
+    independent weight chunks / factors (DESIGN.md §9).  Ragged batches
+    pass ``n_valid`` (B,) per-problem counts — stacks zero-padded to a
+    bucket capacity factor through ONE traced program (DESIGN.md §11).
     """
     n = x_train.shape[-2]
     dtype = _resolve_dtype(dtype, x_train)
     xc = tiling.pad_features(x_train, m, dtype=dtype)
     yc = tiling.pad_vector(y_train, m, dtype=dtype)
     xtc = jnp.zeros(xc.shape[:-3] + (0, m, xc.shape[-1]), dtype)
+    if n_valid is not None:
+        fn = _fused_program_fn(
+            False, n_streams, backend, update_dtype, None, None, batch_dispatch
+        )
+        nv = jnp.asarray(n_valid, jnp.int32)
+        return fn(xc, yc, xtc, params, nv, jnp.asarray(0, jnp.int32)), yc
     fn = _fused_program_fn(
         False, n_streams, backend, update_dtype, n, 0, batch_dispatch
     )

@@ -19,7 +19,7 @@ module builds the same DAG at trace time and derives:
 
 The schedule is compiled into gather/compute/scatter batches by
 :mod:`repro.core.executor` and consumed through :mod:`repro.core.cholesky`
-(``tiled_cholesky(..., schedule=True)``) and :mod:`repro.core.triangular`
+(``tiled_cholesky``) and :mod:`repro.core.triangular`
 (the solve DAGs below); it is also unit-tested directly (task counts,
 dependency sanity, critical path length).  See DESIGN.md §3.
 

@@ -171,17 +171,22 @@ def grow_packed_indices(m_tiles_old: int) -> np.ndarray:
 
 
 @functools.lru_cache(maxsize=None)
-def replace_last_row_indices(m_tiles: int) -> np.ndarray:
-    """Packed slots of the last tile-row (R, 0..R), R = m_tiles - 1.
+def replace_row_indices(row: int, m_tiles: int) -> np.ndarray:
+    """Packed slots of tile-row ``row``: (row, 0..row), corner last.
 
-    Scattering a row buffer (R + 1 tiles, corner last) into these slots
-    overwrites the last tile-row of an existing packed store in place —
-    the append path that refills a partially padded trailing tile.
+    Scattering a row buffer (row + 1 tiles, corner last) into these slots
+    overwrites one tile-row of an existing packed store in place — the
+    append path that refills a partially padded trailing tile, and the
+    ragged batch sweep that refills interior rows (DESIGN.md §11).
     """
-    r = m_tiles - 1
     return np.array(
-        [packed_index(r, j, m_tiles) for j in range(m_tiles)], np.int32
+        [packed_index(row, j, m_tiles) for j in range(row + 1)], np.int32
     )
+
+
+def replace_last_row_indices(m_tiles: int) -> np.ndarray:
+    """Packed slots of the last tile-row (R, 0..R), R = m_tiles - 1."""
+    return replace_row_indices(m_tiles - 1, m_tiles)
 
 
 @functools.lru_cache(maxsize=None)
@@ -202,6 +207,107 @@ def shrink_packed_indices(m_tiles_old: int) -> Tuple[np.ndarray, np.ndarray]:
         [packed_index(i, 0, m_old) for i in range(1, m_old)], np.int32
     )
     return trailing, evicted
+
+
+@functools.lru_cache(maxsize=None)
+def embed_packed_indices(m_tiles_old: int, m_tiles_new: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Gather map embedding a packed factor into a larger tile geometry.
+
+    Because padding is identity by construction (DESIGN.md §1), the factor
+    of the same problem at a larger store is exactly
+    ``blockdiag(L_old, I)`` — growing a factor from ``m_tiles_old`` to
+    ``m_tiles_new`` tile-rows is a pure gather, no FLOPs.  Returns
+    ``(src, kind)`` of length ``num_packed_tiles(m_tiles_new)``: ``kind``
+    0 copies ``old_packed[src]``, 1 is an identity tile, 2 a zero tile.
+    This is what makes bucket migration cheap in ``gp.GPFleet``: a problem
+    crossing a bucket boundary re-embeds its live factor into the next
+    bucket's geometry instead of refactorizing (DESIGN.md §11).
+    """
+    if m_tiles_new < m_tiles_old:
+        raise ValueError(f"cannot shrink: {m_tiles_old} -> {m_tiles_new}")
+    t_new = num_packed_tiles(m_tiles_new)
+    src = np.zeros(t_new, np.int32)
+    kind = np.full(t_new, 2, np.int32)
+    for j in range(m_tiles_new):
+        for i in range(j, m_tiles_new):
+            slot = packed_index(i, j, m_tiles_new)
+            if i < m_tiles_old and j < m_tiles_old:
+                src[slot] = packed_index(i, j, m_tiles_old)
+                kind[slot] = 0
+            elif i == j:
+                kind[slot] = 1
+    return src, kind
+
+
+def embed_packed(packed: jax.Array, m_tiles_old: int, m_tiles_new: int) -> jax.Array:
+    """Embed packed factor tiles (..., T_old, m, m) into (..., T_new, m, m)."""
+    src, kind = embed_packed_indices(m_tiles_old, m_tiles_new)
+    m = packed.shape[-1]
+    tiles = jnp.take(packed, jnp.asarray(src), axis=-3)
+    kindb = jnp.asarray(kind)[:, None, None]
+    eye = jnp.eye(m, dtype=packed.dtype)
+    tiles = jnp.where(kindb == 0, tiles, jnp.where(kindb == 1, eye, 0.0))
+    return tiles
+
+
+DEFAULT_BUCKETS = "pow2"
+
+
+def bucket_boundaries(m_tiles_max: int, boundaries=DEFAULT_BUCKETS) -> Tuple[int, ...]:
+    """Normalize a bucket-boundary spec to a sorted tuple of tile-count caps.
+
+    ``"pow2"`` — powers of two up to (and covering) ``m_tiles_max``;
+    an int k — k geometrically spaced caps from 1 to ``m_tiles_max``;
+    an iterable — explicit caps, extended with ``m_tiles_max`` if they do
+    not cover it.  Every spec is guaranteed to cover ``m_tiles_max``.
+    """
+    m_tiles_max = max(int(m_tiles_max), 1)
+    if boundaries == "pow2":
+        caps = []
+        c = 1
+        while c < m_tiles_max:
+            caps.append(c)
+            c *= 2
+        caps.append(c)
+        return tuple(caps)
+    if isinstance(boundaries, int):
+        k = max(boundaries, 1)
+        caps = sorted(
+            {
+                max(1, int(round(m_tiles_max ** (i / (k - 1)))) if k > 1 else m_tiles_max)
+                for i in range(k)
+            }
+        )
+        if caps[-1] != m_tiles_max:
+            caps[-1] = m_tiles_max
+        return tuple(dict.fromkeys(caps))
+    caps = sorted({int(c) for c in boundaries if int(c) >= 1})
+    if not caps or caps[-1] < m_tiles_max:
+        caps.append(m_tiles_max)
+    return tuple(caps)
+
+
+def bucket_problems(ns, m: int, boundaries=DEFAULT_BUCKETS):
+    """Assign ragged problems to tile-geometry buckets (DESIGN.md §11).
+
+    ``ns`` are per-problem observation counts, ``m`` the tile size.  Each
+    problem needs ``ceil(n / m)`` tile-rows; that count rounds UP to the
+    smallest boundary cap that fits, so problems of nearby sizes share one
+    bucket — one fused program, one lru-cached B-invariant Plan — and the
+    per-problem ``n_valid`` mask absorbs the (at most one-boundary-step)
+    padding.  Returns ``{cap_tiles: [problem indices]}``, caps ascending,
+    preserving submission order within a bucket.
+    """
+    ns = [int(n) for n in ns]
+    if any(n < 1 for n in ns):
+        raise ValueError(f"every problem needs at least one observation: {ns}")
+    need = [max(-(-n // m), 1) for n in ns]
+    caps = bucket_boundaries(max(need), boundaries)
+    out: dict = {}
+    for i, nd in enumerate(need):
+        cap = next(c for c in caps if c >= nd)
+        out.setdefault(cap, []).append(i)
+    return dict(sorted(out.items()))
 
 
 def packed_bytes(m_tiles: int, m: int, dtype=jnp.float32) -> int:

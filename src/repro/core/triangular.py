@@ -172,15 +172,30 @@ def kinv_tiles_from_factor(
     return tiled_gram(z)
 
 
-def logdet_from_factor(lpacked: jax.Array, m_tiles: int, n_valid: Optional[int] = None) -> jax.Array:
+def logdet_from_factor(lpacked: jax.Array, m_tiles: int, n_valid=None) -> jax.Array:
     """log det K = 2 sum_i log diag(L)_i from the packed factor.
 
-    Padded rows contribute log(1) = 0 by construction (identity padding), so
-    no masking is required; n_valid is accepted for interface clarity.
-    Batched factors (B, T, m, m) return per-problem log-determinants (B,).
+    When the factor came out of the masked assembly path its padding is
+    exactly identity and contributes log(1) = 0 with no masking.  But a
+    factor whose padded diagonal is anything else — a raw ``pack_lower`` of
+    a dense matrix with junk past ``n_valid``, or a ragged-batch factor
+    where each problem's frontier differs — would silently corrupt the
+    log-determinant, so when ``n_valid`` is given the diagonal entries at
+    global index >= n_valid are masked to 1 before the log.  ``n_valid``
+    may be a scalar or, for batched factors (B, T, m, m), a (B,) array of
+    per-problem frontiers.  Batched factors return per-problem
+    log-determinants (B,).
     """
-    del n_valid
     slots = _diag_slots(m_tiles)
     tiles = lpacked[:, slots] if lpacked.ndim == 4 else lpacked[slots]
     diags = jnp.diagonal(tiles, axis1=-2, axis2=-1)  # (..., M, m)
+    if n_valid is not None:
+        m = lpacked.shape[-1]
+        gi = jnp.arange(m_tiles, dtype=jnp.int32)[:, None] * m + jnp.arange(
+            m, dtype=jnp.int32
+        )[None, :]                                    # (M, m) global indices
+        nv = jnp.asarray(n_valid)
+        if nv.ndim > 0:                               # per-problem (B,)
+            nv = nv[:, None, None]
+        diags = jnp.where(gi < nv, diags, jnp.ones((), diags.dtype))
     return 2.0 * jnp.sum(jnp.log(diags), axis=(-2, -1))

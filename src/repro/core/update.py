@@ -37,6 +37,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import executor, tiling, triangular
 
@@ -114,7 +115,7 @@ def _append_step_fn(
                 [beta, beta_new[:, None] if batched else beta_new[None]], axis=-2
             )
         else:
-            slots = tiling.replace_last_row_indices(m_store)
+            slots = tiling.replace_row_indices(r_tiles, m_store)
             lpacked = (
                 lpacked.at[:, slots].set(row) if batched
                 else lpacked.at[slots].set(row)
@@ -287,6 +288,125 @@ def extend_state(
     return pred.PosteriorState(
         lpacked=lpacked, alpha=alpha, x_chunks=xc, n=n, m=m,
         params=state.params, beta=beta, y_chunks=yc,
+    )
+
+
+def extend_state_ragged(
+    state,
+    x_new: jax.Array,
+    y_new: jax.Array,
+    counts,
+    *,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    update_dtype=None,
+    batch_dispatch: str = "flat",
+    check_finite: bool = True,
+):
+    """Absorb per-problem arrival counts b_i into a ragged fleet state.
+
+    ``state`` is a stacked bucket state (B problems sharing one tile
+    geometry, per-problem frontiers in ``state.n_valid``); ``x_new`` is
+    (B, b_max, D) with each problem's arrivals in its leading ``counts[i]``
+    rows (rows past the count are ignored), ``y_new`` (B, b_max), and
+    ``counts`` a host-side (B,) int vector.  Every problem must stay within
+    the bucket capacity — crossing a boundary is a *migration*, handled one
+    level up by ``gp.GPFleet`` (re-embed via ``tiling.embed_packed``, then
+    extend in the destination bucket).
+
+    The sweep (DESIGN.md §11): first scatter all arrivals into the feature /
+    target chunks at each problem's own frontier, then refill tile-rows
+    R = min_i floor(n_i/m) .. max_i ceil(n_i'/m)-1 in increasing order for
+    the WHOLE batch with the final per-problem ``n_valid`` masking both
+    axes.  Row refill is idempotent: problems untouched at row R reproduce
+    their row (same masked assembly, same frozen prefix) and problems whose
+    frontier lies below R reproduce identity padding — so one shared
+    B-invariant append plan per row serves every ragged arrival mix.
+    """
+    from repro.core import predict as pred  # cycle: predict imports update
+
+    if state.x_chunks.ndim != 4:
+        raise ValueError("extend_state_ragged needs a stacked (B, ...) state")
+    if getattr(state, "n_valid", None) is None:
+        raise ValueError("extend_state_ragged needs a state with n_valid")
+    m = state.m
+    dtype = state.x_chunks.dtype
+    bsz, m_store, _, d = state.x_chunks.shape
+    capacity = m_store * m
+    x_new = jnp.asarray(x_new, dtype)
+    y_new = jnp.asarray(y_new, dtype)
+    if x_new.ndim == 2:  # 1-D problem convenience
+        x_new = x_new[..., None]
+    counts = np.asarray(counts, np.int64).reshape(-1)
+    if (
+        x_new.ndim != 3
+        or x_new.shape[0] != bsz
+        or x_new.shape[-1] != d
+        or y_new.shape != x_new.shape[:-1]
+        or counts.shape != (bsz,)
+    ):
+        raise ValueError(
+            f"need x_new (B, b_max, D={d}), matching y_new and counts (B,); "
+            f"got x {tuple(x_new.shape)}, y {tuple(y_new.shape)}, "
+            f"counts {counts.shape}"
+        )
+    b_max = x_new.shape[1]
+    if np.any(counts < 0) or np.any(counts > b_max):
+        raise ValueError(f"counts must lie in [0, b_max={b_max}]: {counts}")
+    n_old = np.asarray(state.n_valid, np.int64)
+    n_new = n_old + counts
+    if np.any(n_new > capacity):
+        over = np.nonzero(n_new > capacity)[0].tolist()
+        raise ValueError(
+            f"problems {over} would outgrow the bucket capacity {capacity}; "
+            "migrate them to a larger geometry first (gp.GPFleet does)"
+        )
+    if not np.any(counts > 0):
+        return state
+
+    beta, yc = _live_chunks(state)
+    lpacked, xc = state.lpacked, state.x_chunks
+
+    # 1) scatter arrivals at each problem's frontier (out-of-bounds rows —
+    #    the per-problem tail past counts[i] — drop).
+    nv_dev = jnp.asarray(n_old, jnp.int32)
+    cnt_dev = jnp.asarray(counts, jnp.int32)
+
+    def scatter_one(xf, yf, xs, ys, n0, cnt):
+        ar = jnp.arange(b_max, dtype=jnp.int32)
+        pos = jnp.where(ar < cnt, n0 + ar, capacity)
+        return (
+            xf.at[pos].set(xs, mode="drop"),
+            yf.at[pos].set(ys, mode="drop"),
+        )
+
+    xc_flat, yc_flat = jax.vmap(scatter_one)(
+        xc.reshape(bsz, capacity, d), yc.reshape(bsz, capacity),
+        x_new, y_new, nv_dev, cnt_dev,
+    )
+    xc = xc_flat.reshape(bsz, m_store, m, d)
+    yc = yc_flat.reshape(bsz, m_store, m)
+
+    # 2) refill the affected tile-rows, lowest first, whole batch at once.
+    growing = counts > 0
+    r_lo = int(np.min(n_old[growing]) // m)
+    r_hi = int(np.max(n_new[growing] - 1) // m)
+    nv_new_dev = jnp.asarray(n_new, jnp.int32)
+    for r in range(r_lo, r_hi + 1):
+        step = _append_step_fn(
+            r, m_store, False, n_streams, backend, update_dtype,
+            True, batch_dispatch,
+        )
+        lpacked, xc, yc, beta = step(
+            lpacked, xc, yc, beta, xc[:, r], yc[:, r], state.params, nv_new_dev
+        )
+
+    _, alpha = _resolve_fn(n_streams, False)(lpacked, beta)
+    if check_finite:
+        _check((alpha,), "ragged append")
+    return pred.PosteriorState(
+        lpacked=lpacked, alpha=alpha, x_chunks=xc, n=state.n, m=m,
+        params=state.params, beta=beta, y_chunks=yc, n_valid=nv_new_dev,
     )
 
 

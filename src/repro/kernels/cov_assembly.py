@@ -30,19 +30,21 @@ def _cov_tile_kernel(
     xb_ref,
     row0_ref,
     col0_ref,
+    nvr_ref,
+    nvc_ref,
     o_ref,
     *,
     lengthscale: float,
     vertical: float,
     noise: float,
-    n_valid_r: int,
-    n_valid_c: int,
     symmetric: bool,
 ):
     xa = xa_ref[0]                      # (m, D)
     xb = xb_ref[0]                      # (mb, D)
     row0 = row0_ref[0]
     col0 = col0_ref[0]
+    n_valid_r = nvr_ref[0]
+    n_valid_c = nvc_ref[0]
     na = jnp.sum(xa * xa, axis=-1)[:, None]
     nb = jnp.sum(xb * xb, axis=-1)[None, :]
     cross = jax.lax.dot_general(
@@ -71,21 +73,28 @@ def cov_tiles(
     lengthscale: float,
     vertical: float,
     noise: float,
-    n_valid_r: int,
-    n_valid_c: int,
+    n_valid_r,
+    n_valid_c,
     symmetric: bool,
     interpret: bool = True,
 ) -> jax.Array:
-    """Assemble a batch of covariance tiles: returns (T, m, mb)."""
+    """Assemble a batch of covariance tiles: returns (T, m, mb).
+
+    ``n_valid_r``/``n_valid_c`` may be scalars (one mask for every tile) or
+    (T,) arrays (a per-tile mask — the ragged-batch path, where tiles of B
+    different problems share one grid and each carries its problem's
+    validity frontier).  Either way they become (1,)-block i32 operands
+    indexed by the grid step, exactly like ``row0``/``col0``.
+    """
     t, m, d = xa_stack.shape
     mb = xb_stack.shape[1]
+    nvr = jnp.broadcast_to(jnp.asarray(n_valid_r, jnp.int32), (t,))
+    nvc = jnp.broadcast_to(jnp.asarray(n_valid_c, jnp.int32), (t,))
     kern = functools.partial(
         _cov_tile_kernel,
         lengthscale=float(lengthscale),
         vertical=float(vertical),
         noise=float(noise),
-        n_valid_r=int(n_valid_r),
-        n_valid_c=int(n_valid_c),
         symmetric=symmetric,
     )
     return pl.pallas_call(
@@ -96,8 +105,10 @@ def cov_tiles(
             pl.BlockSpec((1, mb, d), lambda i: (i, 0, 0)),
             pl.BlockSpec((1,), lambda i: (i,)),
             pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
         ],
         out_specs=pl.BlockSpec((1, m, mb), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((t, m, mb), xa_stack.dtype),
         interpret=interpret,
-    )(xa_stack, xb_stack, row0.astype(jnp.int32), col0.astype(jnp.int32))
+    )(xa_stack, xb_stack, row0.astype(jnp.int32), col0.astype(jnp.int32), nvr, nvc)

@@ -201,11 +201,13 @@ def trailing_update_batch(c_stack, a_stack, b_stack, *, update_dtype=None):
 # ---------------------------------------------------------------------------
 
 
-def assemble_packed_covariance(x_chunks: jax.Array, params, n_valid: int) -> jax.Array:
+def assemble_packed_covariance(x_chunks: jax.Array, params, n_valid) -> jax.Array:
     """(M, m, D) padded chunks -> packed lower covariance tiles (T, m, m).
 
     Hyperparameters must be concrete (the Pallas path bakes them in as
     compile-time constants; use the jnp backend for NLML differentiation).
+    ``n_valid`` may be a Python int or a traced scalar — it reaches the
+    kernel as a (1,)-block i32 operand, not a compile-time constant.
     """
     m_tiles, m, _ = x_chunks.shape
     rows, cols = tiling._packed_coords(m_tiles)
@@ -217,15 +219,15 @@ def assemble_packed_covariance(x_chunks: jax.Array, params, n_valid: int) -> jax
         lengthscale=float(params.lengthscale),
         vertical=float(params.vertical),
         noise=float(params.noise),
-        n_valid_r=int(n_valid),
-        n_valid_c=int(n_valid),
+        n_valid_r=n_valid,
+        n_valid_c=n_valid,
         symmetric=True,
         interpret=_interpret(),
     )
 
 
 def assemble_cross_tiles(
-    xt_chunks: jax.Array, x_chunks: jax.Array, params, nt_valid: int, n_valid: int
+    xt_chunks: jax.Array, x_chunks: jax.Array, params, nt_valid, n_valid
 ) -> jax.Array:
     """K_{X̂,X} tile grid (Mhat, M, m, m) via one batched kernel launch."""
     mh, m, _ = xt_chunks.shape
@@ -240,8 +242,8 @@ def assemble_cross_tiles(
         lengthscale=float(params.lengthscale),
         vertical=float(params.vertical),
         noise=float(params.noise),
-        n_valid_r=int(nt_valid),
-        n_valid_c=int(n_valid),
+        n_valid_r=nt_valid,
+        n_valid_c=n_valid,
         symmetric=False,
         interpret=_interpret(),
     )

@@ -1,0 +1,13 @@
+"""Continuous-batching GP serving (DESIGN.md §11).
+
+The LLM-serving idea transplanted to GP fleets: requests against many
+independent, differently-sized GPs are drained in *waves*; each wave is
+executed through :class:`repro.core.gp.GPFleet`'s bucketed ragged programs
+(one fused launch per occupied bucket, per-problem frontiers masked), and
+buckets are re-formed between waves as observations land and problems
+migrate across geometry boundaries.
+"""
+
+from repro.serve.loop import ContinuousBatcher, Request, WaveStats
+
+__all__ = ["ContinuousBatcher", "Request", "WaveStats"]

@@ -1,0 +1,237 @@
+"""Wave-based continuous batching over a :class:`repro.core.gp.GPFleet`.
+
+The serving loop is deliberately synchronous — a single driver thread drains
+the request queue in waves, mirroring the paper's host-side task graph (the
+asynchrony lives in the fused program's wavefront schedule, not in Python
+threads).  One wave:
+
+1. drain everything queued so far;
+2. apply ALL observation requests as one ragged ``fleet.update`` — this is
+   the continuous-batching step: bucket membership is recomputed, problems
+   that outgrew their geometry migrate (``blockdiag(L, I)`` re-embed, zero
+   FLOPs) and every stable bucket absorbs its arrivals through one shared
+   append sweep;
+3. answer ALL prediction requests via ``fleet.predict_each`` — one warm
+   batched launch per occupied bucket, per-problem test counts masked with
+   ``nt_valid``;
+4. record per-request latencies (submit → results materialized).
+
+Requests against the same problem within one wave are served against the
+state at the *start* of the wave (observations land before predictions, so
+a wave's predictions do see its own wave's observations — the queue order
+inside a wave is observe-then-predict by construction, matching how a
+replica would batch its inbox).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.gp import GPFleet
+
+PREDICT = "predict"
+OBSERVE = "observe"
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued unit of work against a single fleet problem."""
+
+    rid: int
+    kind: str                  # PREDICT | OBSERVE
+    problem: int
+    x: np.ndarray              # test points (predict) or features (observe)
+    y: Optional[np.ndarray]    # targets (observe only)
+    t_submit: float
+    uncertainty: bool = False  # predict only: also return the variance diag
+    t_done: Optional[float] = None
+    result: object = None
+
+
+@dataclasses.dataclass
+class WaveStats:
+    """What one call to :meth:`ContinuousBatcher.step` did."""
+
+    wave: int
+    n_predict: int
+    n_observe: int
+    points_absorbed: int
+    buckets: Tuple[int, ...]   # occupied cap_tiles AFTER the wave
+    migrations: int            # problems whose bucket capacity changed
+    duration_s: float
+
+
+class ContinuousBatcher:
+    """Drains request waves through a bucketed ragged GP fleet.
+
+    ``clock`` is injectable for deterministic tests; it must be monotonic.
+    Results are kept until :meth:`result` pops them.
+    """
+
+    def __init__(self, fleet: GPFleet, *, clock: Callable[[], float] = time.perf_counter):
+        self.fleet = fleet
+        self.clock = clock
+        self._queue: List[Request] = []
+        self._done: Dict[int, Request] = {}
+        self._next_rid = 0
+        self._wave = 0
+        self._latencies: List[float] = []
+        self._t0 = clock()
+        self._served = 0
+
+    # -- submission ---------------------------------------------------------
+
+    def submit_predict(self, problem: int, x_test, *, uncertainty: bool = False) -> int:
+        """Queue a prediction request; returns its request id."""
+        return self._push(PREDICT, problem, np.asarray(x_test), None, uncertainty)
+
+    def submit_observe(self, problem: int, x_new, y_new) -> int:
+        """Queue new observations for one problem; returns its request id."""
+        x_new = np.asarray(x_new)
+        y_new = np.asarray(y_new).reshape(-1)
+        return self._push(OBSERVE, problem, x_new, y_new, False)
+
+    def _push(self, kind, problem, x, y, uncertainty) -> int:
+        if not 0 <= problem < self.fleet.batch_size:
+            raise ValueError(
+                f"problem must be in [0, {self.fleet.batch_size}); got {problem}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(
+            Request(rid, kind, problem, x, y, self.clock(), uncertainty)
+        )
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- the wave loop ------------------------------------------------------
+
+    def step(self) -> WaveStats:
+        """Run one wave: absorb every queued observation, answer every
+        queued prediction, re-forming buckets in between."""
+        t0 = self.clock()
+        wave, self._queue = self._queue, []
+        observes = [r for r in wave if r.kind == OBSERVE]
+        predicts = [r for r in wave if r.kind == PREDICT]
+        before = self._capacity_map()
+
+        absorbed = 0
+        if observes:
+            b = self.fleet.batch_size
+            d = self.fleet._xs[0].shape[-1]
+            xs: List[List[np.ndarray]] = [[] for _ in range(b)]
+            ys: List[List[np.ndarray]] = [[] for _ in range(b)]
+            for r in observes:
+                xs[r.problem].append(r.x.reshape(-1, d))
+                ys[r.problem].append(r.y)
+                absorbed += r.y.shape[0]
+            xcat = [
+                np.concatenate(px) if px else np.zeros((0, d), np.float32)
+                for px in xs
+            ]
+            ycat = [
+                np.concatenate(py) if py else np.zeros((0,), np.float32)
+                for py in ys
+            ]
+            self.fleet.update(xcat, ycat)
+
+        if predicts:
+            d = self.fleet._xs[0].shape[-1]
+            per_problem: Dict[int, List[Request]] = {}
+            for r in predicts:
+                per_problem.setdefault(r.problem, []).append(r)
+            tests = []
+            want_unc = any(r.uncertainty for r in predicts)
+            for i in range(self.fleet.batch_size):
+                reqs = per_problem.get(i, ())
+                tests.append(
+                    np.concatenate([r.x.reshape(-1, d) for r in reqs])
+                    if reqs else np.zeros((0, d), np.float32)
+                )
+            outs = self.fleet.predict_each(tests, full_cov=want_unc)
+            jax.block_until_ready(outs)
+            t_done = self.clock()
+            for i, reqs in per_problem.items():
+                if want_unc:
+                    mean = np.asarray(outs[i][0])
+                    var = np.diagonal(np.asarray(outs[i][1]))
+                else:
+                    mean = np.asarray(outs[i])
+                    var = None
+                off = 0
+                for r in reqs:
+                    k = r.x.reshape(-1, d).shape[0]
+                    sl = slice(off, off + k)
+                    r.result = (
+                        (mean[sl], var[sl]) if r.uncertainty else mean[sl]
+                    )
+                    off += k
+                    self._finish(r, t_done)
+
+        t1 = self.clock()
+        for r in observes:
+            r.result = r.y.shape[0]
+            self._finish(r, t1)
+        after = self._capacity_map()
+        migrations = sum(
+            1 for i, c in after.items() if before.get(i) not in (None, c)
+        )
+        self._wave += 1
+        return WaveStats(
+            wave=self._wave - 1,
+            n_predict=len(predicts),
+            n_observe=len(observes),
+            points_absorbed=absorbed,
+            buckets=tuple(sorted({c for c in after.values()})),
+            migrations=migrations,
+            duration_s=t1 - t0,
+        )
+
+    def run_until_idle(self, max_waves: int = 1000) -> List[WaveStats]:
+        """Step until the queue drains (new work may be enqueued by callers
+        between waves; this only loops over what is already queued)."""
+        stats = []
+        while self._queue and len(stats) < max_waves:
+            stats.append(self.step())
+        return stats
+
+    # -- results / accounting -----------------------------------------------
+
+    def result(self, rid: int):
+        """Pop a finished request's result; raises KeyError if unknown or
+        still pending."""
+        return self._done.pop(rid).result
+
+    def summary(self) -> Dict[str, float]:
+        """Throughput / latency digest over every finished request."""
+        lat = np.asarray(self._latencies) if self._latencies else np.zeros(1)
+        elapsed = max(self.clock() - self._t0, 1e-9)
+        return {
+            "requests": float(self._served),
+            "waves": float(self._wave),
+            "req_per_s": self._served / elapsed,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "max_ms": float(lat.max() * 1e3),
+        }
+
+    def _finish(self, r: Request, t: float) -> None:
+        r.t_done = t
+        self._latencies.append(t - r.t_submit)
+        self._done[r.rid] = r
+        self._served += 1
+
+    def _capacity_map(self) -> Dict[int, int]:
+        return {
+            i: cap
+            for cap, idx in self.fleet.bucket_assignment().items()
+            for i in idx
+        }

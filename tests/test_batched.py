@@ -210,21 +210,11 @@ def test_gpbatch_validation_and_broadcast(rng):
     assert mixed.nlml().shape == (3,)
 
 
-def test_padding_helpers_moved_to_tiling(rng):
-    """predict.pad_* are deprecation aliases of the tiling implementations,
-    which are batch-aware; calling them emits a DeprecationWarning."""
-    x1 = jnp.asarray(rng.standard_normal((10, 2)).astype(np.float32))
-    y1 = jnp.asarray(rng.standard_normal(10).astype(np.float32))
-    with pytest.warns(DeprecationWarning, match="tiling.pad_features"):
-        xc1 = pred.pad_features(x1, 4)
-    np.testing.assert_array_equal(
-        np.asarray(xc1), np.asarray(tiling.pad_features(x1, 4))
-    )
-    with pytest.warns(DeprecationWarning, match="tiling.pad_vector"):
-        yc1 = pred.pad_vector(y1, 4)
-    np.testing.assert_array_equal(
-        np.asarray(yc1), np.asarray(tiling.pad_vector(y1, 4))
-    )
+def test_padding_helpers_batched(rng):
+    """tiling.pad_* are batch-aware (the predict.pad_* deprecation aliases
+    were removed; tiling owns the implementations)."""
+    assert not hasattr(pred, "pad_features")
+    assert not hasattr(pred, "pad_vector")
     x = jnp.asarray(rng.standard_normal((3, 10, 2)).astype(np.float32))
     xc = tiling.pad_features(x, 4)
     assert xc.shape == (3, 3, 4, 2)

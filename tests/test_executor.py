@@ -18,7 +18,7 @@ def _spd(rng, n, dtype=np.float32):
 
 
 # ---------------------------------------------------------------------------
-# Cholesky equivalence: executor vs monolithic vs legacy column loop.
+# Cholesky equivalence: executor vs monolithic reference.
 # ---------------------------------------------------------------------------
 
 
@@ -31,16 +31,6 @@ def test_executor_cholesky_matches_monolithic(rng, n, m, n_streams):
     )
     l_m = np.asarray(chol.monolithic_cholesky(jnp.asarray(k)))
     np.testing.assert_allclose(l_e, l_m, atol=2e-3)
-
-
-@pytest.mark.parametrize("n_streams", [None, 2])
-def test_executor_matches_column_loop(rng, n_streams):
-    k = tiling.pack_lower(jnp.asarray(_spd(rng, 96)), 16)
-    l_sched = chol.tiled_cholesky(k, n_streams=n_streams, schedule=True)
-    l_loop = chol.tiled_cholesky(k, n_streams=n_streams, schedule=False)
-    np.testing.assert_allclose(
-        np.asarray(l_sched), np.asarray(l_loop), atol=1e-5
-    )
 
 
 @pytest.mark.parametrize("n_streams", [None, 2])

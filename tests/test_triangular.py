@@ -86,3 +86,32 @@ def test_logdet(factored):
     np.testing.assert_allclose(
         float(ld), 2 * np.sum(np.log(np.diagonal(lref))), rtol=1e-5
     )
+
+
+def test_logdet_masks_padding(rng):
+    """Regression (DESIGN.md §11): a factor padded past its frontier must
+    log-det only its valid rows — unmasked, the padding corrupts the value.
+
+    The padded store is factored from blockdiag(K, c*I) with c != 1, so the
+    padding's diagonal contributes log(c) per padded row: n_valid MUST mask
+    it out (the old signature deleted n_valid and summed every row)."""
+    n, cap, m = 40, 64, 16
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    k = a @ a.T + n * np.eye(n, dtype=np.float32)
+    kpad = 4.0 * np.eye(cap, dtype=np.float32)  # padding diag 4 -> log != 0
+    kpad[:n, :n] = k
+    lp = chol.tiled_cholesky(tiling.pack_lower(jnp.asarray(kpad), m))
+    ref = 2 * np.sum(np.log(np.diagonal(np.linalg.cholesky(k))))
+
+    masked = triangular.logdet_from_factor(lp, cap // m, n_valid=n)
+    np.testing.assert_allclose(float(masked), ref, rtol=1e-5)
+    unmasked = triangular.logdet_from_factor(lp, cap // m)
+    assert abs(float(unmasked) - ref) > 1.0  # the padding would corrupt it
+
+    # per-problem (B,) frontiers on a stacked store
+    lps = jnp.stack([lp, lp])
+    lds = triangular.logdet_from_factor(
+        lps, cap // m, n_valid=jnp.asarray([n, cap])
+    )
+    np.testing.assert_allclose(float(lds[0]), ref, rtol=1e-5)
+    np.testing.assert_allclose(float(lds[1]), float(unmasked), rtol=1e-5)
