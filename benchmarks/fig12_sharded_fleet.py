@@ -1,0 +1,133 @@
+"""Fig. 12 (ours): sharded fleets vs one sharded big GP — the crossover.
+
+A fixed observation budget N can be spent two ways on a multi-device mesh:
+
+* ``fleet``      — B independent GPs of n = N/B points each, stacked into a
+  :class:`repro.core.gp.GPBatch` whose problem axis B is sharded over the
+  mesh's DP axes (DESIGN.md §12).  Pure data parallelism: zero collectives,
+  every device runs the same B-invariant fused program over its B/P slice.
+* ``single_big`` — ONE GP over all N points, sharded over *tiles* through
+  the block-cyclic SPMD pipeline (``core.distributed``): each device owns a
+  2-D block-cyclic slice of the O(N^2) covariance and the factorization
+  communicates panels every wave.
+
+Small B (few, large problems) favors tile sharding — the fleet path leaves
+devices idle once B < P and each problem's O(n^3) dominates.  Large B
+(many, small problems) favors the fleet — no collectives, perfect scaling
+in B, and the single big GP pays O(N^3) = O((B n)^3) for work that is
+semantically block-diagonal.  This figure sweeps B at fixed N and charts
+both wall times; the crossover point is the capacity-planning guidance
+quoted in DESIGN.md §12.
+
+Run directly (``python -m benchmarks.fig12_sharded_fleet [--smoke]``) or
+through ``benchmarks.run`` (payload key ``sharded_fleet``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench, row
+
+
+def _grid(nd: int):
+    """Closest-to-square (p, q) factorization of the device count."""
+    p = max(k for k in range(1, int(np.sqrt(nd)) + 1) if nd % k == 0)
+    return p, nd // p
+
+
+def run(n_total=512, tile=32, bs=(1, 4, 16), d=4, n_test=64, out=print,
+        backend="jnp", seed=0):
+    import jax
+    import jax.numpy as jnp
+
+    from repro import compat
+    from repro.core import distributed as dist, tiling
+    from repro.core.gp import GPBatch
+    from repro.core.kernels_math import SEKernelParams
+    from repro.launch.mesh import make_fleet_mesh
+
+    rng = np.random.default_rng(seed)
+    params = SEKernelParams.paper_defaults()
+    nd = jax.device_count()
+    fleet_mesh = make_fleet_mesh()
+    xt = rng.standard_normal((n_test, d)).astype(np.float32)
+
+    # -- the contrast: ONE big GP over all N points, tile-sharded -----------
+    p, q = _grid(nd)
+    m_tiles = n_total // tile
+    if m_tiles % p or m_tiles % q:
+        p = q = 1  # grid must divide the tile count; fall back to 1 device
+    big_mesh = compat.make_mesh((p, q), ("data", "model"))
+    x_big = rng.standard_normal((n_total, d)).astype(np.float32)
+    y_big = rng.standard_normal(n_total).astype(np.float32)
+    pfn = jax.jit(dist.distributed_gp_predict_fn(
+        big_mesh, m_tiles=m_tiles, tile_size=tile, n_valid=n_total,
+        n_test_valid=n_test, params=params, variances=False,
+    ))
+    xc = tiling.pad_features(jnp.asarray(x_big), tile)
+    yc = tiling.pad_vector(jnp.asarray(y_big), tile)
+    xtc = tiling.pad_features(jnp.asarray(xt), tile)
+    t_big, _ = bench(pfn, xc, yc, xtc)
+    out(row(
+        f"fig12/single_big/N{n_total}", t_big,
+        f"devices={nd} grid={p}x{q} m_tiles={m_tiles}",
+    ))
+
+    # -- the fleet: B problems of N/B points, B-sharded ---------------------
+    results = []
+    for b in bs:
+        n = n_total // b
+        if n < tile:  # below one tile the geometry degenerates
+            continue
+        x = rng.standard_normal((b, n, d)).astype(np.float32)
+        y = rng.standard_normal((b, n)).astype(np.float32)
+        batch = GPBatch(
+            x, y, params=params, tile_size=min(tile, n),
+            op_backend=backend, mesh=fleet_mesh,
+        )
+
+        def cold(batch=batch):
+            batch.invalidate_cache()
+            return batch.predict(xt)
+
+        t_fleet, _ = bench(cold, reps=3)
+        speedup = t_big / t_fleet
+        out(row(
+            f"fig12/fleet/B{b}/n{n}", t_fleet,
+            f"devices={nd} dp_shards={min(b, nd)} "
+            f"speedup_vs_single_big={speedup:.3f}",
+        ))
+        results.append({
+            "N": n_total,
+            "B": b,
+            "n_each": n,
+            "tile": min(tile, n),
+            "devices": nd,
+            "grid": [p, q],
+            "us_fleet": t_fleet * 1e6,
+            "us_single_big": t_big * 1e6,
+            "speedup_vs_single_big": speedup,
+        })
+
+    # the crossover: smallest B at which the sharded fleet beats the
+    # tile-sharded single GP (None when it never does in this sweep)
+    cross = next(
+        (r["B"] for r in results if r["speedup_vs_single_big"] > 1.0), None
+    )
+    for r in results:
+        r["crossover_B"] = cross
+    out(row(f"fig12/crossover/N{n_total}", 0.0, f"crossover_B={cross}"))
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI sizes")
+    a = ap.parse_args()
+    if a.smoke:
+        run(n_total=128, tile=16, bs=(1, 4), n_test=16)
+    else:
+        run()

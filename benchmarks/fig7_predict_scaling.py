@@ -28,10 +28,10 @@ def run(sizes=(128, 256, 512, 1024), out=print):
         t_m, _ = bench(mono, x, y, xt)
         out(row(f"fig7/monolithic/n{n}", t_m))
         m = max(n // 8, 64)
-        for label, fused in (("fused", True), ("staged", False)):
+        for label, impl in (("fused", pred.predict), ("staged", pred.predict_staged)):
             tiled = jax.jit(
-                lambda a, b, c, m=m, fused=fused: pred.predict(
-                    a, b, c, params, m, full_cov=True, fused=fused
+                lambda a, b, c, m=m, impl=impl: impl(
+                    a, b, c, params, m, full_cov=True
                 )
             )
             t_t, _ = bench(tiled, x, y, xt)

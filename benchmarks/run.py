@@ -15,14 +15,39 @@ import argparse
 import json
 
 
+def _env_header() -> dict:
+    """Execution environment stamped into every figure's row header."""
+    import jax
+
+    nd = jax.device_count()
+    return {
+        "devices": nd,
+        "backend": jax.default_backend(),
+        "mesh_shape": [nd],
+        "mesh_axes": ["data"],
+    }
+
+
 class _Collector:
-    """Print benchmark rows and keep them for the JSON artifact."""
+    """Print benchmark rows and keep them for the JSON artifact.
+
+    Every figure group carries an ``env`` header (device count, backend,
+    fleet mesh shape) next to its ``rows`` so timings from different
+    device configurations are never conflated."""
 
     def __init__(self) -> None:
         self.figures: dict = {}
+        self._env: dict = None
+
+    @property
+    def env(self) -> dict:
+        if self._env is None:
+            self._env = _env_header()
+        return self._env
 
     def out(self, figure: str):
-        rows = self.figures.setdefault(figure, [])
+        group = self.figures.setdefault(figure, {"env": self.env, "rows": []})
+        rows = group["rows"]
 
         def _out(line: str) -> None:
             print(line)
@@ -76,10 +101,10 @@ def _fused_vs_staged(n: int, out) -> list:
     results = []
     for full_cov in (False, True):
         timings = {}
-        for label, fused in (("fused", True), ("staged", False)):
+        for label, impl in (("fused", pred.predict), ("staged", pred.predict_staged)):
             fn = jax.jit(
-                lambda a, b, c, fused=fused, full_cov=full_cov: pred.predict(
-                    a, b, c, params, m, full_cov=full_cov, fused=fused
+                lambda a, b, c, impl=impl, full_cov=full_cov: impl(
+                    a, b, c, params, m, full_cov=full_cov
                 )
             )
             t, _ = bench(fn, x, y, xt)
@@ -133,6 +158,7 @@ def main() -> None:
         fig9_batched_fleet,
         fig10_online_update,
         fig11_ragged_fleet,
+        fig12_sharded_fleet,
         mem_tiles,
     )
 
@@ -148,6 +174,9 @@ def main() -> None:
         ragged = fig11_ragged_fleet.run(
             b=8, n_max=96, tile=16, bucket_counts=(1, 2), waves=1, batch=8,
             out=col.out("fig11"),
+        )
+        sharded = fig12_sharded_fleet.run(
+            n_total=128, tile=16, bs=(1, 4), n_test=16, out=col.out("fig12")
         )
         mem_tiles.run(n=256, out=col.out("mem"))
         pipeline = _fused_vs_staged(128, col.out("pipeline"))
@@ -173,18 +202,25 @@ def main() -> None:
         ragged = fig11_ragged_fleet.run(
             b=rb, n_max=rn, tile=32, out=col.out("fig11")
         )
+        sharded = fig12_sharded_fleet.run(
+            n_total=(256 if args.quick else 512),
+            bs=(1, 4) if args.quick else (1, 4, 16),
+            out=col.out("fig12"),
+        )
         mem_tiles.run(n=n, out=col.out("mem"))
         pipeline = _fused_vs_staged(min(n, 512), col.out("pipeline"))
         counts = _executor_counts()
 
     if args.json:
         payload = {
+            "env": col.env,
             "figures": col.figures,
             "executor_batches": counts,
             "fused_vs_staged": pipeline,
             "batched_fleet": fleet,
             "online_update": online,
             "ragged_fleet": ragged,
+            "sharded_fleet": sharded,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -161,6 +161,7 @@ def serve_ragged(args, cfg):
             srv.submit_observe(int(i), x_new.astype(np.float32), y_new.astype(np.float32))
         stats = srv.step()
         migrations += stats.migrations
+    srv.flush()  # fetch the last wave's one-wave-late dispatched results
     s = srv.summary()
     print(
         f"ragged: served {int(s['requests'])} requests in {int(s['waves'])} waves "

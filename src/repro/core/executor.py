@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.core import scheduler as sch
 from repro.core import tiling
+from repro.dist import sharding as dist_sharding
 
 
 # ---------------------------------------------------------------------------
@@ -259,6 +260,14 @@ def _env_ops(batched: bool):
         lambda buf, idx, val: buf.at[idx].set(val),
         lambda buf, idx, val: buf.at[idx].add(val),
     )
+
+
+def _fleet_shard(mesh, batched: bool):
+    """Layout pin for B-leading buffers: identity without a mesh (or for
+    unbatched programs — a single problem has no axis to shard)."""
+    if mesh is None or not batched:
+        return lambda a: a
+    return lambda a: dist_sharding.fleet_hint(a, mesh)
 
 
 def _tile_dispatch(fn, batched: bool, mode: str = "flat"):
@@ -661,6 +670,7 @@ def run_program(
     backend: str = "jnp",
     update_dtype=None,
     batch_dispatch: str = "flat",
+    mesh=None,
 ):
     """Execute the fused prediction pipeline as one multi-stage program.
 
@@ -685,6 +695,13 @@ def run_program(
     valid sizes share the bucket's tile geometry, the same Plan, and the
     same jit trace; only the masked assembly sees the frontiers
     (DESIGN.md §11).
+
+    **Sharded batches (DESIGN.md §12):** with a ``mesh``, every B-leading
+    buffer — the inputs and all named env buffers — is pinned to the fleet
+    layout (B over the mesh's DP axes, tiles replicated per problem) via
+    ``with_sharding_constraint``.  Problems are independent, so GSPMD
+    partitions every launch along B with zero collectives.  The mesh never
+    reaches :func:`program_plan` — Plans stay shard-invariant.
     """
     batched = xc.ndim == 4
     m_tiles, m = xc.shape[-3], xc.shape[-2]
@@ -694,6 +711,8 @@ def run_program(
     lead = (xc.shape[0],) if batched else ()
     take, put, add = _env_ops(batched)
     Z = "z" if batched else ""  # einsum prefix for the problem-batch axis
+    shard = _fleet_shard(mesh, batched)
+    xc, yc, xtc = shard(xc), shard(yc), shard(xtc)
 
     potrf, trsm, _, gemm = get_ops(backend)
     potrf_b = _tile_dispatch(potrf, batched, batch_dispatch)
@@ -707,15 +726,17 @@ def run_program(
     priorf = cov_fn(backend, params, nt_valid, nt_valid, False)
 
     env = {
-        "packed": jnp.zeros(lead + (tiling.num_packed_tiles(m_tiles), m, m), dtype),
+        "packed": shard(
+            jnp.zeros(lead + (tiling.num_packed_tiles(m_tiles), m, m), dtype)
+        ),
         "y": yc,
-        "alpha": jnp.zeros_like(yc),
-        "cross": jnp.zeros(lead + (q_tiles * m_tiles, m, m), dtype),
-        "mean": jnp.zeros(lead + (q_tiles, m), dtype),
+        "alpha": shard(jnp.zeros_like(yc)),
+        "cross": shard(jnp.zeros(lead + (q_tiles * m_tiles, m, m), dtype)),
+        "mean": shard(jnp.zeros(lead + (q_tiles, m), dtype)),
     }
     if uncertainty:
-        env["v"] = jnp.zeros(lead + (m_tiles, q_tiles, m, m), dtype)
-        env["prior"] = jnp.zeros(lead + (q_tiles * q_tiles, m, m), dtype)
+        env["v"] = shard(jnp.zeros(lead + (m_tiles, q_tiles, m, m), dtype))
+        env["prior"] = shard(jnp.zeros(lead + (q_tiles * q_tiles, m, m), dtype))
 
     def off(idx):  # tile index -> global row/col offset, i32 on device
         return jnp.asarray(idx * m, jnp.int32)
@@ -924,6 +945,7 @@ def run_append(
     backend: str = "jnp",
     update_dtype=None,
     batch_dispatch: str = "flat",
+    mesh=None,
 ) -> jax.Array:
     """Solve one appended tile-row against the frozen factor (DESIGN.md §10).
 
@@ -963,6 +985,8 @@ def run_append(
     take, put, _ = _env_ops(batched)
     lead = (xc.shape[0],) if batched else ()
     dtype = lpacked.dtype
+    shard = _fleet_shard(mesh, batched)
+    lpacked, xc, x_row = shard(lpacked), shard(xc), shard(x_row)
 
     potrf, trsm, syrk, gemm = get_ops(backend)
     potrf_b = _tile_dispatch(potrf, batched, batch_dispatch)
@@ -981,7 +1005,7 @@ def run_append(
     crossf = cov_fn(backend, params, n_valid_new, n_valid_new, False)
     diagf = cov_fn(backend, params, n_valid_new, n_valid_new, True)
 
-    row = jnp.zeros(lead + (r_tiles + 1, m, m), dtype)
+    row = shard(jnp.zeros(lead + (r_tiles + 1, m, m), dtype))
     row0 = r_tiles * m
 
     def bcast_row(g):  # the row chunk, repeated for each gathered tile
@@ -1112,6 +1136,7 @@ def run_rank_update(
     n_streams: Optional[int] = None,
     backend: str = "jnp",
     batch_dispatch: str = "flat",
+    mesh=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Blocked rank-b up/downdate: L' L'^T = L L^T + sign * W W^T.
 
@@ -1136,9 +1161,11 @@ def run_rank_update(
     uprow_b = _tile_dispatch(uprow, batched, batch_dispatch)
     ucarry_b = _tile_dispatch(ucarry, batched, batch_dispatch)
 
-    xaux = jnp.zeros(lead + (m_tiles, m, m), lpacked.dtype)
-    yaux = jnp.zeros_like(xaux)
-    caux = jnp.zeros_like(xaux)
+    shard = _fleet_shard(mesh, batched)
+    lpacked, w = shard(lpacked), shard(w)
+    xaux = shard(jnp.zeros(lead + (m_tiles, m, m), lpacked.dtype))
+    yaux = shard(jnp.zeros_like(xaux))
+    caux = shard(jnp.zeros_like(xaux))
     for level in plan.levels:
         for bt in level:
             if bt.op == sch.UPREP:

@@ -370,6 +370,12 @@ class GPBatch:
     update_dtype: Optional[object] = None
     dtype: object = jnp.float32
     batch_dispatch: str = "flat"
+    # optional jax.sharding.Mesh: shard the problem axis B over its DP axes
+    # (pure data parallelism — problems are independent, so every launch
+    # partitions along B with zero collectives; DESIGN.md §12).  The mesh
+    # changes layout only: results, Plans, and trace counts are identical
+    # to the single-device path.
+    mesh: Optional[object] = None
 
     def __post_init__(self):
         x = jnp.asarray(self.x_train, self.dtype)
@@ -429,6 +435,7 @@ class GPBatch:
             str(self.update_dtype),
             str(jnp.dtype(self.dtype)),
             self.batch_dispatch,
+            self.mesh,
         )
 
     def posterior(self) -> pred.PosteriorState:
@@ -451,6 +458,7 @@ class GPBatch:
                 update_dtype=self.update_dtype,
                 dtype=self.dtype,
                 batch_dispatch=self.batch_dispatch,
+                mesh=self.mesh,
             )
             self._posterior = pred.PosteriorState(
                 lpacked=env["packed"],
@@ -515,6 +523,7 @@ class GPBatch:
                     backend=self.op_backend,
                     update_dtype=self.update_dtype,
                     batch_dispatch=self.batch_dispatch,
+                    mesh=self.mesh,
                 )
                 self._posterior_key = self._cache_key()
             except upd.CholeskyUpdateError:
@@ -543,6 +552,7 @@ class GPBatch:
                     n_streams=self.n_streams,
                     backend=self.op_backend,
                     batch_dispatch=self.batch_dispatch,
+                    mesh=self.mesh,
                 )
                 self._posterior_key = self._cache_key()
             except upd.CholeskyUpdateError:
@@ -568,6 +578,7 @@ class GPBatch:
                 full_cov=full_cov,
                 n_streams=self.n_streams,
                 dtype=self.dtype,
+                mesh=self.mesh,
             )
         result, state = pred.predict_fused_batched(
             self.x_train,
@@ -582,6 +593,7 @@ class GPBatch:
             dtype=self.dtype,
             with_state=True,
             batch_dispatch=self.batch_dispatch,
+            mesh=self.mesh,
         )
         self._posterior, self._posterior_key = state, key
         return result
@@ -709,6 +721,12 @@ class GPFleet:
     dtype: object = jnp.float32
     batch_dispatch: str = "flat"
     boundaries: object = tiling.DEFAULT_BUCKETS
+    # optional jax.sharding.Mesh: shard each bucket's stacked problem axis
+    # over the mesh's DP axes (DESIGN.md §12).  Bucket programs are already
+    # B-invariant, so the same Plans/traces drive any device count; buckets
+    # whose width doesn't divide the mesh fall back to replication
+    # per-bucket (fleet_spec), never to an error.
+    mesh: Optional[object] = None
 
     def __post_init__(self):
         xs, ys = [], []
@@ -787,6 +805,7 @@ class GPFleet:
             self.batch_dispatch,
             self.boundaries if not isinstance(self.boundaries, (list, tuple))
             else tuple(self.boundaries),
+            self.mesh,
         )
 
     def invalidate_cache(self) -> None:
@@ -832,7 +851,7 @@ class GPFleet:
             xs, ys, bp, self.tile_size,
             n_streams=self.n_streams, backend=self.op_backend,
             update_dtype=self.update_dtype, dtype=self.dtype,
-            batch_dispatch=self.batch_dispatch, n_valid=nv,
+            batch_dispatch=self.batch_dispatch, n_valid=nv, mesh=self.mesh,
         )
         state = pred.PosteriorState(
             lpacked=env["packed"], alpha=env["alpha"],
@@ -871,7 +890,7 @@ class GPFleet:
             xt = jnp.broadcast_to(x_test[None], (len(idx),) + x_test.shape)
             out = pred.predict_from_state_batched(
                 state, xt, full_cov=full_cov,
-                n_streams=self.n_streams, dtype=self.dtype,
+                n_streams=self.n_streams, dtype=self.dtype, mesh=self.mesh,
             )
             gather = jnp.asarray(idx)
             if full_cov:
@@ -934,6 +953,7 @@ class GPFleet:
             res = pred.predict_from_state_batched(
                 state, xt, full_cov=full_cov, n_streams=self.n_streams,
                 dtype=self.dtype, nt_valid=jnp.asarray(nts, jnp.int32),
+                mesh=self.mesh,
             )
             for pos, i in enumerate(idx):
                 if full_cov:
@@ -1036,6 +1056,7 @@ class GPFleet:
                             n_streams=self.n_streams, backend=self.op_backend,
                             update_dtype=self.update_dtype,
                             batch_dispatch=self.batch_dispatch,
+                            mesh=self.mesh,
                         )
                 except upd.CholeskyUpdateError:
                     state = None

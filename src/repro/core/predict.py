@@ -11,15 +11,16 @@ Pipeline (all stages jit-compiled, data stays on device end-to-end):
 
 Two execution strategies (DESIGN.md §7):
 
-* ``fused=True`` (default) — the whole pipeline is ONE multi-stage program:
-  :func:`repro.core.scheduler.build_program_schedule` emits a single DAG
-  with cross-stage edges and :func:`repro.core.executor.run_program` walks
-  it over a named buffer environment, under one ``jax.jit``.  Substitution
-  rows and cross-covariance tiles fire the moment their factor tiles
-  resolve — the paper's headline cross-stage overlap.
-* ``fused=False`` — the staged baseline: the six stages run as separate
-  executor invocations with a barrier between each (kept for equivalence
-  testing and as the paper's per-stage reference).
+* :func:`predict` (the default path) — the whole pipeline is ONE
+  multi-stage program: :func:`repro.core.scheduler.build_program_schedule`
+  emits a single DAG with cross-stage edges and
+  :func:`repro.core.executor.run_program` walks it over a named buffer
+  environment, under one ``jax.jit``.  Substitution rows and
+  cross-covariance tiles fire the moment their factor tiles resolve — the
+  paper's headline cross-stage overlap.
+* :func:`predict_staged` — the staged baseline: the six stages run as
+  separate executor invocations with a barrier between each (kept for
+  equivalence testing and as the paper's per-stage reference).
 
 Padding: inputs of arbitrary n / n̂ are padded to tile multiples; the padded
 covariance region is identity/zero which leaves all results for the first n
@@ -40,6 +41,7 @@ from repro.core import cholesky as chol
 from repro.core import executor
 from repro.core import kernels_math as km
 from repro.core import tiling, triangular
+from repro.dist import sharding as dist_sharding
 
 
 # ---------------------------------------------------------------------------
@@ -183,28 +185,6 @@ def _resolve_dtype(dtype, *arrays):
 # ---------------------------------------------------------------------------
 
 
-def cholesky_factor(
-    x: jax.Array,
-    params: km.SEKernelParams,
-    m: int,
-    *,
-    n_streams: Optional[int] = None,
-    backend: str = "jnp",
-    update_dtype=None,
-    dtype=None,
-) -> Tuple[jax.Array, int]:
-    """Assemble K and factor it.  Returns (packed L, n_valid).
-
-    ``dtype=None`` preserves the input dtype (no implicit float32 cast)."""
-    n = x.shape[0]
-    xc = tiling.pad_features(x, m, dtype=_resolve_dtype(dtype, x))
-    packed = assemble_packed_covariance(xc, params, n, backend=backend)
-    lpacked = chol.tiled_cholesky(
-        packed, n_streams=n_streams, backend=backend, update_dtype=update_dtype
-    )
-    return lpacked, n
-
-
 @dataclasses.dataclass(frozen=True)
 class PosteriorState:
     """Cached per-training-set state: the packed factor and the weight vector.
@@ -336,6 +316,7 @@ def _fused_program_fn(
     n_valid: Optional[int],
     nt_valid: Optional[int],
     batch_dispatch: str = "flat",
+    mesh=None,
 ):
     """The ONE jit of the fused pipeline, cached per static configuration.
 
@@ -353,6 +334,11 @@ def _fused_program_fn(
     scalars.  One jit trace (and one executor Plan) then serves every
     per-problem size mix of a bucket geometry: frontier values never force
     a retrace (DESIGN.md §11).
+
+    **Sharded variant (DESIGN.md §12):** ``mesh`` pins every B-leading
+    buffer to the fleet layout inside the jit.  The mesh changes the traced
+    jaxpr (sharding constraints are ops), so it joins the lru key — but it
+    never reaches the executor's Plan caches, which stay shard-invariant.
     """
     if n_valid is None:
 
@@ -369,6 +355,7 @@ def _fused_program_fn(
                 backend=backend,
                 update_dtype=update_dtype,
                 batch_dispatch=batch_dispatch,
+                mesh=mesh,
             )
 
         return jax.jit(ragged_fn) if backend == "jnp" else ragged_fn
@@ -386,6 +373,7 @@ def _fused_program_fn(
             backend=backend,
             update_dtype=update_dtype,
             batch_dispatch=batch_dispatch,
+            mesh=mesh,
         )
 
     return jax.jit(fn) if backend == "jnp" else fn
@@ -455,6 +443,7 @@ def predict_fused_batched(
     batch_dispatch: str = "flat",
     n_valid=None,
     nt_valid=None,
+    mesh=None,
 ):
     """Fused prediction for B independent GPs in ONE batched program.
 
@@ -473,6 +462,11 @@ def predict_fused_batched(
     The frontiers are traced operands: every size mix of the same stacked
     shape shares one jit trace and one executor Plan.
 
+    **Sharded fleets (DESIGN.md §12):** ``mesh`` commits the stacked inputs
+    to the fleet layout (B over the mesh's DP axes) and pins every env
+    buffer to it inside the program — pure data parallelism, zero
+    collectives, one Plan regardless of device count.
+
     Returns mean (B, n̂), or ``(mean, sigma)`` with sigma (B, n̂, n̂) when
     ``full_cov``; with ``with_state=True`` also the stacked
     :class:`PosteriorState` (leading B axis on lpacked/alpha/x_chunks).
@@ -483,18 +477,23 @@ def predict_fused_batched(
     xc = tiling.pad_features(x_train, m, dtype=dtype)    # (B, M, m, D)
     yc = tiling.pad_vector(y_train, m, dtype=dtype)      # (B, M, m)
     xtc = tiling.pad_features(x_test, m, dtype=dtype)    # (B, Q, m, D)
+    if mesh is not None:
+        xc = dist_sharding.device_put_fleet(xc, mesh)
+        yc = dist_sharding.device_put_fleet(yc, mesh)
+        xtc = dist_sharding.device_put_fleet(xtc, mesh)
     ragged = n_valid is not None
     if ragged:
         nv = jnp.asarray(n_valid, jnp.int32)
         ntv = jnp.asarray(nh if nt_valid is None else nt_valid, jnp.int32)
         fn = _fused_program_fn(
             full_cov, n_streams, backend, update_dtype, None, None,
-            batch_dispatch,
+            batch_dispatch, mesh,
         )
         env = fn(xc, yc, xtc, params, nv, ntv)
     else:
         fn = _fused_program_fn(
-            full_cov, n_streams, backend, update_dtype, n, nh, batch_dispatch
+            full_cov, n_streams, backend, update_dtype, n, nh, batch_dispatch,
+            mesh,
         )
         env = fn(xc, yc, xtc, params)
     mean = env["mean"].reshape(b, -1)[:, :nh]
@@ -522,6 +521,7 @@ def predict_from_state_batched(
     n_streams: Optional[int] = None,
     dtype=None,
     nt_valid=None,
+    mesh=None,
 ):
     """Warm batched prediction from a stacked :class:`PosteriorState`.
 
@@ -541,6 +541,11 @@ def predict_from_state_batched(
     b, nh = x_test.shape[0], x_test.shape[1]
     dtype = state.x_chunks.dtype if dtype is None else jnp.dtype(dtype)
     xtc = tiling.pad_features(x_test, state.m, dtype=dtype)
+    # the warm tail runs op-by-op (no enclosing jit): committing the test
+    # block to the fleet layout is enough — the cached state buffers carry
+    # their sharding out of the fused program and propagate it through the
+    # assembly/matvec ops.
+    xtc = dist_sharding.device_put_fleet(xtc, mesh)
     nv = state.n if state.n_valid is None else state.n_valid
     ntv = nh if nt_valid is None else nt_valid
     kstar = assemble_cross_tiles_batched(xtc, state.x_chunks, params, ntv, nv)
@@ -571,6 +576,7 @@ def nlml_program_env(
     dtype=None,
     batch_dispatch: str = "flat",
     n_valid=None,
+    mesh=None,
 ):
     """Run the NLML prefix of the fused program (DESIGN.md §8).
 
@@ -597,14 +603,20 @@ def nlml_program_env(
     xc = tiling.pad_features(x_train, m, dtype=dtype)
     yc = tiling.pad_vector(y_train, m, dtype=dtype)
     xtc = jnp.zeros(xc.shape[:-3] + (0, m, xc.shape[-1]), dtype)
+    if mesh is not None and xc.ndim == 4:
+        xc = dist_sharding.device_put_fleet(xc, mesh)
+        yc = dist_sharding.device_put_fleet(yc, mesh)
+    else:
+        mesh = None  # unbatched programs have no problem axis to shard
     if n_valid is not None:
         fn = _fused_program_fn(
-            False, n_streams, backend, update_dtype, None, None, batch_dispatch
+            False, n_streams, backend, update_dtype, None, None,
+            batch_dispatch, mesh,
         )
         nv = jnp.asarray(n_valid, jnp.int32)
         return fn(xc, yc, xtc, params, nv, jnp.asarray(0, jnp.int32)), yc
     fn = _fused_program_fn(
-        False, n_streams, backend, update_dtype, n, 0, batch_dispatch
+        False, n_streams, backend, update_dtype, n, 0, batch_dispatch, mesh
     )
     return fn(xc, yc, xtc, params), yc
 
@@ -621,31 +633,49 @@ def predict(
     backend: str = "jnp",
     update_dtype=None,
     dtype=None,
-    fused: bool = True,
 ):
-    """Tiled GP prediction.
+    """Tiled GP prediction — the fused whole-pipeline program.
 
     Returns mean (n̂,), or (mean, var) with ``full_cov=False`` semantics of
     the paper's *Predict with Full Covariance* operation when ``full_cov``:
     (mean (n̂,), posterior covariance (n̂, n̂)).
 
-    ``fused=True`` (default) runs the whole pipeline as one multi-stage
-    program (cross-stage overlap, strictly fewer batched launches);
-    ``fused=False`` runs the staged per-stage baseline.
+    The old ``fused=False`` wrapper branch is gone: the staged per-stage
+    baseline lives behind :func:`predict_staged` (explicitly, for the
+    fused-vs-staged benchmarks) and behind the warm
+    :func:`posterior_state` / :func:`predict_from_state` pair everywhere
+    else.
     """
-    if fused:
-        return predict_fused(
-            x_train,
-            y_train,
-            x_test,
-            params,
-            m,
-            full_cov=full_cov,
-            n_streams=n_streams,
-            backend=backend,
-            update_dtype=update_dtype,
-            dtype=dtype,
-        )
+    return predict_fused(
+        x_train,
+        y_train,
+        x_test,
+        params,
+        m,
+        full_cov=full_cov,
+        n_streams=n_streams,
+        backend=backend,
+        update_dtype=update_dtype,
+        dtype=dtype,
+    )
+
+
+def predict_staged(
+    x_train: jax.Array,
+    y_train: jax.Array,
+    x_test: jax.Array,
+    params: km.SEKernelParams,
+    m: int,
+    *,
+    full_cov: bool = False,
+    n_streams: Optional[int] = None,
+    backend: str = "jnp",
+    update_dtype=None,
+    dtype=None,
+):
+    """The staged per-stage baseline: six executor invocations with a
+    barrier between each — the paper's per-stage reference that the fused
+    program is benchmarked against (DESIGN.md §7)."""
     state = posterior_state(
         x_train,
         y_train,

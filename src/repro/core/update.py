@@ -67,6 +67,7 @@ def _append_step_fn(
     update_dtype,
     batched: bool,
     batch_dispatch: str,
+    mesh=None,
 ):
     """One tile-row append: solve the row, repack the store, extend beta.
 
@@ -87,6 +88,7 @@ def _append_step_fn(
             backend=backend,
             update_dtype=update_dtype,
             batch_dispatch=batch_dispatch,
+            mesh=mesh,
         )
         # beta_R = corner^{-1} (y_row - sum_{j<R} row_j beta_j): the prefix
         # of a grown forward-triangular system never changes.
@@ -130,7 +132,8 @@ def _append_step_fn(
 
 @functools.lru_cache(maxsize=None)
 def _evict_step_fn(
-    m_tiles: int, n_streams: Optional[int], backend: str, batch_dispatch: str
+    m_tiles: int, n_streams: Optional[int], backend: str, batch_dispatch: str,
+    mesh=None,
 ):
     """Drop the leading tile-column: positive rank-m update of the trailing
     factor (K22 = L21 L21^T + L22 L22^T)."""
@@ -147,6 +150,7 @@ def _evict_step_fn(
             n_streams=n_streams,
             backend=backend,
             batch_dispatch=batch_dispatch,
+            mesh=mesh,
         )
         return new_packed
 
@@ -208,6 +212,7 @@ def extend_state(
     update_dtype=None,
     batch_dispatch: str = "flat",
     check_finite: bool = True,
+    mesh=None,
 ):
     """Absorb new observations into a cached posterior in O(n^2 b).
 
@@ -273,7 +278,7 @@ def extend_state(
         n_valid_new = n + take
         step = _append_step_fn(
             r_tiles, m_store, grow, n_streams, backend, update_dtype,
-            batched, batch_dispatch,
+            batched, batch_dispatch, mesh if batched else None,
         )
         lpacked, xc, yc, beta = step(
             lpacked, xc, yc, beta, x_row, y_row, state.params,
@@ -302,6 +307,7 @@ def extend_state_ragged(
     update_dtype=None,
     batch_dispatch: str = "flat",
     check_finite: bool = True,
+    mesh=None,
 ):
     """Absorb per-problem arrival counts b_i into a ragged fleet state.
 
@@ -395,7 +401,7 @@ def extend_state_ragged(
     for r in range(r_lo, r_hi + 1):
         step = _append_step_fn(
             r, m_store, False, n_streams, backend, update_dtype,
-            True, batch_dispatch,
+            True, batch_dispatch, mesh,
         )
         lpacked, xc, yc, beta = step(
             lpacked, xc, yc, beta, xc[:, r], yc[:, r], state.params, nv_new_dev
@@ -418,6 +424,7 @@ def shrink_state(
     backend: str = "jnp",
     batch_dispatch: str = "flat",
     check_finite: bool = True,
+    mesh=None,
 ):
     """Evict the k oldest observations from a cached posterior in O(n^2 k).
 
@@ -450,7 +457,8 @@ def shrink_state(
     lpacked = state.lpacked
     for step in range(t):
         lpacked = _evict_step_fn(
-            m_tiles - step, n_streams, backend, batch_dispatch
+            m_tiles - step, n_streams, backend, batch_dispatch,
+            mesh if batched else None,
         )(lpacked)
     xc = state.x_chunks[off + (slice(t, None),)]
     yc = yc[off + (slice(t, None),)]

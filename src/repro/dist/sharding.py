@@ -22,7 +22,7 @@ is what judges their quality.
 from __future__ import annotations
 
 import math
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -91,6 +91,61 @@ def input_shardings(cfg, shape, mesh: Mesh):
         in_sh = NamedSharding(mesh, batch_spec(mesh, b, None))
     lab_sh = NamedSharding(mesh, batch_spec(mesh, b, None))
     return in_sh, lab_sh
+
+
+# ---------------------------------------------------------------------------
+# Fleet sharding: pure data parallelism over the problem-batch axis B.
+# ---------------------------------------------------------------------------
+#
+# Every named buffer of the batched executor programs ("packed", "y",
+# "alpha", "cross", "mean", "v", "prior" — plus the append row and the
+# rank-update carries) leads with B, and problems are independent: the
+# gather/scatter env ops act on axis 1 and the einsums contract everything
+# *but* z.  Sharding axis 0 over the DP axes is therefore communication-free
+# data parallelism — GSPMD never inserts a collective on the forward
+# programs.  Plans stay shard-invariant because the mesh only enters the
+# layout (with_sharding_constraint), never the task DAG.
+
+
+def fleet_axes(mesh: Mesh, batch: int) -> Tuple[str, ...]:
+    """DP axes the problem-batch axis shards over ((), i.e. replicate, when
+    no DP axis divides B)."""
+    return _dp_axes_for(mesh, batch)
+
+
+def fleet_spec(mesh: Mesh, batch: int, ndim: int = 1) -> P:
+    """PartitionSpec for one B-leading fleet buffer: B over the DP axes,
+    every trailing (tile/row) dim replicated."""
+    dp = _dp_axes_for(mesh, batch)
+    return P(dp if dp else None, *([None] * (ndim - 1)))
+
+
+def fleet_sharding(mesh: Mesh, batch: int, ndim: int = 1) -> NamedSharding:
+    return NamedSharding(mesh, fleet_spec(mesh, batch, ndim))
+
+
+def fleet_hint(x, mesh: Optional[Mesh]):
+    """``with_sharding_constraint`` pinning a B-leading buffer's layout.
+
+    A no-op when ``mesh`` is None (the single-device path stays untouched)
+    and degenerate (replicated) when no DP axis divides ``x.shape[0]`` —
+    the constraint is always representable, so callers never branch.
+    Works inside jit (the canonical use: constraining the executor's env
+    buffers at init so GSPMD propagates the layout through the whole
+    program) and eagerly (where it reshards immediately).
+    """
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, fleet_sharding(mesh, x.shape[0], x.ndim)
+    )
+
+
+def device_put_fleet(x, mesh: Optional[Mesh]):
+    """Commit a host/stacked array to the fleet layout (B over DP axes)."""
+    if mesh is None:
+        return x
+    return jax.device_put(x, fleet_sharding(mesh, x.shape[0], x.ndim))
 
 
 def cache_shardings(cfg, batch: int, mesh: Mesh, caches_shape):

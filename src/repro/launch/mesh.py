@@ -35,6 +35,24 @@ def make_test_mesh(shape=(4, 2), axes=("data", "model")):
     return compat.make_mesh(shape, axes)
 
 
+def make_fleet_mesh(n_devices=None):
+    """1-D data-parallel mesh for sharding a fleet's problem-batch axis.
+
+    Fleet problems are independent, so the only useful axis is ``data``
+    (``repro.dist.sharding.fleet_spec`` shards B over it; everything else is
+    replicated).  ``n_devices=None`` takes every visible device; a smaller
+    count takes a prefix — handy for crossover sweeps on a forced host mesh.
+    """
+    avail = len(jax.devices())
+    if n_devices is None:
+        n_devices = avail
+    if not 1 <= n_devices <= avail:
+        raise ValueError(
+            f"n_devices must be in [1, {avail}] (visible devices); got {n_devices}"
+        )
+    return compat.make_mesh((n_devices,), ("data",))
+
+
 @dataclasses.dataclass(frozen=True)
 class Hardware:
     """TPU v5e chip model used for the roofline terms."""

@@ -11,7 +11,7 @@ threads).  One wave:
    that outgrew their geometry migrate (``blockdiag(L, I)`` re-embed, zero
    FLOPs) and every stable bucket absorbs its arrivals through one shared
    append sweep;
-3. answer ALL prediction requests via ``fleet.predict_each`` — one warm
+3. *dispatch* ALL prediction requests via ``fleet.predict_each`` — one warm
    batched launch per occupied bucket, per-problem test counts masked with
    ``nt_valid``;
 4. record per-request latencies (submit → results materialized).
@@ -21,6 +21,18 @@ state at the *start* of the wave (observations land before predictions, so
 a wave's predictions do see its own wave's observations — the queue order
 inside a wave is observe-then-predict by construction, matching how a
 replica would batch its inbox).
+
+**Dispatch overlap.**  ``step`` never blocks on device results: JAX
+dispatch is asynchronous, so the wave's prediction launches are enqueued
+and the host immediately returns to assembling the next wave while the
+devices execute.  Results are materialized ONE WAVE LATE — at the start of
+the next ``step`` call — or on demand by :meth:`flush` / :meth:`result` /
+the tail of :meth:`run_until_idle`.  Because fleet states are immutable
+jax arrays, a later wave's ``fleet.update`` never clobbers the buffers an
+in-flight prediction reads.  Ordering contract: wave N's predictions see
+exactly waves 0..N's observations regardless of when their results are
+fetched, and ``result(rid)`` always returns the value computed against
+that snapshot.
 """
 
 from __future__ import annotations
@@ -58,12 +70,22 @@ class WaveStats:
     """What one call to :meth:`ContinuousBatcher.step` did."""
 
     wave: int
-    n_predict: int
+    n_predict: int             # predictions DISPATCHED this wave (not fetched)
     n_observe: int
     points_absorbed: int
     buckets: Tuple[int, ...]   # occupied cap_tiles AFTER the wave
     migrations: int            # problems whose bucket capacity changed
-    duration_s: float
+    duration_s: float          # host dispatch time (excludes device wait)
+
+
+@dataclasses.dataclass
+class _InflightWave:
+    """One dispatched-but-unfetched prediction wave."""
+
+    per_problem: Dict[int, List[Request]]
+    outs: List[object]         # fleet.predict_each results (device futures)
+    want_unc: bool
+    d: int
 
 
 class ContinuousBatcher:
@@ -77,6 +99,7 @@ class ContinuousBatcher:
         self.fleet = fleet
         self.clock = clock
         self._queue: List[Request] = []
+        self._inflight: Optional[_InflightWave] = None
         self._done: Dict[int, Request] = {}
         self._next_rid = 0
         self._wave = 0
@@ -115,9 +138,12 @@ class ContinuousBatcher:
     # -- the wave loop ------------------------------------------------------
 
     def step(self) -> WaveStats:
-        """Run one wave: absorb every queued observation, answer every
-        queued prediction, re-forming buckets in between."""
+        """Run one wave: materialize the PREVIOUS wave's dispatched
+        predictions, absorb every queued observation, and dispatch every
+        queued prediction (fetched one wave late — see the module
+        docstring), re-forming buckets in between."""
         t0 = self.clock()
+        self.flush()  # previous wave's device work is done (or nearly) by now
         wave, self._queue = self._queue, []
         observes = [r for r in wave if r.kind == OBSERVE]
         predicts = [r for r in wave if r.kind == PREDICT]
@@ -156,25 +182,12 @@ class ContinuousBatcher:
                     np.concatenate([r.x.reshape(-1, d) for r in reqs])
                     if reqs else np.zeros((0, d), np.float32)
                 )
+            # async dispatch: predict_each returns device futures — do NOT
+            # block here.  The launches run while the host assembles the
+            # next wave; flush() (next step / result / run_until_idle tail)
+            # materializes them.
             outs = self.fleet.predict_each(tests, full_cov=want_unc)
-            jax.block_until_ready(outs)
-            t_done = self.clock()
-            for i, reqs in per_problem.items():
-                if want_unc:
-                    mean = np.asarray(outs[i][0])
-                    var = np.diagonal(np.asarray(outs[i][1]))
-                else:
-                    mean = np.asarray(outs[i])
-                    var = None
-                off = 0
-                for r in reqs:
-                    k = r.x.reshape(-1, d).shape[0]
-                    sl = slice(off, off + k)
-                    r.result = (
-                        (mean[sl], var[sl]) if r.uncertainty else mean[sl]
-                    )
-                    off += k
-                    self._finish(r, t_done)
+            self._inflight = _InflightWave(per_problem, outs, want_unc, d)
 
         t1 = self.clock()
         for r in observes:
@@ -195,19 +208,54 @@ class ContinuousBatcher:
             duration_s=t1 - t0,
         )
 
+    def flush(self) -> int:
+        """Materialize the in-flight prediction wave, finishing its
+        requests; returns how many were finished (0 when none in flight).
+        Idempotent — safe to call at any point between waves."""
+        fl, self._inflight = self._inflight, None
+        if fl is None:
+            return 0
+        jax.block_until_ready(fl.outs)
+        t_done = self.clock()
+        finished = 0
+        for i, reqs in fl.per_problem.items():
+            if fl.want_unc:
+                mean = np.asarray(fl.outs[i][0])
+                var = np.diagonal(np.asarray(fl.outs[i][1]))
+            else:
+                mean = np.asarray(fl.outs[i])
+                var = None
+            off = 0
+            for r in reqs:
+                k = r.x.reshape(-1, fl.d).shape[0]
+                sl = slice(off, off + k)
+                r.result = (
+                    (mean[sl], var[sl]) if r.uncertainty else mean[sl]
+                )
+                off += k
+                self._finish(r, t_done)
+                finished += 1
+        return finished
+
     def run_until_idle(self, max_waves: int = 1000) -> List[WaveStats]:
         """Step until the queue drains (new work may be enqueued by callers
-        between waves; this only loops over what is already queued)."""
+        between waves; this only loops over what is already queued).  The
+        final wave's dispatched predictions are flushed before returning,
+        so every request queued on entry is finished on exit."""
         stats = []
         while self._queue and len(stats) < max_waves:
             stats.append(self.step())
+        self.flush()
         return stats
 
     # -- results / accounting -----------------------------------------------
 
     def result(self, rid: int):
         """Pop a finished request's result; raises KeyError if unknown or
-        still pending."""
+        still queued.  A request whose wave is dispatched but not yet
+        fetched is flushed transparently first."""
+        if rid not in self._done and self._inflight is not None:
+            self.flush()
         return self._done.pop(rid).result
 
     def summary(self) -> Dict[str, float]:

@@ -1,1 +1,13 @@
-"""Training / serving step factories and the fault-tolerant trainer loop."""
+"""Training / serving step factories and the fault-tolerant trainer loop.
+
+Transformer steps live in :mod:`repro.train.train_step` /
+:mod:`repro.train.serve_step`; the GP front-ends (single GP, stacked
+:class:`~repro.core.gp.GPBatch`, ragged :class:`~repro.core.gp.GPFleet`)
+get the same factory treatment in :mod:`repro.train.gp_step`.
+"""
+
+from repro.train.gp_step import (  # noqa: F401
+    attach_mesh,
+    make_gp_serve_step,
+    make_gp_train_step,
+)

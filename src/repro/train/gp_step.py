@@ -1,0 +1,128 @@
+"""GP serve/train step factories: fleet-aware, mesh-aware.
+
+Mirrors the transformer factories in :mod:`repro.train.serve_step` /
+:mod:`repro.train.train_step` for the Gaussian-process front-ends: a factory
+takes a GP object plus an optional device mesh and returns ``(step_fn,
+shardings)``.  Unlike the transformer path, GP steps close over a *stateful*
+front-end (the posterior cache lives on the object), so the factory's job is
+to (a) install the mesh on the front-end — fleets shard their problem axis B
+over the mesh's DP axes (DESIGN.md §12) — and (b) normalize the three GP
+front-ends behind one callable signature:
+
+* :class:`repro.core.gp.GaussianProcess` — single problem; a mesh has no
+  problem axis to shard, so it is ignored (documented, not an error — the
+  same launch script can drive one GP or a fleet).
+* :class:`repro.core.gp.GPBatch` — stacked (B, n, D) fleet; training inputs
+  are committed to the fleet sharding up front so every downstream launch
+  (including the jitted Adam scan) inherits the layout via GSPMD
+  propagation.
+* :class:`repro.core.gp.GPFleet` — ragged bucketed fleet; each bucket's
+  stacked problem axis is sharded when it divides the mesh, replicated
+  otherwise (never an error).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import Mesh
+
+from repro.core.gp import GaussianProcess, GPBatch, GPFleet
+from repro.dist import sharding as shard_rules
+
+
+def attach_mesh(gp, mesh: Optional[Mesh]):
+    """Install ``mesh`` on a GP front-end; returns the front-end.
+
+    For :class:`GPBatch` the stacked training arrays are also committed to
+    the fleet sharding (``device_put_fleet``) so eager warm-tail launches and
+    jitted programs alike see sharded operands.  The mesh participates in
+    the posterior cache key, so switching meshes soundly invalidates any
+    cached factors.  A plain :class:`GaussianProcess` has no problem axis:
+    the mesh is ignored.
+    """
+    if mesh is None or isinstance(gp, GaussianProcess):
+        return gp
+    if isinstance(gp, GPBatch):
+        gp.x_train = shard_rules.device_put_fleet(gp.x_train, mesh)
+        gp.y_train = shard_rules.device_put_fleet(gp.y_train, mesh)
+        gp.mesh = mesh
+    elif isinstance(gp, GPFleet):
+        gp.mesh = mesh  # buckets stack + shard lazily per geometry
+    else:
+        raise TypeError(
+            f"attach_mesh expects GaussianProcess/GPBatch/GPFleet; got "
+            f"{type(gp).__name__}"
+        )
+    return gp
+
+
+def _gp_shardings(gp, mesh: Optional[Mesh]):
+    if mesh is None or isinstance(gp, GaussianProcess):
+        return None
+    if isinstance(gp, GPBatch):
+        b = gp.batch_size
+        return {
+            "x_test": shard_rules.fleet_sharding(mesh, b, 3),
+            "batch_axes": shard_rules.fleet_axes(mesh, b),
+        }
+    # GPFleet: widths vary per bucket; the effective spec is per-geometry
+    return {"mesh": mesh}
+
+
+def make_gp_serve_step(gp, mesh: Optional[Mesh] = None, *,
+                       uncertainty: bool = False):
+    """Build ``serve(x_test)`` for any GP front-end.
+
+    ``x_test`` follows the front-end's own convention: an (n̂, D) block for
+    :class:`GaussianProcess`, shared-or-stacked for :class:`GPBatch`, and —
+    for :class:`GPFleet` — either one shared (n̂, D) block or a length-B
+    list of per-problem test sets (routed to ``predict_each``).  With
+    ``uncertainty`` the step returns ``(mean, variance_diagonal)`` per the
+    front-end's ``predict_with_uncertainty``.
+
+    Returns ``(serve_fn, shardings)`` like the transformer factories; the
+    shardings entry describes how stacked test blocks land on the mesh
+    (``None`` without a mesh).
+    """
+    attach_mesh(gp, mesh)
+
+    def serve(x_test):
+        if isinstance(gp, GPFleet) and isinstance(x_test, (list, tuple)):
+            return gp.predict_each(x_test, full_cov=uncertainty)
+        if uncertainty:
+            return gp.predict_with_uncertainty(x_test)
+        return gp.predict(x_test)
+
+    return serve, _gp_shardings(gp, mesh)
+
+
+def make_gp_train_step(gp, mesh: Optional[Mesh] = None, *, lr: float = 0.05):
+    """Build ``train(steps=1) -> nlml`` for any GP front-end.
+
+    One call runs ``steps`` Adam iterations on the negative log marginal
+    likelihood via the front-end's ``optimize`` (one jitted ``lax.scan``)
+    and returns the post-step NLML — scalar for a single GP, per-problem
+    (B,) vector for fleets.  The posterior cache is invalidated by
+    ``optimize`` itself, so a following serve step re-factorizes under the
+    new hyperparameters (sharded, when a mesh is installed).
+
+    :class:`GPFleet` has no batched optimizer (buckets have heterogeneous
+    geometries); its train step raises ``NotImplementedError`` with the
+    supported alternative spelled out.
+    """
+    attach_mesh(gp, mesh)
+    if isinstance(gp, GPFleet):
+        def train(steps: int = 1):
+            raise NotImplementedError(
+                "GPFleet has no batched hyperparameter optimizer; train each "
+                "bucket as a GPBatch (shared geometry) or per-problem "
+                "GaussianProcess.optimize instead"
+            )
+        return train, _gp_shardings(gp, mesh)
+
+    def train(steps: int = 1):
+        gp.optimize(steps=steps, lr=lr)
+        return gp.nlml()
+
+    return train, _gp_shardings(gp, mesh)

@@ -158,9 +158,9 @@ def _fused_case(n, uncertainty, backend):
         y = jnp.asarray(r.standard_normal(n).astype(np.float32))
         xt = jnp.asarray(r.standard_normal((nt, d)).astype(np.float32))
         p = SEKernelParams.paper_defaults()
-        staged = pred.predict(
+        staged = pred.predict_staged(
             x, y, xt, p, m,
-            full_cov=uncertainty, n_streams=4, backend=backend, fused=False,
+            full_cov=uncertainty, n_streams=4, backend=backend,
         )
         _FUSED_DATA[key] = (x, y, xt, p, m, staged)
     return _FUSED_DATA[key]
@@ -176,7 +176,7 @@ def test_fused_matches_staged(n, uncertainty, backend, n_streams):
     x, y, xt, p, m, staged = _fused_case(n, uncertainty, backend)
     fused = pred.predict(
         x, y, xt, p, m,
-        full_cov=uncertainty, n_streams=n_streams, backend=backend, fused=True,
+        full_cov=uncertainty, n_streams=n_streams, backend=backend,
     )
     if not uncertainty:
         fused, staged = (fused,), (staged,)

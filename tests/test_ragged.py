@@ -357,6 +357,51 @@ def test_continuous_batcher_waves(rng):
     np.testing.assert_allclose(srv.result(rid), np.asarray(g1.predict(xt)), atol=1e-3)
 
 
+def test_continuous_batcher_dispatch_overlap_ordering(rng):
+    """Waves dispatch without blocking; results arrive one wave late but
+    are computed against the state snapshot at dispatch time."""
+    from repro.serve import ContinuousBatcher
+
+    xs, ys = _problems(rng, ns=(40, 60))
+    fleet = GPFleet(xs, ys, params=PARAMS, tile_size=M)
+    srv = ContinuousBatcher(fleet)
+    xt = rng.standard_normal((4, 2)).astype(np.float32)
+
+    # wave 0: predict against the initial state
+    r0 = srv.submit_predict(0, xt)
+    s0 = srv.step()
+    assert s0.n_predict == 1
+    assert srv._inflight is not None          # dispatched, NOT fetched
+    assert r0 not in srv._done
+
+    # wave 1: observe problem 0, predict again.  Entering step() flushes
+    # wave 0 FIRST, so r0 must reflect the pre-observation snapshot even
+    # though its result is fetched after the update was enqueued.
+    xo = rng.standard_normal((8, 2)).astype(np.float32)
+    yo = rng.standard_normal(8).astype(np.float32)
+    srv.submit_observe(0, xo, yo)
+    r1 = srv.submit_predict(0, xt)
+    srv.step()
+    assert r0 in srv._done                    # one wave late, now finished
+    assert r1 not in srv._done
+
+    g_before = GaussianProcess(xs[0], ys[0], params=PARAMS, tile_size=M)
+    np.testing.assert_allclose(
+        srv.result(r0), np.asarray(g_before.predict(xt)), atol=3e-4
+    )
+    # flush() via result() materializes the in-flight wave 1: r1 sees the
+    # post-observation state — wave N predictions see waves 0..N observes
+    g_after = GaussianProcess(
+        np.concatenate([xs[0], xo]), np.concatenate([ys[0], yo]),
+        params=PARAMS, tile_size=M,
+    )
+    np.testing.assert_allclose(
+        srv.result(r1), np.asarray(g_after.predict(xt)), atol=1e-3
+    )
+    assert srv._inflight is None
+    assert srv.flush() == 0                   # idempotent when drained
+
+
 try:
     from hypothesis import given, settings, strategies as st
 
