@@ -159,6 +159,7 @@ def main() -> None:
         fig10_online_update,
         fig11_ragged_fleet,
         fig12_sharded_fleet,
+        fig13_kernel_zoo,
         mem_tiles,
     )
 
@@ -177,6 +178,9 @@ def main() -> None:
         )
         sharded = fig12_sharded_fleet.run(
             n_total=128, tile=16, bs=(1, 4), n_test=16, out=col.out("fig12")
+        )
+        kernel_zoo = fig13_kernel_zoo.run(
+            n=96, n_test=16, tile=32, d=4, out=col.out("fig13")
         )
         mem_tiles.run(n=256, out=col.out("mem"))
         pipeline = _fused_vs_staged(128, col.out("pipeline"))
@@ -207,6 +211,11 @@ def main() -> None:
             bs=(1, 4) if args.quick else (1, 4, 16),
             out=col.out("fig12"),
         )
+        kernel_zoo = fig13_kernel_zoo.run(
+            n=(256 if args.quick else 512),
+            tile=(32 if args.quick else 64),
+            out=col.out("fig13"),
+        )
         mem_tiles.run(n=n, out=col.out("mem"))
         pipeline = _fused_vs_staged(min(n, 512), col.out("pipeline"))
         counts = _executor_counts()
@@ -221,6 +230,7 @@ def main() -> None:
             "online_update": online,
             "ragged_fleet": ragged,
             "sharded_fleet": sharded,
+            "kernel_zoo": kernel_zoo,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

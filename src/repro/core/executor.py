@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import kernels_math as km
 from repro.core import scheduler as sch
 from repro.core import tiling
 from repro.dist import sharding as dist_sharding
@@ -517,30 +518,27 @@ def staged_launch_count(
 
 
 def _params_concrete(params) -> bool:
-    """True iff the hyperparameters are concrete (not traced) scalars.
+    """True iff the hyperparameters are concrete (not traced) leaves.
 
     The Pallas assembly kernels bake hyperparameters in as compile-time
     constants, which is impossible inside a gradient trace; callers use this
     to fall back to the differentiable jnp assembly tile (DESIGN.md §8).
     """
-    try:
-        float(params.lengthscale)
-        float(params.vertical)
-        float(params.noise)
-        return True
-    except (TypeError, jax.errors.ConcretizationTypeError,
-            jax.errors.TracerArrayConversionError):
-        return False
+    return km.params_concrete(params)
 
 
-def _cov_batch_fn(backend: str, params, nvr: int, nvc: int, symmetric: bool):
+def _cov_batch_fn(
+    backend: str, params, nvr: int, nvc: int, symmetric: bool, kernel=None
+):
     """Batched covariance-tile assembly: (G,m,D) x (G,m,D) -> (G,m,m).
 
-    ``backend="pallas"`` requires concrete hyperparameters (they are baked
-    into the kernel); under a gradient trace the params are tracers, so the
-    differentiable jnp tile kernel is used instead — assembly is O(n^2),
-    cheap relative to the O(n^3) tile BLAS which stays on Pallas.
+    ``kernel`` picks the registered covariance family (None -> the paper's
+    SE).  ``backend="pallas"`` requires concrete hyperparameters (they are
+    baked into the kernel); under a gradient trace the params are tracers,
+    so the differentiable jnp tile kernel is used instead — assembly is
+    O(n^2), cheap relative to the O(n^3) tile BLAS which stays on Pallas.
     """
+    kernel = km.resolve_kernel(kernel)
     if backend == "pallas" and _params_concrete(params):
         from repro.kernels import cov_assembly as cova
         from repro.kernels import ops as kops
@@ -551,9 +549,8 @@ def _cov_batch_fn(backend: str, params, nvr: int, nvc: int, symmetric: bool):
                 xb,
                 row0,
                 col0,
-                lengthscale=float(params.lengthscale),
-                vertical=float(params.vertical),
-                noise=float(params.noise),
+                kernel=kernel,
+                params=params,
                 n_valid_r=nvr,
                 n_valid_c=nvc,
                 symmetric=symmetric,
@@ -561,24 +558,24 @@ def _cov_batch_fn(backend: str, params, nvr: int, nvc: int, symmetric: bool):
             )
 
         return pallas_fn
-    from repro.core import kernels_math as km
 
     def jnp_fn(xa, xb, row0, col0):
-        f = lambda a, b, r, c: km.cov_tile(a, b, r, c, params, nvr, nvc, symmetric)
+        f = lambda a, b, r, c: km.cov_tile(
+            a, b, r, c, params, nvr, nvc, symmetric, kernel=kernel
+        )
         return jax.vmap(f)(xa, xb, row0, col0)
 
     return jnp_fn
 
 
-def _params_per_problem(params) -> bool:
-    """True iff the hyperparameter leaves carry a problem-batch axis (B,)."""
-    return any(
-        jnp.ndim(leaf) > 0
-        for leaf in (params.lengthscale, params.vertical, params.noise)
-    )
+def _params_per_problem(params, kernel=None) -> bool:
+    """True iff any hyperparameter leaf carries a problem-batch axis (B, ...)."""
+    return km.params_per_problem(params, kernel)
 
 
-def _cov_batch_fn_batched(backend: str, params, nvr, nvc, symmetric: bool):
+def _cov_batch_fn_batched(
+    backend: str, params, nvr, nvc, symmetric: bool, kernel=None
+):
     """Problem-batched assembly: (B,G,m,D) x (B,G,m,D) -> (B,G,m,m).
 
     Shared hyperparameters (scalar leaves) flatten B into the single
@@ -595,20 +592,22 @@ def _cov_batch_fn_batched(backend: str, params, nvr, nvc, symmetric: bool):
     per-tile (B*G,) i32 operands and B problems of different valid sizes
     still share ONE flat kernel launch.
     """
+    kernel = km.resolve_kernel(kernel)
     ragged = jnp.ndim(nvr) > 0 or jnp.ndim(nvc) > 0
     pallas_ok = backend == "pallas" and _params_concrete(params)
-    if _params_per_problem(params) or (ragged and not pallas_ok):
-        from repro.core import kernels_math as km
+    if _params_per_problem(params, kernel) or (ragged and not pallas_ok):
 
         def per_problem(xa, xb, row0, col0):
             # mixed scalar/(B,) leaves are legal — normalize before the vmap
             b = xa.shape[0]
-            pb = km.broadcast_params(params, b)
+            pb = km.broadcast_params(params, b, kernel)
             nvr_b = jnp.broadcast_to(jnp.asarray(nvr), (b,))
             nvc_b = jnp.broadcast_to(jnp.asarray(nvc), (b,))
 
             def one(xa1, xb1, p, nr, nc):
-                f = lambda a, b, r, c: km.cov_tile(a, b, r, c, p, nr, nc, symmetric)
+                f = lambda a, b, r, c: km.cov_tile(
+                    a, b, r, c, p, nr, nc, symmetric, kernel=kernel
+                )
                 return jax.vmap(f)(xa1, xb1, row0, col0)
 
             return jax.vmap(one, in_axes=(0, 0, 0, 0, 0))(xa, xb, pb, nvr_b, nvc_b)
@@ -630,9 +629,8 @@ def _cov_batch_fn_batched(backend: str, params, nvr, nvc, symmetric: bool):
                 xb.reshape((b * g,) + xb.shape[2:]),
                 jnp.tile(row0, b),
                 jnp.tile(col0, b),
-                lengthscale=float(params.lengthscale),
-                vertical=float(params.vertical),
-                noise=float(params.noise),
+                kernel=kernel,
+                params=params,
                 n_valid_r=nvr_t,
                 n_valid_c=nvc_t,
                 symmetric=symmetric,
@@ -642,7 +640,7 @@ def _cov_batch_fn_batched(backend: str, params, nvr, nvc, symmetric: bool):
 
         return flat_ragged
 
-    single = _cov_batch_fn(backend, params, nvr, nvc, symmetric)
+    single = _cov_batch_fn(backend, params, nvr, nvc, symmetric, kernel)
 
     def flat(xa, xb, row0, col0):
         b, g = xa.shape[:2]
@@ -671,6 +669,7 @@ def run_program(
     update_dtype=None,
     batch_dispatch: str = "flat",
     mesh=None,
+    kernel=None,
 ):
     """Execute the fused prediction pipeline as one multi-stage program.
 
@@ -702,6 +701,11 @@ def run_program(
     ``with_sharding_constraint``.  Problems are independent, so GSPMD
     partitions every launch along B with zero collectives.  The mesh never
     reaches :func:`program_plan` — Plans stay shard-invariant.
+
+    **Kernel zoo (DESIGN.md §13):** ``kernel`` picks the covariance family
+    (None -> the paper's SE).  Only the ASSEMBLE/CROSS/PRIOR op payloads
+    change; the kernel never reaches :func:`program_plan` either — Plans
+    stay kernel-invariant and are reused across kernels.
     """
     batched = xc.ndim == 4
     m_tiles, m = xc.shape[-3], xc.shape[-2]
@@ -721,9 +725,9 @@ def run_program(
         functools.partial(gemm, update_dtype=update_dtype), batched, batch_dispatch
     )
     cov_fn = _cov_batch_fn_batched if batched else _cov_batch_fn
-    asm = cov_fn(backend, params, n_valid, n_valid, True)
-    crossf = cov_fn(backend, params, nt_valid, n_valid, False)
-    priorf = cov_fn(backend, params, nt_valid, nt_valid, False)
+    asm = cov_fn(backend, params, n_valid, n_valid, True, kernel)
+    crossf = cov_fn(backend, params, nt_valid, n_valid, False, kernel)
+    priorf = cov_fn(backend, params, nt_valid, nt_valid, False, kernel)
 
     env = {
         "packed": shard(
@@ -946,6 +950,7 @@ def run_append(
     update_dtype=None,
     batch_dispatch: str = "flat",
     mesh=None,
+    kernel=None,
 ) -> jax.Array:
     """Solve one appended tile-row against the frozen factor (DESIGN.md §10).
 
@@ -1002,8 +1007,8 @@ def run_append(
     # frontier (possible only in the ragged sweep) zero out, and for the
     # scalar callers every prefix column < r_tiles*m <= n_valid_new is
     # valid anyway — identical to the old r_tiles*m column mask.
-    crossf = cov_fn(backend, params, n_valid_new, n_valid_new, False)
-    diagf = cov_fn(backend, params, n_valid_new, n_valid_new, True)
+    crossf = cov_fn(backend, params, n_valid_new, n_valid_new, False, kernel)
+    diagf = cov_fn(backend, params, n_valid_new, n_valid_new, True, kernel)
 
     row = shard(jnp.zeros(lead + (r_tiles + 1, m, m), dtype))
     row0 = r_tiles * m

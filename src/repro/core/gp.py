@@ -42,13 +42,39 @@ from repro.core import predict as pred
 from repro.core import tiling
 
 
+def _params_key(params):
+    """Hashable digest of a kernel-params pytree for posterior cache keys.
+
+    Works for any registered kernel (ARD vectors, nested composite trees):
+    every leaf's host bytes, in tree order.  Leaves must be concrete here —
+    the front-ends only ever hold concrete hyperparameters.
+    """
+    return tuple(
+        np.asarray(leaf).tobytes() for leaf in jax.tree_util.tree_leaves(params)
+    )
+
+
+def _validate_fleet_params(params, kernel, b: int, cls: str) -> None:
+    """Every hyperparameter leaf: base shape (shared) or (B,)+base (per-problem)."""
+    base = kernel.base_ndims(params)
+    for (path, leaf), nd in zip(
+        jax.tree_util.tree_flatten_with_path(params)[0],
+        jax.tree_util.tree_leaves(base),
+    ):
+        if jnp.ndim(leaf) > nd and jnp.shape(leaf)[0] != b:
+            name = jax.tree_util.keystr(path)
+            raise ValueError(
+                f"{cls} params{name} must be shared (rank {nd}) or "
+                f"per-problem with leading axis ({b},); got shape "
+                f"{jnp.shape(leaf)}"
+            )
+
+
 @dataclasses.dataclass
 class GaussianProcess:
     x_train: jax.Array
     y_train: jax.Array
-    params: km.SEKernelParams = dataclasses.field(
-        default_factory=km.SEKernelParams.paper_defaults
-    )
+    params: Optional[object] = None  # None -> kernel.default_params()
     tile_size: int = 256
     n_streams: Optional[int] = None
     pipeline: str = "tiled"
@@ -57,8 +83,15 @@ class GaussianProcess:
     dtype: object = jnp.float32
     fused: bool = True
     sliding_window: Optional[int] = None  # keep at most n_max observations
+    # covariance family: None/registry name/Kernel instance (DESIGN.md §13).
+    # The kernel id joins the posterior cache key and every jit cache key;
+    # executor Plans stay kernel-invariant so switching families reuses them.
+    kernel: Optional[object] = None
 
     def __post_init__(self):
+        self.kernel = km.resolve_kernel(self.kernel)
+        if self.params is None:
+            self.params = self.kernel.default_params()
         if self.sliding_window is not None and self.sliding_window < 1:
             raise ValueError(f"sliding_window must be >= 1, got {self.sliding_window}")
         x = jnp.asarray(self.x_train, self.dtype)
@@ -79,15 +112,13 @@ class GaussianProcess:
     # -- cached posterior ---------------------------------------------------
 
     def _cache_key(self):
-        p = self.params
         # jax arrays are immutable, so object identity of the training data
         # is a sound staleness signal (rebinding x_train/y_train invalidates)
         return (
             id(self.x_train),
             id(self.y_train),
-            float(p.lengthscale),
-            float(p.vertical),
-            float(p.noise),
+            self.kernel,
+            _params_key(self.params),
             self.tile_size,
             self.n_streams,
             self.op_backend,
@@ -113,6 +144,7 @@ class GaussianProcess:
                 backend=self.op_backend,
                 update_dtype=self.update_dtype,
                 dtype=self.dtype,
+                kernel=self.kernel,
             )
             self._posterior_key = key
         return self._posterior
@@ -233,6 +265,7 @@ class GaussianProcess:
                 update_dtype=self.update_dtype,
                 dtype=self.dtype,
                 with_state=True,
+                kernel=self.kernel,
             )
             self._posterior, self._posterior_key = state, key
             return result
@@ -251,7 +284,8 @@ class GaussianProcess:
         x_test = self._prep(x_test)
         if self.pipeline == "monolithic":
             return pred.predict_monolithic(
-                self.x_train, self.y_train, x_test, self.params, dtype=self.dtype
+                self.x_train, self.y_train, x_test, self.params,
+                dtype=self.dtype, kernel=self.kernel,
             )
         return self._predict_tiled(x_test, full_cov=False)
 
@@ -266,6 +300,7 @@ class GaussianProcess:
                 self.params,
                 full_cov=True,
                 dtype=self.dtype,
+                kernel=self.kernel,
             )
         return self._predict_tiled(x_test, full_cov=True)
 
@@ -288,7 +323,8 @@ class GaussianProcess:
 
         if self.pipeline == "monolithic":
             return mll.negative_log_marginal_likelihood(
-                self.x_train, self.y_train, self.params, dtype=self.dtype
+                self.x_train, self.y_train, self.params,
+                dtype=self.dtype, kernel=self.kernel,
             )
         return mll.nlml_from_state(self.posterior(), self.y_train, dtype=self.dtype)
 
@@ -326,6 +362,7 @@ class GaussianProcess:
             n_streams=self.n_streams,
             op_backend=self.op_backend,
             update_dtype=self.update_dtype,
+            kernel=self.kernel,
         )
         self.params = new_params
         self.invalidate_cache()  # the factor belongs to the old hyperparameters
@@ -361,9 +398,7 @@ class GPBatch:
 
     x_train: jax.Array
     y_train: jax.Array
-    params: km.SEKernelParams = dataclasses.field(
-        default_factory=km.SEKernelParams.paper_defaults
-    )
+    params: Optional[object] = None  # None -> kernel.default_params()
     tile_size: int = 256
     n_streams: Optional[int] = None
     op_backend: str = "jnp"
@@ -376,8 +411,12 @@ class GPBatch:
     # changes layout only: results, Plans, and trace counts are identical
     # to the single-device path.
     mesh: Optional[object] = None
+    kernel: Optional[object] = None  # covariance family (DESIGN.md §13)
 
     def __post_init__(self):
+        self.kernel = km.resolve_kernel(self.kernel)
+        if self.params is None:
+            self.params = self.kernel.default_params()
         x = jnp.asarray(self.x_train, self.dtype)
         if x.ndim == 2:  # (B, n) convenience for 1-D problems
             x = x[..., None]
@@ -393,13 +432,7 @@ class GPBatch:
         self.x_train = x
         self.y_train = y
         b = x.shape[0]
-        for name in ("lengthscale", "vertical", "noise"):
-            leaf = getattr(self.params, name)
-            if jnp.ndim(leaf) > 0 and jnp.shape(leaf) != (b,):
-                raise ValueError(
-                    f"GPBatch params.{name} must be a scalar (shared) or "
-                    f"shape ({b},) (per-problem); got {jnp.shape(leaf)}"
-                )
+        _validate_fleet_params(self.params, self.kernel, b, "GPBatch")
         self._posterior: Optional[pred.PosteriorState] = None
         self._posterior_key = None
         self._params_bytes = None  # (params object, host bytes) memo
@@ -413,21 +446,15 @@ class GPBatch:
     def _cache_key(self):
         p = self.params
         # memoize the device->host transfer of the param leaves: params are
-        # immutable jax arrays/floats, so the identity of the SEKernelParams
+        # immutable jax arrays/floats, so the identity of the params pytree
         # (kept referenced here, so its id cannot be reused) is a sound
         # staleness signal — rebinding self.params (optimize()) refreshes it
         if self._params_bytes is None or self._params_bytes[0] is not p:
-            self._params_bytes = (
-                p,
-                (
-                    np.asarray(p.lengthscale).tobytes(),
-                    np.asarray(p.vertical).tobytes(),
-                    np.asarray(p.noise).tobytes(),
-                ),
-            )
+            self._params_bytes = (p, _params_key(p))
         return (
             id(self.x_train),
             id(self.y_train),
+            self.kernel,
             self._params_bytes[1],
             self.tile_size,
             self.n_streams,
@@ -459,6 +486,7 @@ class GPBatch:
                 dtype=self.dtype,
                 batch_dispatch=self.batch_dispatch,
                 mesh=self.mesh,
+                kernel=self.kernel,
             )
             self._posterior = pred.PosteriorState(
                 lpacked=env["packed"],
@@ -469,6 +497,7 @@ class GPBatch:
                 params=self.params,
                 beta=env["y"],
                 y_chunks=yc,
+                kernel=self.kernel,
             )
             self._posterior_key = key
         return self._posterior
@@ -594,6 +623,7 @@ class GPBatch:
             with_state=True,
             batch_dispatch=self.batch_dispatch,
             mesh=self.mesh,
+            kernel=self.kernel,
         )
         self._posterior, self._posterior_key = state, key
         return result
@@ -641,6 +671,7 @@ class GPBatch:
             op_backend=self.op_backend,
             update_dtype=self.update_dtype,
             batch_dispatch=self.batch_dispatch,
+            kernel=self.kernel,
         )
         self.params = new_params
         self.invalidate_cache()  # the factors belong to the old hyperparameters
@@ -711,9 +742,7 @@ class GPFleet:
 
     x_train: Sequence            # length-B list of (n_i, D) or (n_i,) arrays
     y_train: Sequence            # length-B list of (n_i,) arrays
-    params: km.SEKernelParams = dataclasses.field(
-        default_factory=km.SEKernelParams.paper_defaults
-    )
+    params: Optional[object] = None  # None -> kernel.default_params()
     tile_size: int = 64
     n_streams: Optional[int] = None
     op_backend: str = "jnp"
@@ -727,8 +756,12 @@ class GPFleet:
     # whose width doesn't divide the mesh fall back to replication
     # per-bucket (fleet_spec), never to an error.
     mesh: Optional[object] = None
+    kernel: Optional[object] = None  # covariance family (DESIGN.md §13)
 
     def __post_init__(self):
+        self.kernel = km.resolve_kernel(self.kernel)
+        if self.params is None:
+            self.params = self.kernel.default_params()
         xs, ys = [], []
         if len(self.x_train) != len(self.y_train) or not len(self.x_train):
             raise ValueError(
@@ -758,13 +791,7 @@ class GPFleet:
         self._xs: List[jax.Array] = xs
         self._ys: List[jax.Array] = ys
         b = len(xs)
-        for name in ("lengthscale", "vertical", "noise"):
-            leaf = getattr(self.params, name)
-            if jnp.ndim(leaf) > 0 and jnp.shape(leaf) != (b,):
-                raise ValueError(
-                    f"GPFleet params.{name} must be a scalar (shared) or "
-                    f"shape ({b},) (per-problem); got {jnp.shape(leaf)}"
-                )
+        _validate_fleet_params(self.params, self.kernel, b, "GPFleet")
         self._buckets: Dict[int, _Bucket] = {}
         self._version = 0
         self._params_bytes = None
@@ -786,16 +813,10 @@ class GPFleet:
     def _cache_key(self):
         p = self.params
         if self._params_bytes is None or self._params_bytes[0] is not p:
-            self._params_bytes = (
-                p,
-                (
-                    np.asarray(p.lengthscale).tobytes(),
-                    np.asarray(p.vertical).tobytes(),
-                    np.asarray(p.noise).tobytes(),
-                ),
-            )
+            self._params_bytes = (p, _params_key(p))
         return (
             self._version,
+            self.kernel,
             self._params_bytes[1],
             self.tile_size,
             self.n_streams,
@@ -811,18 +832,12 @@ class GPFleet:
     def invalidate_cache(self) -> None:
         self._buckets = {}
 
-    def _bucket_params(self, idx) -> km.SEKernelParams:
-        gather = jnp.asarray(idx)
-
-        def pick(leaf):
-            return leaf if jnp.ndim(leaf) == 0 else jnp.asarray(leaf)[gather]
-
-        p = self.params
-        return km.SEKernelParams(
-            lengthscale=pick(p.lengthscale),
-            vertical=pick(p.vertical),
-            noise=pick(p.noise),
-        )
+    def _bucket_params(self, idx):
+        """Per-problem leaves gathered into the bucket's rows, shared leaves
+        passed through — a ``tree_map`` over the params pytree, so any
+        registered kernel's params (ARD vectors, composite trees) bucket
+        correctly (km.gather_params)."""
+        return km.gather_params(self.params, jnp.asarray(idx), self.kernel)
 
     def _stack(self, idx, cap_tiles):
         """Zero-pad the bucket's problems to the capacity and stack them."""
@@ -852,12 +867,13 @@ class GPFleet:
             n_streams=self.n_streams, backend=self.op_backend,
             update_dtype=self.update_dtype, dtype=self.dtype,
             batch_dispatch=self.batch_dispatch, n_valid=nv, mesh=self.mesh,
+            kernel=self.kernel,
         )
         state = pred.PosteriorState(
             lpacked=env["packed"], alpha=env["alpha"],
             x_chunks=tiling.pad_features(xs, self.tile_size, dtype=self.dtype),
             n=cap_tiles * self.tile_size, m=self.tile_size, params=bp,
-            beta=env["y"], y_chunks=yc, n_valid=nv,
+            beta=env["y"], y_chunks=yc, n_valid=nv, kernel=self.kernel,
         )
         self._buckets[cap_tiles] = _Bucket(tuple(idx), state, key)
         return state
@@ -1087,5 +1103,6 @@ class GPFleet:
             n=cap * m, m=m, params=self._bucket_params(idx),
             beta=jnp.stack(be), y_chunks=jnp.stack(yc),
             n_valid=jnp.asarray(old_ns[np.asarray(idx)], jnp.int32),
+            kernel=self.kernel,
         )
 

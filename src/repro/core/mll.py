@@ -53,15 +53,16 @@ from repro.core import tiling, triangular
 def negative_log_marginal_likelihood(
     x: jax.Array,
     y: jax.Array,
-    params: km.SEKernelParams,
+    params,
     *,
     dtype=jnp.float32,
+    kernel=None,
 ) -> jax.Array:
     """Exact NLML through the monolithic Cholesky (differentiable)."""
     x = x.astype(dtype)
     y = y.astype(dtype)
     n = y.shape[0]
-    k = km.assemble_covariance(x, params, dtype=dtype)
+    k = km.assemble_covariance(x, params, kernel=kernel, dtype=dtype)
     l = chol.monolithic_cholesky(k)
     beta = jax.lax.linalg.triangular_solve(l, y[:, None], left_side=True, lower=True)
     quad = jnp.sum(beta * beta)
@@ -121,8 +122,19 @@ def nlml_from_state(state, y: jax.Array, *, dtype=jnp.float32, n_valid=None) -> 
 # ---------------------------------------------------------------------------
 
 
-def _nlml_cfg(tile_size, n_streams, backend, update_dtype, dtype, batch_dispatch="flat"):
-    """Hashable static config for the custom-vjp / jit caches."""
+def _nlml_cfg(
+    tile_size,
+    n_streams,
+    backend,
+    update_dtype,
+    dtype,
+    batch_dispatch="flat",
+    kernel=None,
+):
+    """Hashable static config for the custom-vjp / jit caches.
+
+    ``kernel`` instances are frozen dataclasses (hashable, structural
+    equality) so they slot straight into this tuple."""
     return (
         int(tile_size),
         n_streams,
@@ -130,6 +142,7 @@ def _nlml_cfg(tile_size, n_streams, backend, update_dtype, dtype, batch_dispatch
         update_dtype,
         jnp.dtype(dtype).name,
         batch_dispatch,
+        km.resolve_kernel(kernel),
     )
 
 
@@ -141,7 +154,7 @@ def _nlml_forward(cfg, x, y, params):
     """
     from repro.core import predict as pred
 
-    tile_size, n_streams, backend, update_dtype, dtype_name, batch_dispatch = cfg
+    tile_size, n_streams, backend, update_dtype, dtype_name, batch_dispatch, kernel = cfg
     dtype = jnp.dtype(dtype_name)
     n = y.shape[-1]
     env, yc = pred.nlml_program_env(
@@ -154,6 +167,7 @@ def _nlml_forward(cfg, x, y, params):
         update_dtype=update_dtype,
         dtype=dtype,
         batch_dispatch=batch_dispatch,
+        kernel=kernel,
     )
     quad = jnp.sum(yc * env["alpha"], axis=(-2, -1))
     logdet = triangular.logdet_from_factor(env["packed"], env["alpha"].shape[-2])
@@ -191,7 +205,9 @@ def _nlml_dense_grads(xd, alpha, kinv, l, v):
 
 
 def _nlml_cv_bwd(cfg, res, ct):
-    _, n_streams, _, _, dtype_name, _ = cfg
+    # SE-only (kernel.analytic_vjp): nlml_tiled routes every other kernel
+    # family to vjp="autodiff" before this rule can be installed.
+    _, n_streams, _, _, dtype_name, _, _ = cfg
     dtype = jnp.dtype(dtype_name)
     x, y, params, lpacked, alpha_c = res
     n = y.shape[0]
@@ -240,7 +256,7 @@ def _nlml_batched_cv_fwd(cfg, x, y, params):
 
 
 def _nlml_batched_cv_bwd(cfg, res, ct):
-    _, n_streams, _, _, dtype_name, _ = cfg
+    _, n_streams, _, _, dtype_name, _, _ = cfg
     dtype = jnp.dtype(dtype_name)
     x, y, params, lpacked, alpha_c = res
     b, n = y.shape
@@ -267,7 +283,7 @@ _nlml_tiled_batched_cv.defvjp(_nlml_batched_cv_fwd, _nlml_batched_cv_bwd)
 def nlml_tiled_batched(
     x: jax.Array,
     y: jax.Array,
-    params: km.SEKernelParams,
+    params,
     *,
     tile_size: int = 256,
     n_streams=None,
@@ -276,6 +292,7 @@ def nlml_tiled_batched(
     dtype=jnp.float32,
     vjp: str = "custom",
     batch_dispatch: str = "flat",
+    kernel=None,
 ) -> jax.Array:
     """Per-problem NLML vector (B,) for B stacked GPs, in ONE batched program.
 
@@ -283,7 +300,9 @@ def nlml_tiled_batched(
     (per-problem) — scalars are broadcast so the gradient contract is always
     per-problem leaves (B,).  Differentiable like :func:`nlml_tiled`:
     ``vjp="custom"`` (default) runs the blocked reverse-mode rule batched,
-    ``vjp="autodiff"`` differentiates straight through the program.
+    ``vjp="autodiff"`` differentiates straight through the program.  Kernels
+    without a hand-derived dK/dtheta (``kernel.analytic_vjp`` False) fall
+    back to autodiff automatically.
     """
     x = jnp.asarray(x, dtype)
     if x.ndim == 2:
@@ -293,12 +312,13 @@ def nlml_tiled_batched(
         raise ValueError(
             f"batched NLML needs x (B, n, D) and y (B, n); got {x.shape}, {y.shape}"
         )
-    from repro.core import predict as pred
-
-    params = pred._broadcast_params(params, x.shape[0])
+    kernel = km.resolve_kernel(kernel)
+    params = km.broadcast_params(params, x.shape[0], kernel)
     cfg = _nlml_cfg(
-        tile_size, n_streams, op_backend, update_dtype, dtype, batch_dispatch
+        tile_size, n_streams, op_backend, update_dtype, dtype, batch_dispatch, kernel
     )
+    if vjp == "custom" and not kernel.analytic_vjp:
+        vjp = "autodiff"
     if vjp == "custom":
         return _nlml_tiled_batched_cv(cfg, x, y, params)
     if vjp == "autodiff":
@@ -310,7 +330,7 @@ def nlml_tiled_batched(
 def nlml_tiled(
     x: jax.Array,
     y: jax.Array,
-    params: km.SEKernelParams,
+    params,
     *,
     tile_size: int = 256,
     n_streams=None,
@@ -318,6 +338,7 @@ def nlml_tiled(
     update_dtype=None,
     dtype=jnp.float32,
     vjp: str = "custom",
+    kernel=None,
 ) -> jax.Array:
     """NLML through the tiled fused program — differentiable (DESIGN.md §8).
 
@@ -327,12 +348,21 @@ def nlml_tiled(
     through the program's wavefront launches (the jnp ops natively, the
     Pallas tile ops via their reference VJPs) — kept as the correctness
     baseline the custom rule is tested against.
+
+    The blocked reverse-mode rule contracts hand-derived SE kernel
+    derivatives, so only kernels with ``analytic_vjp`` (SE) use it; any
+    other registered ``kernel`` silently falls back to ``vjp="autodiff"``.
     """
     x = jnp.asarray(x, dtype)
     if x.ndim == 1:
         x = x[:, None]
     y = jnp.asarray(y, dtype).reshape(-1)
-    cfg = _nlml_cfg(tile_size, n_streams, op_backend, update_dtype, dtype)
+    kernel = km.resolve_kernel(kernel)
+    cfg = _nlml_cfg(
+        tile_size, n_streams, op_backend, update_dtype, dtype, kernel=kernel
+    )
+    if vjp == "custom" and not kernel.analytic_vjp:
+        vjp = "autodiff"
     if vjp == "custom":
         return _nlml_tiled_cv(cfg, x, y, params)
     if vjp == "autodiff":
@@ -346,12 +376,54 @@ def nlml_tiled(
 # ---------------------------------------------------------------------------
 
 
+def _softplus(z: jax.Array) -> jax.Array:
+    # softplus keeps hyperparameters positive; logaddexp is overflow-safe
+    return jnp.logaddexp(z, 0.0)
+
+
+def _inv_softplus(p: jax.Array) -> jax.Array:
+    """Numerically stable softplus inverse, exact from tiny up to f32 max.
+
+    The naive ``log(expm1(p))`` overflows expm1 for p ≳ 88 in float32 (and
+    ≳ 709 in float64), turning any large hyperparameter into inf at pack
+    time; the algebraically identical ``p + log1p(-exp(-p))`` never forms
+    e^p but loses to ``exp(-p) == 1`` rounding below p ≈ 1e-7.  So: branch
+    at 20 (each arm clamped into its own safe range — the classic
+    double-where against NaN gradients from the untaken branch), and floor
+    p at the dtype's tiny (where log(expm1(p)) ≈ log(p) stays finite)
+    instead of the old lossy 1e-6 clamp that collapsed every smaller
+    hyperparameter onto the same raw value.
+    """
+    p = jnp.maximum(p, jnp.finfo(jnp.result_type(p)).tiny)
+    small = jnp.log(jnp.expm1(jnp.minimum(p, 20.0)))
+    big = p + jnp.log1p(-jnp.exp(-jnp.maximum(p, 20.0)))
+    return jnp.where(p > 20.0, big, small)
+
+
+def unpack_params(raw):
+    """Softplus every leaf of an unconstrained kernel-params pytree."""
+    return jax.tree_util.tree_map(_softplus, raw)
+
+
+def pack_params(params, dtype=None):
+    """Inverse-softplus every leaf of a kernel-params pytree (generic
+    counterpart of :func:`_pack` for the kernel zoo — every registered
+    family keeps all its hyperparameter leaves positive, so one
+    unconstrained map serves the whole registry)."""
+    if dtype is None:
+        dtype = jnp.result_type(*jax.tree_util.tree_leaves(params))
+    return jax.tree_util.tree_map(
+        lambda p: _inv_softplus(jnp.asarray(p).astype(dtype)), params
+    )
+
+
 def _unpack(raw: jax.Array) -> km.SEKernelParams:
-    # softplus keeps hyperparameters positive; raw is in R^3 — or (B, 3) for
-    # B problems (the hyperparameter triple always lives on the last axis)
-    sp = lambda z: jnp.logaddexp(z, 0.0)
+    # raw is in R^3 — or (B, 3) for B problems (the SE hyperparameter triple
+    # always lives on the last axis)
     return km.SEKernelParams(
-        lengthscale=sp(raw[..., 0]), vertical=sp(raw[..., 1]), noise=sp(raw[..., 2])
+        lengthscale=_softplus(raw[..., 0]),
+        vertical=_softplus(raw[..., 1]),
+        noise=_softplus(raw[..., 2]),
     )
 
 
@@ -364,8 +436,19 @@ def _pack(params: km.SEKernelParams, dtype=None) -> jax.Array:
     ]
     if dtype is None:
         dtype = jnp.result_type(*leaves)
-    inv_sp = lambda p: jnp.log(jnp.expm1(jnp.maximum(p.astype(dtype), 1e-6)))
-    return jnp.stack([inv_sp(p) for p in leaves], axis=-1)
+    return jnp.stack([_inv_softplus(p.astype(dtype)) for p in leaves], axis=-1)
+
+
+def _raw_codec(kernel):
+    """(pack, unpack) pair for a kernel's unconstrained parameterization.
+
+    SE keeps the legacy stacked (…, 3) raw layout (the optimizer-state shape
+    tests and benchmarks rely on); every other family round-trips its whole
+    params pytree leaf-by-leaf.
+    """
+    if isinstance(kernel, km.SquaredExponential):
+        return _pack, _unpack
+    return pack_params, unpack_params
 
 
 def nlml_loss_fn(
@@ -379,23 +462,27 @@ def nlml_loss_fn(
     op_backend: str = "jnp",
     update_dtype=None,
     vjp: str = "custom",
+    kernel=None,
 ):
     """loss(raw) over unconstrained hyperparameters, for either NLML path."""
+    kernel = km.resolve_kernel(kernel)
+    _, unpack = _raw_codec(kernel)
     if method == "monolithic":
         return lambda raw: negative_log_marginal_likelihood(
-            x, y, _unpack(raw), dtype=dtype
+            x, y, unpack(raw), dtype=dtype, kernel=kernel
         )
     if method == "tiled":
         return lambda raw: nlml_tiled(
             x,
             y,
-            _unpack(raw),
+            unpack(raw),
             tile_size=tile_size,
             n_streams=n_streams,
             op_backend=op_backend,
             update_dtype=update_dtype,
             dtype=dtype,
             vjp=vjp,
+            kernel=kernel,
         )
     raise ValueError(f"method must be 'monolithic' or 'tiled', got {method!r}")
 
@@ -409,22 +496,34 @@ def _adam_scan_impl(vg, steps: int, lr: float):
     per-problem losses, report = the (B,) loss vector; independence makes
     the summed gradient the stacked per-problem gradients, and elementwise
     moments on (B, 3) raws ARE B independent optimizers).
+
+    ``raw`` may be any pytree (the SE stacked (…, 3) array, or a full
+    kernel-params pytree from :func:`pack_params`) — the update is a
+    ``tree_map`` so arbitrary registered kernels train through the same
+    compiled scan.
     """
     b1, b2, eps = 0.9, 0.999, 1e-8
+    tmap = jax.tree_util.tree_map
 
     def step(carry, t):
         raw, m, v = carry
         (_, report), g = vg(raw)
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * g * g
-        mhat = m / (1 - b1**t)
-        vhat = v / (1 - b2**t)
-        raw = raw - lr * mhat / (jnp.sqrt(vhat) + eps)
+        m = tmap(lambda m_, g_: b1 * m_ + (1 - b1) * g_, m, g)
+        v = tmap(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_, v, g)
+        raw = tmap(
+            lambda r_, m_, v_: r_
+            - lr * (m_ / (1 - b1**t)) / (jnp.sqrt(v_ / (1 - b2**t)) + eps),
+            raw,
+            m,
+            v,
+        )
         return (raw, m, v), report
 
     def run(raw0):
-        z = jnp.zeros_like(raw0)
-        ts = jnp.arange(1, steps + 1, dtype=raw0.dtype)
+        z = tmap(jnp.zeros_like, raw0)
+        ts = jnp.arange(
+            1, steps + 1, dtype=jax.tree_util.tree_leaves(raw0)[0].dtype
+        )
         (raw, _, _), losses = jax.lax.scan(step, (raw0, z, z), ts)
         return raw, losses
 
@@ -469,7 +568,7 @@ def adam_scan_batched(loss, steps: int, lr: float):
 def optimize_hyperparameters(
     x: jax.Array,
     y: jax.Array,
-    init: km.SEKernelParams,
+    init,
     *,
     steps: int = 100,
     lr: float = 0.05,
@@ -480,18 +579,24 @@ def optimize_hyperparameters(
     op_backend: str = "jnp",
     update_dtype=None,
     vjp: str = "custom",
-) -> Tuple[km.SEKernelParams, jax.Array]:
+    kernel=None,
+) -> Tuple:
     """Adam on the NLML in unconstrained space.  Returns (params, loss curve).
 
     ``method="monolithic"`` differentiates the dense reference NLML;
     ``method="tiled"`` trains through the tiled fused program
     (:func:`nlml_tiled` — no monolithic Cholesky anywhere in the loop).
     Either way the optimizer is one jitted ``lax.scan`` (:func:`adam_scan`).
+    Any registered ``kernel`` trains: ``init`` is that kernel's params
+    pytree, optimized leaf-by-leaf through softplus space (SE keeps its
+    analytic backward pass; other families autodiff through the program).
     """
     x = jnp.asarray(x, dtype)
     if x.ndim == 1:
         x = x[:, None]
     y = jnp.asarray(y, dtype).reshape(-1)
+    kernel = km.resolve_kernel(kernel)
+    pack, unpack = _raw_codec(kernel)
     loss = nlml_loss_fn(
         x,
         y,
@@ -502,15 +607,16 @@ def optimize_hyperparameters(
         op_backend=op_backend,
         update_dtype=update_dtype,
         vjp=vjp,
+        kernel=kernel,
     )
-    raw, losses = adam_scan(loss, steps, lr)(_pack(init, dtype=dtype))
-    return _unpack(raw), losses
+    raw, losses = adam_scan(loss, steps, lr)(pack(init, dtype=dtype))
+    return unpack(raw), losses
 
 
 def optimize_hyperparameters_batched(
     x: jax.Array,
     y: jax.Array,
-    init: km.SEKernelParams,
+    init,
     *,
     steps: int = 100,
     lr: float = 0.05,
@@ -522,7 +628,8 @@ def optimize_hyperparameters_batched(
     update_dtype=None,
     vjp: str = "custom",
     batch_dispatch: str = "flat",
-) -> Tuple[km.SEKernelParams, jax.Array]:
+    kernel=None,
+) -> Tuple:
     """Train B GPs' hyperparameters in ONE jitted Adam scan (DESIGN.md §9).
 
     x (B, n, D) / y (B, n); ``init`` leaves scalar (shared start) or (B,)
@@ -542,14 +649,14 @@ def optimize_hyperparameters_batched(
             f"{tuple(x.shape)}, {tuple(y.shape)}"
         )
     b = x.shape[0]
-    from repro.core import predict as pred
-
-    init = pred._broadcast_params(init, b)
+    kernel = km.resolve_kernel(kernel)
+    pack, unpack = _raw_codec(kernel)
+    init = km.broadcast_params(init, b, kernel)
     if method == "tiled":
         loss = lambda raw: nlml_tiled_batched(
             x,
             y,
-            _unpack(raw),
+            unpack(raw),
             tile_size=tile_size,
             n_streams=n_streams,
             op_backend=op_backend,
@@ -557,16 +664,17 @@ def optimize_hyperparameters_batched(
             dtype=dtype,
             vjp=vjp,
             batch_dispatch=batch_dispatch,
+            kernel=kernel,
         )
     elif method == "monolithic":
         mono = jax.vmap(
             lambda x1, y1, raw1: negative_log_marginal_likelihood(
-                x1, y1, _unpack(raw1), dtype=dtype
+                x1, y1, unpack(raw1), dtype=dtype, kernel=kernel
             ),
             in_axes=(0, 0, 0),
         )
         loss = lambda raw: mono(x, y, raw)
     else:
         raise ValueError(f"method must be 'monolithic' or 'tiled', got {method!r}")
-    raw, losses = adam_scan_batched(loss, steps, lr)(_pack(init, dtype=dtype))
-    return _unpack(raw), losses
+    raw, losses = adam_scan_batched(loss, steps, lr)(pack(init, dtype=dtype))
+    return unpack(raw), losses

@@ -49,34 +49,41 @@ from repro.dist import sharding as dist_sharding
 # ---------------------------------------------------------------------------
 
 
-def _tile_kernel(xa, xb, row0, col0, params, n_valid_r, n_valid_c, symmetric):
+def _tile_kernel(
+    xa, xb, row0, col0, params, n_valid_r, n_valid_c, symmetric, kernel=None
+):
     """One covariance tile with global index masking (see kernels_math.cov_tile)."""
-    return km.cov_tile(xa, xb, row0, col0, params, n_valid_r, n_valid_c, symmetric)
+    return km.cov_tile(
+        xa, xb, row0, col0, params, n_valid_r, n_valid_c, symmetric, kernel=kernel
+    )
 
 
 def assemble_packed_covariance(
     x_chunks: jax.Array,
-    params: km.SEKernelParams,
+    params,
     n_valid: int,
     *,
     backend: str = "jnp",
+    kernel: Optional[km.Kernel] = None,
 ) -> jax.Array:
     """x_chunks: (M, m, D) padded feature chunks -> packed lower tiles (T, m, m).
 
     Only the M(M+1)/2 lower tiles are evaluated — the paper's observation that
     the tiled structure reduces assembly work (Fig. 4 discussion).
+    ``kernel`` picks the registered covariance family (None -> SE).
     """
     if backend == "pallas":
         from repro.kernels import ops as kops
 
-        return kops.assemble_packed_covariance(x_chunks, params, n_valid)
+        return kops.assemble_packed_covariance(x_chunks, params, n_valid, kernel)
     m_tiles, m, _ = x_chunks.shape
     rows, cols = tiling._packed_coords(m_tiles)
     row0 = jnp.asarray(rows * m)
     col0 = jnp.asarray(cols * m)
     fn = jax.vmap(
         functools.partial(
-            _tile_kernel, params=params, n_valid_r=n_valid, n_valid_c=n_valid, symmetric=True
+            _tile_kernel, params=params, n_valid_r=n_valid, n_valid_c=n_valid,
+            symmetric=True, kernel=kernel,
         )
     )
     return fn(x_chunks[rows], x_chunks[cols], row0, col0)
@@ -85,24 +92,28 @@ def assemble_packed_covariance(
 def assemble_cross_tiles(
     xt_chunks: jax.Array,
     x_chunks: jax.Array,
-    params: km.SEKernelParams,
+    params,
     nt_valid: int,
     n_valid: int,
     *,
     backend: str = "jnp",
+    kernel: Optional[km.Kernel] = None,
 ) -> jax.Array:
     """K_{X̂,X} tile grid: (Mhat, M, m, m) from (Mhat, m, D) × (M, m, D)."""
     if backend == "pallas":
         from repro.kernels import ops as kops
 
-        return kops.assemble_cross_tiles(xt_chunks, x_chunks, params, nt_valid, n_valid)
+        return kops.assemble_cross_tiles(
+            xt_chunks, x_chunks, params, nt_valid, n_valid, kernel
+        )
     mh, m, _ = xt_chunks.shape
     mt = x_chunks.shape[0]
 
     def one(xa, row0):
         return jax.vmap(
             lambda xb, col0: _tile_kernel(
-                xa, xb, row0, col0, params, nt_valid, n_valid, symmetric=False
+                xa, xb, row0, col0, params, nt_valid, n_valid, symmetric=False,
+                kernel=kernel,
             )
         )(x_chunks, jnp.arange(mt) * m)
 
@@ -111,10 +122,11 @@ def assemble_cross_tiles(
 
 def assemble_prior_tiles(
     xt_chunks: jax.Array,
-    params: km.SEKernelParams,
+    params,
     nt_valid: int,
     *,
     backend: str = "jnp",
+    kernel: Optional[km.Kernel] = None,
 ) -> jax.Array:
     """Prior K_{X̂,X̂} tile grid (Mhat, Mhat, m, m), no noise, padded region 0."""
     del backend  # cheap relative to cross/solves; jnp path always used
@@ -123,7 +135,8 @@ def assemble_prior_tiles(
     def one(xa, row0):
         return jax.vmap(
             lambda xb, col0: _tile_kernel(
-                xa, xb, row0, col0, params, nt_valid, nt_valid, symmetric=False
+                xa, xb, row0, col0, params, nt_valid, nt_valid, symmetric=False,
+                kernel=kernel,
             )
         )(xt_chunks, jnp.arange(mh) * m)
 
@@ -137,9 +150,10 @@ _broadcast_params = km.broadcast_params
 def assemble_cross_tiles_batched(
     xt_chunks: jax.Array,
     x_chunks: jax.Array,
-    params: km.SEKernelParams,
+    params,
     nt_valid,
     n_valid,
+    kernel: Optional[km.Kernel] = None,
 ) -> jax.Array:
     """Problem-batched K_{X̂,X} grid: (B, Mhat, M, m, m) with per-problem params.
 
@@ -152,24 +166,26 @@ def assemble_cross_tiles_batched(
     they join the problem-axis vmap.
     """
     b = xt_chunks.shape[0]
-    params = _broadcast_params(params, b)
+    params = _broadcast_params(params, b, kernel)
     ntb = jnp.broadcast_to(jnp.asarray(nt_valid), (b,))
     nb = jnp.broadcast_to(jnp.asarray(n_valid), (b,))
     return jax.vmap(
-        lambda xt1, x1, p, nt1, n1: assemble_cross_tiles(xt1, x1, p, nt1, n1)
+        lambda xt1, x1, p, nt1, n1: assemble_cross_tiles(
+            xt1, x1, p, nt1, n1, kernel=kernel
+        )
     )(xt_chunks, x_chunks, params, ntb, nb)
 
 
 def assemble_prior_tiles_batched(
-    xt_chunks: jax.Array, params: km.SEKernelParams, nt_valid
+    xt_chunks: jax.Array, params, nt_valid, kernel: Optional[km.Kernel] = None
 ) -> jax.Array:
     """Problem-batched prior K_{X̂,X̂} grid (B, Mhat, Mhat, m, m)."""
     b = xt_chunks.shape[0]
-    params = _broadcast_params(params, b)
+    params = _broadcast_params(params, b, kernel)
     ntb = jnp.broadcast_to(jnp.asarray(nt_valid), (b,))
-    return jax.vmap(lambda xt1, p, nt1: assemble_prior_tiles(xt1, p, nt1))(
-        xt_chunks, params, ntb
-    )
+    return jax.vmap(
+        lambda xt1, p, nt1: assemble_prior_tiles(xt1, p, nt1, kernel=kernel)
+    )(xt_chunks, params, ntb)
 
 
 def _resolve_dtype(dtype, *arrays):
@@ -207,13 +223,17 @@ class PosteriorState:
     x_chunks: jax.Array    # (M, m, D) padded training features
     n: int                 # valid training rows (bucket capacity when ragged)
     m: int                 # tile size
-    params: km.SEKernelParams  # hyperparameters the factor was built with
+    params: object         # hyperparameter pytree the factor was built with
     beta: Optional[jax.Array] = None      # (M, m) forward-solve chunks L^{-1} y
     y_chunks: Optional[jax.Array] = None  # (M, m) padded training targets
     # ragged stacked states only (DESIGN.md §11): per-problem validity
     # frontiers (B,) — each problem's factor is identity past its frontier
     # and the prediction/NLML heads mask with these instead of ``n``.
     n_valid: Optional[jax.Array] = None
+    # the covariance family the factor was assembled with (DESIGN.md §13);
+    # like ``params``, it travels with the state so warm predictions and
+    # streaming updates can never silently mix kernels.
+    kernel: km.Kernel = km.SQUARED_EXPONENTIAL
 
     def extend(self, x_new: jax.Array, y_new: jax.Array, **kwargs) -> "PosteriorState":
         """Absorb new observations in O(n^2 b) (block Cholesky append).
@@ -242,20 +262,22 @@ class PosteriorState:
 def posterior_state(
     x_train: jax.Array,
     y_train: jax.Array,
-    params: km.SEKernelParams,
+    params,
     m: int,
     *,
     n_streams: Optional[int] = None,
     backend: str = "jnp",
     update_dtype=None,
     dtype=None,
+    kernel: Optional[km.Kernel] = None,
 ) -> PosteriorState:
     """Assemble + factor K and solve for alpha = K^{-1} y (the cacheable part)."""
+    kernel = km.resolve_kernel(kernel)
     n = x_train.shape[0]
     dtype = _resolve_dtype(dtype, x_train)
     xc = tiling.pad_features(x_train, m, dtype=dtype)
     yc = tiling.pad_vector(y_train, m, dtype=dtype)
-    packed = assemble_packed_covariance(xc, params, n, backend=backend)
+    packed = assemble_packed_covariance(xc, params, n, backend=backend, kernel=kernel)
     lpacked = chol.tiled_cholesky(
         packed, n_streams=n_streams, backend=backend, update_dtype=update_dtype
     )
@@ -263,7 +285,7 @@ def posterior_state(
     alpha = triangular.backward_substitution(lpacked, beta, n_streams=n_streams)
     return PosteriorState(
         lpacked=lpacked, alpha=alpha, x_chunks=xc, n=n, m=m, params=params,
-        beta=beta, y_chunks=yc,
+        beta=beta, y_chunks=yc, kernel=kernel,
     )
 
 
@@ -284,10 +306,13 @@ def predict_from_state(
     the state's storage dtype.
     """
     params = state.params
+    kernel = state.kernel
     nh = x_test.shape[0]
     dtype = state.x_chunks.dtype if dtype is None else jnp.dtype(dtype)
     xtc = tiling.pad_features(x_test, state.m, dtype=dtype)
-    kstar = assemble_cross_tiles(xtc, state.x_chunks, params, nh, state.n, backend=backend)
+    kstar = assemble_cross_tiles(
+        xtc, state.x_chunks, params, nh, state.n, backend=backend, kernel=kernel
+    )
     mean = triangular.tiled_matvec(kstar, state.alpha).reshape(-1)[:nh]
     if not full_cov:
         return mean
@@ -296,7 +321,7 @@ def predict_from_state(
     b_tiles = jnp.einsum("qiab->iqba", kstar)
     v = triangular.forward_substitution_matrix(state.lpacked, b_tiles, n_streams=n_streams)
     w = triangular.tiled_gram(v)                               # (Q, Q, mq, mq)
-    prior = assemble_prior_tiles(xtc, params, nh, backend=backend)
+    prior = assemble_prior_tiles(xtc, params, nh, backend=backend, kernel=kernel)
     sigma_tiles = prior - w
     sigma = tiling.untile_dense(sigma_tiles)[:nh, :nh]
     return mean, sigma
@@ -317,6 +342,7 @@ def _fused_program_fn(
     nt_valid: Optional[int],
     batch_dispatch: str = "flat",
     mesh=None,
+    kernel: Optional[km.Kernel] = None,
 ):
     """The ONE jit of the fused pipeline, cached per static configuration.
 
@@ -339,6 +365,11 @@ def _fused_program_fn(
     buffer to the fleet layout inside the jit.  The mesh changes the traced
     jaxpr (sharding constraints are ops), so it joins the lru key — but it
     never reaches the executor's Plan caches, which stay shard-invariant.
+
+    **Kernel zoo (DESIGN.md §13):** the (hashable) ``kernel`` instance joins
+    the lru key too — each covariance family gets its own jit — while the
+    executor's Plan caches stay kernel-invariant (only ASSEMBLE/CROSS/PRIOR
+    payloads differ).
     """
     if n_valid is None:
 
@@ -356,6 +387,7 @@ def _fused_program_fn(
                 update_dtype=update_dtype,
                 batch_dispatch=batch_dispatch,
                 mesh=mesh,
+                kernel=kernel,
             )
 
         return jax.jit(ragged_fn) if backend == "jnp" else ragged_fn
@@ -374,6 +406,7 @@ def _fused_program_fn(
             update_dtype=update_dtype,
             batch_dispatch=batch_dispatch,
             mesh=mesh,
+            kernel=kernel,
         )
 
     return jax.jit(fn) if backend == "jnp" else fn
@@ -383,7 +416,7 @@ def predict_fused(
     x_train: jax.Array,
     y_train: jax.Array,
     x_test: jax.Array,
-    params: km.SEKernelParams,
+    params,
     m: int,
     *,
     full_cov: bool = False,
@@ -392,6 +425,7 @@ def predict_fused(
     update_dtype=None,
     dtype=None,
     with_state: bool = False,
+    kernel: Optional[km.Kernel] = None,
 ):
     """Whole-pipeline fused prediction: one program, one jit, one plan cache.
 
@@ -402,13 +436,16 @@ def predict_fused(
     :class:`PosteriorState` sliced out of the program's buffer environment,
     so callers can reuse the factor for later staged predictions.
     """
+    kernel = km.resolve_kernel(kernel)
     n = x_train.shape[0]
     nh = x_test.shape[0]
     dtype = _resolve_dtype(dtype, x_train)
     xc = tiling.pad_features(x_train, m, dtype=dtype)
     yc = tiling.pad_vector(y_train, m, dtype=dtype)
     xtc = tiling.pad_features(x_test, m, dtype=dtype)
-    fn = _fused_program_fn(full_cov, n_streams, backend, update_dtype, n, nh)
+    fn = _fused_program_fn(
+        full_cov, n_streams, backend, update_dtype, n, nh, kernel=kernel
+    )
     env = fn(xc, yc, xtc, params)
     mean = env["mean"].reshape(-1)[:nh]
     if full_cov:
@@ -422,7 +459,7 @@ def predict_fused(
     # env["y"] holds beta after the in-place forward substitution (§7)
     state = PosteriorState(
         lpacked=env["packed"], alpha=env["alpha"], x_chunks=xc, n=n, m=m,
-        params=params, beta=env["y"], y_chunks=yc,
+        params=params, beta=env["y"], y_chunks=yc, kernel=kernel,
     )
     return result, state
 
@@ -431,7 +468,7 @@ def predict_fused_batched(
     x_train: jax.Array,
     y_train: jax.Array,
     x_test: jax.Array,
-    params: km.SEKernelParams,
+    params,
     m: int,
     *,
     full_cov: bool = False,
@@ -444,6 +481,7 @@ def predict_fused_batched(
     n_valid=None,
     nt_valid=None,
     mesh=None,
+    kernel: Optional[km.Kernel] = None,
 ):
     """Fused prediction for B independent GPs in ONE batched program.
 
@@ -471,6 +509,7 @@ def predict_fused_batched(
     ``full_cov``; with ``with_state=True`` also the stacked
     :class:`PosteriorState` (leading B axis on lpacked/alpha/x_chunks).
     """
+    kernel = km.resolve_kernel(kernel)
     b, n = x_train.shape[0], x_train.shape[1]
     nh = x_test.shape[1]
     dtype = _resolve_dtype(dtype, x_train)
@@ -487,13 +526,13 @@ def predict_fused_batched(
         ntv = jnp.asarray(nh if nt_valid is None else nt_valid, jnp.int32)
         fn = _fused_program_fn(
             full_cov, n_streams, backend, update_dtype, None, None,
-            batch_dispatch, mesh,
+            batch_dispatch, mesh, kernel,
         )
         env = fn(xc, yc, xtc, params, nv, ntv)
     else:
         fn = _fused_program_fn(
             full_cov, n_streams, backend, update_dtype, n, nh, batch_dispatch,
-            mesh,
+            mesh, kernel,
         )
         env = fn(xc, yc, xtc, params)
     mean = env["mean"].reshape(b, -1)[:, :nh]
@@ -508,7 +547,7 @@ def predict_fused_batched(
     state = PosteriorState(
         lpacked=env["packed"], alpha=env["alpha"], x_chunks=xc, n=n, m=m,
         params=params, beta=env["y"], y_chunks=yc,
-        n_valid=nv if ragged else None,
+        n_valid=nv if ragged else None, kernel=kernel,
     )
     return result, state
 
@@ -538,6 +577,7 @@ def predict_from_state_batched(
     masks per-problem test counts; rows past a problem's count come back 0.
     """
     params = state.params
+    kernel = state.kernel
     b, nh = x_test.shape[0], x_test.shape[1]
     dtype = state.x_chunks.dtype if dtype is None else jnp.dtype(dtype)
     xtc = tiling.pad_features(x_test, state.m, dtype=dtype)
@@ -548,7 +588,9 @@ def predict_from_state_batched(
     xtc = dist_sharding.device_put_fleet(xtc, mesh)
     nv = state.n if state.n_valid is None else state.n_valid
     ntv = nh if nt_valid is None else nt_valid
-    kstar = assemble_cross_tiles_batched(xtc, state.x_chunks, params, ntv, nv)
+    kstar = assemble_cross_tiles_batched(
+        xtc, state.x_chunks, params, ntv, nv, kernel
+    )
     mean = triangular.tiled_matvec(kstar, state.alpha).reshape(b, -1)[:, :nh]
     if not full_cov:
         return mean
@@ -559,7 +601,7 @@ def predict_from_state_batched(
         state.lpacked, b_tiles, n_streams=n_streams
     )
     w = triangular.tiled_gram(v)                         # (B, Q, Q, mq, mq)
-    prior = assemble_prior_tiles_batched(xtc, params, ntv)
+    prior = assemble_prior_tiles_batched(xtc, params, ntv, kernel)
     sigma = tiling.untile_dense(prior - w)[:, :nh, :nh]
     return mean, sigma
 
@@ -567,7 +609,7 @@ def predict_from_state_batched(
 def nlml_program_env(
     x_train: jax.Array,
     y_train: jax.Array,
-    params: km.SEKernelParams,
+    params,
     m: int,
     *,
     n_streams: Optional[int] = None,
@@ -577,6 +619,7 @@ def nlml_program_env(
     batch_dispatch: str = "flat",
     n_valid=None,
     mesh=None,
+    kernel: Optional[km.Kernel] = None,
 ):
     """Run the NLML prefix of the fused program (DESIGN.md §8).
 
@@ -598,6 +641,7 @@ def nlml_program_env(
     pass ``n_valid`` (B,) per-problem counts — stacks zero-padded to a
     bucket capacity factor through ONE traced program (DESIGN.md §11).
     """
+    kernel = km.resolve_kernel(kernel)
     n = x_train.shape[-2]
     dtype = _resolve_dtype(dtype, x_train)
     xc = tiling.pad_features(x_train, m, dtype=dtype)
@@ -611,12 +655,13 @@ def nlml_program_env(
     if n_valid is not None:
         fn = _fused_program_fn(
             False, n_streams, backend, update_dtype, None, None,
-            batch_dispatch, mesh,
+            batch_dispatch, mesh, kernel,
         )
         nv = jnp.asarray(n_valid, jnp.int32)
         return fn(xc, yc, xtc, params, nv, jnp.asarray(0, jnp.int32)), yc
     fn = _fused_program_fn(
-        False, n_streams, backend, update_dtype, n, 0, batch_dispatch, mesh
+        False, n_streams, backend, update_dtype, n, 0, batch_dispatch, mesh,
+        kernel,
     )
     return fn(xc, yc, xtc, params), yc
 
@@ -625,7 +670,7 @@ def predict(
     x_train: jax.Array,
     y_train: jax.Array,
     x_test: jax.Array,
-    params: km.SEKernelParams,
+    params,
     m: int,
     *,
     full_cov: bool = False,
@@ -633,6 +678,7 @@ def predict(
     backend: str = "jnp",
     update_dtype=None,
     dtype=None,
+    kernel: Optional[km.Kernel] = None,
 ):
     """Tiled GP prediction — the fused whole-pipeline program.
 
@@ -657,6 +703,7 @@ def predict(
         backend=backend,
         update_dtype=update_dtype,
         dtype=dtype,
+        kernel=kernel,
     )
 
 
@@ -664,7 +711,7 @@ def predict_staged(
     x_train: jax.Array,
     y_train: jax.Array,
     x_test: jax.Array,
-    params: km.SEKernelParams,
+    params,
     m: int,
     *,
     full_cov: bool = False,
@@ -672,6 +719,7 @@ def predict_staged(
     backend: str = "jnp",
     update_dtype=None,
     dtype=None,
+    kernel: Optional[km.Kernel] = None,
 ):
     """The staged per-stage baseline: six executor invocations with a
     barrier between each — the paper's per-stage reference that the fused
@@ -685,6 +733,7 @@ def predict_staged(
         backend=backend,
         update_dtype=update_dtype,
         dtype=dtype,
+        kernel=kernel,
     )
     return predict_from_state(
         state,
@@ -700,17 +749,18 @@ def predict_monolithic(
     x_train: jax.Array,
     y_train: jax.Array,
     x_test: jax.Array,
-    params: km.SEKernelParams,
+    params,
     *,
     full_cov: bool = False,
     dtype=None,
+    kernel: Optional[km.Kernel] = None,
 ):
     """Reference (cuSOLVER-analogue) dense pipeline: one-call Cholesky."""
     dtype = _resolve_dtype(dtype, x_train)
     x = x_train.astype(dtype)
     y = y_train.astype(dtype)
     xt = x_test.astype(dtype)
-    k = km.assemble_covariance(x, params, dtype=dtype)
+    k = km.assemble_covariance(x, params, kernel=kernel, dtype=dtype)
     l = chol.monolithic_cholesky(k)
     beta = jax.lax.linalg.triangular_solve(
         l, y[:, None], left_side=True, lower=True
@@ -718,11 +768,11 @@ def predict_monolithic(
     alpha = jax.lax.linalg.triangular_solve(
         l, beta, left_side=True, lower=True, transpose_a=True
     )[:, 0]
-    kstar = km.assemble_cross_covariance(xt, x, params, dtype=dtype)
+    kstar = km.assemble_cross_covariance(xt, x, params, kernel=kernel, dtype=dtype)
     mean = kstar @ alpha
     if not full_cov:
         return mean
     v = jax.lax.linalg.triangular_solve(l, kstar.T, left_side=True, lower=True)
-    prior = km.assemble_prior_covariance(xt, params, dtype=dtype)
+    prior = km.assemble_prior_covariance(xt, params, kernel=kernel, dtype=dtype)
     sigma = prior - v.T @ v
     return mean, sigma

@@ -61,8 +61,7 @@ def pad_features(x: jax.Array, m: int, *, dtype=None) -> jax.Array:
     ``dtype=None`` keeps the input dtype — callers pass an explicit dtype
     when they want a cast, instead of relying on an implicit float32.
     """
-    if dtype is not None:
-        x = x.astype(dtype)
+    x = jnp.asarray(x, dtype)  # device array even when no padding happens
     pad = pad_amount(x.shape[-2], m)
     if pad:
         x = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)])
@@ -71,8 +70,7 @@ def pad_features(x: jax.Array, m: int, *, dtype=None) -> jax.Array:
 
 def pad_vector(y: jax.Array, m: int, *, dtype=None) -> jax.Array:
     """(n,) -> (M, m) or (B, n) -> (B, M, m) zero-padded chunks."""
-    if dtype is not None:
-        y = y.astype(dtype)
+    y = jnp.asarray(y, dtype)  # device array even when no padding happens
     pad = pad_amount(y.shape[-1], m)
     if pad:
         y = jnp.pad(y, [(0, 0)] * (y.ndim - 1) + [(0, pad)])

@@ -68,12 +68,14 @@ def _append_step_fn(
     batched: bool,
     batch_dispatch: str,
     mesh=None,
+    kernel=None,
 ):
     """One tile-row append: solve the row, repack the store, extend beta.
 
     Returns ``fn(lpacked, xc, yc, beta, x_row, y_row, params, n_valid_new)
     -> (lpacked', xc', yc', beta')`` where the primed buffers hold the
-    grown (or refilled-in-place) factor and chunk stacks.
+    grown (or refilled-in-place) factor and chunk stacks.  ``kernel`` is
+    the state's covariance family (hashable — part of the lru key).
     """
 
     def fn(lpacked, xc, yc, beta, x_row, y_row, params, n_valid_new):
@@ -89,6 +91,7 @@ def _append_step_fn(
             update_dtype=update_dtype,
             batch_dispatch=batch_dispatch,
             mesh=mesh,
+            kernel=kernel,
         )
         # beta_R = corner^{-1} (y_row - sum_{j<R} row_j beta_j): the prefix
         # of a grown forward-triangular system never changes.
@@ -279,6 +282,7 @@ def extend_state(
         step = _append_step_fn(
             r_tiles, m_store, grow, n_streams, backend, update_dtype,
             batched, batch_dispatch, mesh if batched else None,
+            getattr(state, "kernel", None),
         )
         lpacked, xc, yc, beta = step(
             lpacked, xc, yc, beta, x_row, y_row, state.params,
@@ -292,7 +296,7 @@ def extend_state(
         _check((alpha,), "append")
     return pred.PosteriorState(
         lpacked=lpacked, alpha=alpha, x_chunks=xc, n=n, m=m,
-        params=state.params, beta=beta, y_chunks=yc,
+        params=state.params, beta=beta, y_chunks=yc, kernel=state.kernel,
     )
 
 
@@ -401,7 +405,7 @@ def extend_state_ragged(
     for r in range(r_lo, r_hi + 1):
         step = _append_step_fn(
             r, m_store, False, n_streams, backend, update_dtype,
-            True, batch_dispatch, mesh,
+            True, batch_dispatch, mesh, getattr(state, "kernel", None),
         )
         lpacked, xc, yc, beta = step(
             lpacked, xc, yc, beta, xc[:, r], yc[:, r], state.params, nv_new_dev
@@ -413,6 +417,7 @@ def extend_state_ragged(
     return pred.PosteriorState(
         lpacked=lpacked, alpha=alpha, x_chunks=xc, n=state.n, m=m,
         params=state.params, beta=beta, y_chunks=yc, n_valid=nv_new_dev,
+        kernel=state.kernel,
     )
 
 
@@ -467,7 +472,7 @@ def shrink_state(
         _check((alpha,), "evict")
     return pred.PosteriorState(
         lpacked=lpacked, alpha=alpha, x_chunks=xc, n=state.n - k, m=m,
-        params=state.params, beta=beta, y_chunks=yc,
+        params=state.params, beta=beta, y_chunks=yc, kernel=state.kernel,
     )
 
 

@@ -1,4 +1,4 @@
-"""Pallas kernel: tiled SE-kernel covariance assembly.
+"""Pallas kernel: tiled covariance assembly for any registered kernel family.
 
 The paper assembles the covariance matrix with custom CUDA kernels, one tile
 per task, asynchronously alongside the factorization.  This is the TPU
@@ -7,18 +7,26 @@ lower triangle, or one cross-covariance tile grid — with each grid step
 computing one (m × mb) tile entirely in VMEM.
 
 Design notes (HBM→VMEM→MXU):
-  * the pairwise squared distances use the expanded |a|²+|b|²−2a·bᵀ form so
-    the (m × D)·(D × mb) inner product maps onto the MXU; the exp/masking is
-    VPU work on the (m × mb) block held in VMEM.
+  * the kernel family is pluggable (DESIGN.md §13): the tile body calls
+    ``kernel.kfree(params, xa, xb)`` with the hyperparameter pytree lowered
+    to *host constants* — every family's math (expanded-form distances on
+    the MXU, exp/sqrt/log on the VPU) is Pallas-body safe, and baking the
+    params keeps the kernel free of scalar operands.  Traced params can't be
+    baked; the executor routes those to the differentiable jnp tile instead.
   * feature blocks are small ((m, D), D ≲ 16 for SI workloads), so the
     operand tiles always fit VMEM (m=512, D=16 → 32 KiB per operand).
   * global row/col offsets for diagonal/padding masks arrive as (1,)-blocks
     of i32 arrays indexed by the same grid step.
+  * symmetric (training) tiles pin the global diagonal to the exact
+    ``diag + noise`` constant instead of trusting the cancellation-prone
+    |a|²+|b|²−2a·bᵀ distance form (bitwise ``v + σ²`` even for
+    large-magnitude f32 inputs).
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,9 +42,9 @@ def _cov_tile_kernel(
     nvc_ref,
     o_ref,
     *,
-    lengthscale: float,
-    vertical: float,
-    noise: float,
+    kernel,
+    params,
+    diag: float,
     symmetric: bool,
 ):
     xa = xa_ref[0]                      # (m, D)
@@ -45,19 +53,13 @@ def _cov_tile_kernel(
     col0 = col0_ref[0]
     n_valid_r = nvr_ref[0]
     n_valid_c = nvc_ref[0]
-    na = jnp.sum(xa * xa, axis=-1)[:, None]
-    nb = jnp.sum(xb * xb, axis=-1)[None, :]
-    cross = jax.lax.dot_general(
-        xa, xb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    d2 = jnp.maximum(na + nb - 2.0 * cross, 0.0)
-    k = vertical * jnp.exp(-0.5 / lengthscale * d2)
+    k = kernel.kfree(params, xa, xb)
     gi = row0 + jax.lax.broadcasted_iota(jnp.int32, k.shape, 0)
     gj = col0 + jax.lax.broadcasted_iota(jnp.int32, k.shape, 1)
     on_diag = gi == gj
     valid = (gi < n_valid_r) & (gj < n_valid_c)
     if symmetric:
-        k = k + jnp.where(on_diag, noise, 0.0).astype(k.dtype)
+        k = jnp.where(on_diag, jnp.asarray(diag, k.dtype), k)
         k = jnp.where(valid, k, on_diag.astype(k.dtype))
     else:
         k = jnp.where(valid, k, jnp.zeros((), k.dtype))
@@ -70,9 +72,11 @@ def cov_tiles(
     row0: jax.Array,        # (T,) i32 global row offsets
     col0: jax.Array,        # (T,) i32 global col offsets
     *,
-    lengthscale: float,
-    vertical: float,
-    noise: float,
+    kernel=None,
+    params=None,
+    lengthscale: Optional[float] = None,
+    vertical: Optional[float] = None,
+    noise: Optional[float] = None,
     n_valid_r,
     n_valid_c,
     symmetric: bool,
@@ -80,21 +84,36 @@ def cov_tiles(
 ) -> jax.Array:
     """Assemble a batch of covariance tiles: returns (T, m, mb).
 
+    Pass ``kernel=`` (a ``repro.core.kernels_math.Kernel``) with its
+    ``params`` pytree — the params must be concrete; they are baked into the
+    kernel as compile-time constants.  The legacy SE spelling
+    (``lengthscale=/vertical=/noise=`` floats) is still accepted.
+
     ``n_valid_r``/``n_valid_c`` may be scalars (one mask for every tile) or
     (T,) arrays (a per-tile mask — the ragged-batch path, where tiles of B
     different problems share one grid and each carries its problem's
     validity frontier).  Either way they become (1,)-block i32 operands
     indexed by the grid step, exactly like ``row0``/``col0``.
     """
+    from repro.core import kernels_math as km
+
+    if kernel is None:
+        kernel = km.SQUARED_EXPONENTIAL
+        params = km.SEKernelParams(
+            float(lengthscale), float(vertical), float(noise)
+        )
+    else:
+        kernel = km.resolve_kernel(kernel)
+        params = km.concrete_params(params)
     t, m, d = xa_stack.shape
     mb = xb_stack.shape[1]
     nvr = jnp.broadcast_to(jnp.asarray(n_valid_r, jnp.int32), (t,))
     nvc = jnp.broadcast_to(jnp.asarray(n_valid_c, jnp.int32), (t,))
     kern = functools.partial(
         _cov_tile_kernel,
-        lengthscale=float(lengthscale),
-        vertical=float(vertical),
-        noise=float(noise),
+        kernel=kernel,
+        params=params,
+        diag=float(kernel.diag(params)) + float(kernel.noise(params)),
         symmetric=symmetric,
     )
     return pl.pallas_call(

@@ -201,14 +201,19 @@ def trailing_update_batch(c_stack, a_stack, b_stack, *, update_dtype=None):
 # ---------------------------------------------------------------------------
 
 
-def assemble_packed_covariance(x_chunks: jax.Array, params, n_valid) -> jax.Array:
+def assemble_packed_covariance(
+    x_chunks: jax.Array, params, n_valid, kernel=None
+) -> jax.Array:
     """(M, m, D) padded chunks -> packed lower covariance tiles (T, m, m).
 
-    Hyperparameters must be concrete (the Pallas path bakes them in as
+    ``kernel`` picks the registered covariance family (None -> the paper's
+    SE).  Hyperparameters must be concrete (the Pallas path bakes them in as
     compile-time constants; use the jnp backend for NLML differentiation).
     ``n_valid`` may be a Python int or a traced scalar — it reaches the
     kernel as a (1,)-block i32 operand, not a compile-time constant.
     """
+    from repro.core import kernels_math as km
+
     m_tiles, m, _ = x_chunks.shape
     rows, cols = tiling._packed_coords(m_tiles)
     return _cov.cov_tiles(
@@ -216,9 +221,8 @@ def assemble_packed_covariance(x_chunks: jax.Array, params, n_valid) -> jax.Arra
         x_chunks[cols],
         jnp.asarray(rows * m, jnp.int32),
         jnp.asarray(cols * m, jnp.int32),
-        lengthscale=float(params.lengthscale),
-        vertical=float(params.vertical),
-        noise=float(params.noise),
+        kernel=km.resolve_kernel(kernel),
+        params=params,
         n_valid_r=n_valid,
         n_valid_c=n_valid,
         symmetric=True,
@@ -227,9 +231,11 @@ def assemble_packed_covariance(x_chunks: jax.Array, params, n_valid) -> jax.Arra
 
 
 def assemble_cross_tiles(
-    xt_chunks: jax.Array, x_chunks: jax.Array, params, nt_valid, n_valid
+    xt_chunks: jax.Array, x_chunks: jax.Array, params, nt_valid, n_valid, kernel=None
 ) -> jax.Array:
     """K_{X̂,X} tile grid (Mhat, M, m, m) via one batched kernel launch."""
+    from repro.core import kernels_math as km
+
     mh, m, _ = xt_chunks.shape
     mt = x_chunks.shape[0]
     rows = np.repeat(np.arange(mh), mt)
@@ -239,9 +245,8 @@ def assemble_cross_tiles(
         x_chunks[cols],
         jnp.asarray(rows * m, jnp.int32),
         jnp.asarray(cols * m, jnp.int32),
-        lengthscale=float(params.lengthscale),
-        vertical=float(params.vertical),
-        noise=float(params.noise),
+        kernel=km.resolve_kernel(kernel),
+        params=params,
         n_valid_r=nt_valid,
         n_valid_c=n_valid,
         symmetric=False,

@@ -25,9 +25,10 @@ def ref_cov_tile(
 ) -> jax.Array:
     """One (m, mb) covariance tile of the padded SE kernel matrix.
 
-    symmetric=True: training matrix semantics — +noise on the global
-    diagonal, identity on the padded region.  False: cross-covariance —
-    padded region is zero.
+    symmetric=True: training matrix semantics — the global diagonal pinned
+    to the exact ``vertical + noise`` (never computed through the
+    cancellation-prone expanded distance form), identity on the padded
+    region.  False: cross-covariance — padded region is zero.
     """
     d2 = (
         jnp.sum(xa * xa, -1)[:, None]
@@ -41,7 +42,7 @@ def ref_cov_tile(
     on_diag = gi == gj
     valid = (gi < n_valid_r) & (gj < n_valid_c)
     if symmetric:
-        k = k + jnp.where(on_diag, noise, 0.0).astype(k.dtype)
+        k = jnp.where(on_diag, jnp.asarray(vertical + noise, k.dtype), k)
         return jnp.where(valid, k, on_diag.astype(k.dtype))
     return jnp.where(valid, k, jnp.zeros((), k.dtype))
 

@@ -1,0 +1,77 @@
+"""Regression: the assembled covariance diagonal must be *exactly* v + sigma^2.
+
+Pre-fix, the symmetric assembly computed K(i, i) through the kernel function
+itself: ``k(x_i, x_i) = v * exp(-0.5 * d2(x_i, x_i))``.  In float32 the
+squared distance of a point to itself is not exactly zero once coordinates
+carry a large common offset (the expanded |a|^2 + |b|^2 - 2ab^T form cancels
+catastrophically), so diagonals came out as ``v * exp(-eps)`` — off by ~5e-4
+at offset ~256 — eroding the noise regularization and, at larger offsets,
+breaking positive-definiteness.  The fix pins on-diagonal entries to the
+``diag + noise`` constant with a ``jnp.where`` in both the jnp assembly tile
+and the Pallas cov-assembly kernel (DESIGN.md §13).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kernels_math as km
+from repro.core import predict as pred
+from repro.core import tiling
+
+
+def _offset_data(n=64, offset=256.0, seed=0):
+    # moderate offset: enough that f32 distance cancellation corrupts a
+    # naively-computed diagonal (~5e-4 error, breaking bitwise equality),
+    # small enough that off-diagonal structure survives and K stays PD
+    rng = np.random.default_rng(seed)
+    return (offset + 10.0 * rng.random((n, 2))).astype(np.float32)
+
+
+def _dense_from_packed(packed, n, m):
+    full = np.asarray(tiling.unpack_lower(packed, fill="symmetric"))
+    return full[:n, :n]
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_diagonal_bitwise_exact(backend):
+    x = _offset_data()
+    m = 32
+    p = km.SEKernelParams(lengthscale=1.0, vertical=1.0, noise=0.1)
+    xc = tiling.pad_features(jnp.asarray(x), m)
+    packed = pred.assemble_packed_covariance(xc, p, x.shape[0], backend=backend)
+    full = _dense_from_packed(np.asarray(packed), x.shape[0], m)
+    d = np.diagonal(full)
+    # bitwise: the fixed assembly writes the f32 constant v + sigma^2 directly
+    assert np.all(d == np.float32(1.1)), np.unique(d)
+    # and the pinned diagonal keeps the matrix factorizable
+    np.linalg.cholesky(np.asarray(full, np.float64))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_offset_data_end_to_end(backend):
+    """Tiled predict on offset data still matches the dense reference."""
+    x = _offset_data()
+    rng = np.random.default_rng(1)
+    y = np.sin(x.sum(-1) / 50.0).astype(np.float32)
+    xt = x[:7] + rng.normal(scale=0.5, size=(7, 2)).astype(np.float32)
+    p = km.SEKernelParams(lengthscale=2.0, vertical=1.0, noise=0.1)
+    ref = pred.predict_monolithic(x, y, xt, p)
+    mean = pred.predict(x, y, xt, p, 32, backend=backend)
+    np.testing.assert_allclose(mean, ref, rtol=0, atol=5e-3)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_diagonal_exact_for_composites(backend):
+    """The pin uses kernel.diag + kernel.noise, so composites get it too."""
+    x = _offset_data(n=48)
+    m = 32
+    kern = km.Sum(km.Scaled(km.Matern52()), km.White())
+    p = kern.default_params()
+    want = np.float32(float(kern.diag(p)) + float(kern.noise(p)))
+    xc = tiling.pad_features(jnp.asarray(x), m)
+    packed = pred.assemble_packed_covariance(
+        xc, p, x.shape[0], backend=backend, kernel=kern
+    )
+    full = _dense_from_packed(np.asarray(packed), x.shape[0], m)
+    assert np.all(np.diagonal(full) == want), np.unique(np.diagonal(full))
