@@ -1,0 +1,161 @@
+"""Fig. 14 (ours): the Nyström low-rank accuracy/wall-time trade-off.
+
+DESIGN.md §14 adds an O(nm²) ``method="lowrank"`` tier next to the exact
+fused pipeline.  The claim this figure backs: on large problems the
+low-rank cold path is many times faster than the exact fused predict while
+staying close in accuracy, and the gap is a smooth function of the
+inducing-set size.  Per (n, m_inducing) cell we report:
+
+* cold-path predict wall time, with speedup vs the exact fused predict;
+* test RMSE against the noiseless generating function, with the ratio to
+  the exact posterior's RMSE;
+* the Woodbury NLML gap (nlml_lowrank − nlml_exact, per point);
+* low-rank Plan-cache misses across the m_inducing sweep — the sweep
+  changes only the inducing tile count, so misses stay proportional to
+  the distinct geometries, never to the number of timed calls.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench, row
+from repro.core import executor
+from repro.core import lowrank
+from repro.core import mll
+from repro.core import predict as pred
+from repro.core.kernels_math import SEKernelParams
+
+
+def _dataset(rng, n, n_test, d):
+    """Smooth target + observation noise so RMSE is a meaningful axis.
+
+    Low-dimensional by default (d=3): the low-rank tier is the right tool
+    when a few hundred inducing points can cover the input space
+    (DESIGN.md §14 "when to choose it") — that is the regime this figure
+    charts.  Pass a larger d to watch the approximation degrade instead.
+    """
+    x = rng.uniform(-2.0, 2.0, (n, d)).astype(np.float32)
+    xt = rng.uniform(-2.0, 2.0, (n_test, d)).astype(np.float32)
+
+    def f(z):
+        return np.sin(z[:, 0]) + 0.5 * np.cos(2.0 * z[:, 1 % d]) + 0.25 * z[:, 2 % d]
+
+    y = (f(x) + 0.1 * rng.standard_normal(n)).astype(np.float32)
+    ft = f(xt).astype(np.float32)
+    return x, y, xt, ft
+
+
+def _plan_misses():
+    return (
+        executor.cholesky_plan.cache_info().misses
+        + executor.lowrank_plan.cache_info().misses
+        + executor.program_plan.cache_info().misses
+    )
+
+
+def run(
+    sizes=(4096, 16384),
+    ms=(64, 128, 256, 512),
+    n_test=512,
+    tile=256,
+    d=3,
+    out=print,
+    backend="jnp",
+    seed=0,
+    exact_reps=2,
+):
+    import jax
+
+    rng = np.random.default_rng(seed)
+    params = SEKernelParams(lengthscale=0.8, vertical=1.0, noise=0.05)
+    results = []
+    for n in sizes:
+        x, y, xt, ft = _dataset(rng, n, n_test, d)
+
+        # Exact fused baseline: O(n^3) factorization dominates at these n,
+        # so time fewer repeats than the low-rank cells.
+        exact_fn = jax.jit(lambda a, b, c: pred.predict(a, b, c, params, tile))
+        t_exact, _ = bench(exact_fn, x, y, xt, reps=exact_reps)
+        mu_exact = np.asarray(exact_fn(x, y, xt))
+        rmse_exact = float(np.sqrt(np.mean((mu_exact - ft) ** 2)))
+        nlml_exact = float(
+            jax.jit(lambda a, b: mll.nlml_tiled(a, b, params, tile_size=tile))(x, y)
+        )
+        out(row(
+            f"fig14/exact/n{n}/m{tile}", t_exact, f"rmse={rmse_exact:.4f}"
+        ))
+
+        plan0 = _plan_misses()
+        for mi in ms:
+            lr_fn = jax.jit(
+                lambda a, b, c, mi=mi: lowrank.predict_lowrank(
+                    a, b, c, params, mi, tile, backend=backend
+                )
+            )
+            t_lr, _ = bench(lr_fn, x, y, xt)
+            mu_lr = np.asarray(lr_fn(x, y, xt))
+            rmse_lr = float(np.sqrt(np.mean((mu_lr - ft) ** 2)))
+            state = lowrank.lowrank_state(x, y, params, mi, tile, backend=backend)
+            nlml_lr = float(lowrank.nlml_from_lowrank_state(state))
+            speedup = t_exact / t_lr
+            gap = (nlml_lr - nlml_exact) / n
+            out(row(
+                f"fig14/lowrank/n{n}/mi{mi}",
+                t_lr,
+                f"speedup_vs_exact={speedup:.2f} rmse={rmse_lr:.4f} "
+                f"rmse_vs_exact={rmse_lr / rmse_exact:.3f} "
+                f"nlml_gap_per_point={gap:.4f}",
+            ))
+            results.append({
+                "n": n,
+                "m_inducing": mi,
+                "tile": tile,
+                "us_predict": t_lr * 1e6,
+                "us_exact": t_exact * 1e6,
+                "speedup_vs_exact": speedup,
+                "rmse": rmse_lr,
+                "rmse_exact": rmse_exact,
+                "rmse_vs_exact": rmse_lr / rmse_exact,
+                "nlml_per_point": nlml_lr / n,
+                "nlml_exact_per_point": nlml_exact / n,
+                "nlml_gap_per_point": gap,
+            })
+        misses = _plan_misses() - plan0
+        out(row(
+            f"fig14/plan_reuse/n{n}", 0.0,
+            f"plan_misses_across_sweep={misses} m_values={len(ms)}",
+        ))
+    return {"rows": results}
+
+
+def main() -> None:
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes")
+    ap.add_argument(
+        "--json",
+        default="",
+        help="merge a 'lowrank' key into this BENCH_pipeline.json ('' disables)",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        res = run(sizes=(96,), ms=(16, 32), n_test=24, tile=32, d=4)
+    else:
+        res = run()
+    if args.json:
+        payload = {}
+        if os.path.exists(args.json):
+            with open(args.json) as f:
+                payload = json.load(f)
+        payload["lowrank"] = res
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# merged lowrank into {args.json}")
+
+
+if __name__ == "__main__":
+    main()

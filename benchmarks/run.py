@@ -31,9 +31,10 @@ def _env_header() -> dict:
 class _Collector:
     """Print benchmark rows and keep them for the JSON artifact.
 
-    Every figure group carries an ``env`` header (device count, backend,
-    fleet mesh shape) next to its ``rows`` so timings from different
-    device configurations are never conflated."""
+    The execution environment (device count, backend, fleet mesh shape) is
+    stamped once at the payload's top level; figure groups carry only their
+    ``rows`` — one run means one environment, so per-figure copies would be
+    pure duplication."""
 
     def __init__(self) -> None:
         self.figures: dict = {}
@@ -46,7 +47,7 @@ class _Collector:
         return self._env
 
     def out(self, figure: str):
-        group = self.figures.setdefault(figure, {"env": self.env, "rows": []})
+        group = self.figures.setdefault(figure, {"rows": []})
         rows = group["rows"]
 
         def _out(line: str) -> None:
@@ -160,6 +161,7 @@ def main() -> None:
         fig11_ragged_fleet,
         fig12_sharded_fleet,
         fig13_kernel_zoo,
+        fig14_lowrank_tradeoff,
         mem_tiles,
     )
 
@@ -181,6 +183,10 @@ def main() -> None:
         )
         kernel_zoo = fig13_kernel_zoo.run(
             n=96, n_test=16, tile=32, d=4, out=col.out("fig13")
+        )
+        lowrank = fig14_lowrank_tradeoff.run(
+            sizes=(96,), ms=(16, 32), n_test=24, tile=32, d=3,
+            out=col.out("fig14"),
         )
         mem_tiles.run(n=256, out=col.out("mem"))
         pipeline = _fused_vs_staged(128, col.out("pipeline"))
@@ -216,6 +222,13 @@ def main() -> None:
             tile=(32 if args.quick else 64),
             out=col.out("fig13"),
         )
+        lowrank = fig14_lowrank_tradeoff.run(
+            sizes=((1024,) if args.quick else (4096, 16384)),
+            ms=((64, 128) if args.quick else (64, 128, 256, 512)),
+            n_test=(128 if args.quick else 512),
+            tile=(64 if args.quick else 256),
+            out=col.out("fig14"),
+        )
         mem_tiles.run(n=n, out=col.out("mem"))
         pipeline = _fused_vs_staged(min(n, 512), col.out("pipeline"))
         counts = _executor_counts()
@@ -231,6 +244,7 @@ def main() -> None:
             "ragged_fleet": ragged,
             "sharded_fleet": sharded,
             "kernel_zoo": kernel_zoo,
+            "lowrank": lowrank,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -96,6 +96,17 @@ def get_ops(backend: str):
     raise ValueError(f"unknown backend: {backend}")
 
 
+def get_lrgemm_op(backend: str):
+    """The per-tile LRGEMM contraction op (DESIGN.md §14): (m, mb) @ (mb,)."""
+    if backend == "jnp":
+        return lambda a, v: a @ v
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.lrgemm
+    raise ValueError(f"unknown backend: {backend}")
+
+
 # ---------------------------------------------------------------------------
 # Compiled plans: per level, per op, per stream-chunk gather/scatter indices.
 # ---------------------------------------------------------------------------
@@ -493,6 +504,59 @@ def program_plan(
                 batches.append(_program_batch(gop, chunk, m_tiles, q_tiles))
         levels.append(tuple(batches))
     return Plan("program", m_tiles, n_streams, tuple(levels))
+
+
+@functools.lru_cache(maxsize=None)
+def lowrank_plan(
+    mu_tiles: int, n_tiles: int, n_streams: Optional[int] = None
+) -> Plan:
+    """Compile the LRGEMM bulk family (DESIGN.md §14) into ONE batched launch.
+
+    The lowrank schedule is a single level of ``mu_tiles * n_tiles``
+    independent tile contractions over the K_un grid; like every BULK_OPS
+    family it is never chunked by the stream pool.  The Plan depends only on
+    the (mu_tiles, n_tiles) tile geometry — B-invariant, so every fleet
+    width and every problem batch reuses the same cache entry.
+    """
+    tasks = tuple(sch.lowrank_tasks(mu_tiles, n_tiles))
+    batch = Batch(
+        sch.LRGEMM,
+        tasks,
+        out=_arr([p for _, p, _, _ in tasks]),           # c chunk rows
+        a=_arr([p * n_tiles + j for _, p, j, _ in tasks]),  # flat K_un slots
+        b=_arr([j for _, _, j, _ in tasks]),             # training chunks
+    )
+    return Plan("lowrank", mu_tiles, n_streams, ((batch,),))
+
+
+def run_lowrank_contraction(
+    kun: jax.Array,
+    yc: jax.Array,
+    *,
+    backend: str = "jnp",
+    batch_dispatch: str = "flat",
+    n_streams: Optional[int] = None,
+) -> jax.Array:
+    """c = K_un y through the LRGEMM family: c_p = sum_j K_un[p, j] y_j.
+
+    ``kun`` (MU, M, m, m) cross-covariance tile grid (rows = inducing
+    points, cols = training points), ``yc`` (M, m) training chunks — or
+    ``(B, ...)`` problem-batched operands driven by the SAME lru-cached
+    Plan.  One gather + ONE batched tile matvec (jnp or the Pallas LRGEMM
+    kernel through ``_tile_dispatch``) + one scatter-add; ragged problems
+    need no masking here because padded K_un columns are assembled as zero.
+    """
+    batched = kun.ndim == 5
+    take, _, add = _env_ops(batched)
+    mu_tiles, n_tiles = kun.shape[-4], kun.shape[-3]
+    plan = lowrank_plan(mu_tiles, n_tiles, n_streams)
+    mv = _tile_dispatch(get_lrgemm_op(backend), batched, batch_dispatch)
+    kflat = kun.reshape(kun.shape[:-4] + (mu_tiles * n_tiles,) + kun.shape[-2:])
+    out = jnp.zeros(kun.shape[:-4] + (mu_tiles, kun.shape[-2]), kun.dtype)
+    for level in plan.levels:
+        for bt in level:
+            out = add(out, bt.out, mv(take(kflat, bt.a), take(yc, bt.b)))
+    return out
 
 
 def staged_launch_count(

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import kernels_math as km
+from repro.core import lowrank
 from repro.core import predict as pred
 from repro.core import tiling
 
@@ -87,11 +88,27 @@ class GaussianProcess:
     # The kernel id joins the posterior cache key and every jit cache key;
     # executor Plans stay kernel-invariant so switching families reuses them.
     kernel: Optional[object] = None
+    # approximation tier (DESIGN.md §14): "exact" (default) factorizes the
+    # full n×n covariance; "lowrank" runs the tiled Nyström/DTC tier —
+    # O(n m²) build on an m_inducing-point inner system, O(m²) per test
+    # point, streaming updates through the rank-m system (never O(n³)).
+    # method="lowrank" takes precedence over ``pipeline``/``fused``.
+    method: str = "exact"
+    m_inducing: Optional[int] = None
+    strategy: str = "subset"  # inducing selection: "subset" | "kmeans-lite"
+    inducing: Optional[object] = None  # explicit inducing inputs (m_inducing, D)
+    jitter: Optional[float] = None  # K_uu regularizer; None -> lowrank.DEFAULT_JITTER
 
     def __post_init__(self):
         self.kernel = km.resolve_kernel(self.kernel)
         if self.params is None:
             self.params = self.kernel.default_params()
+        if self.method not in ("exact", "lowrank"):
+            raise ValueError(
+                f"method must be 'exact' or 'lowrank', got {self.method!r}"
+            )
+        if self.method == "lowrank" and self.m_inducing is None:
+            raise ValueError("method='lowrank' requires m_inducing")
         if self.sliding_window is not None and self.sliding_window < 1:
             raise ValueError(f"sliding_window must be >= 1, got {self.sliding_window}")
         x = jnp.asarray(self.x_train, self.dtype)
@@ -108,6 +125,8 @@ class GaussianProcess:
         self.x_train = x
         self._posterior: Optional[pred.PosteriorState] = None
         self._posterior_key = None
+        self._lowrank: Optional[lowrank.LowRankState] = None
+        self._lowrank_key = None
 
     # -- cached posterior ---------------------------------------------------
 
@@ -124,6 +143,11 @@ class GaussianProcess:
             self.op_backend,
             str(self.update_dtype),
             str(jnp.dtype(self.dtype)),
+            self.method,
+            self.m_inducing,
+            self.strategy,
+            None if self.jitter is None else float(self.jitter),
+            None if self.inducing is None else id(self.inducing),
         )
 
     def posterior(self) -> pred.PosteriorState:
@@ -149,14 +173,47 @@ class GaussianProcess:
             self._posterior_key = key
         return self._posterior
 
+    def _effective_jitter(self) -> float:
+        return lowrank.DEFAULT_JITTER if self.jitter is None else float(self.jitter)
+
+    def lowrank_posterior(self) -> lowrank.LowRankState:
+        """The cached Nyström state (method="lowrank"): inducing chunks, the
+        whitened m×m inner factors, and the projected weights — rebuilt only
+        when data/hyperparameters/knobs change, exactly like :meth:`posterior`.
+        """
+        key = self._cache_key()
+        if self._lowrank is None or self._lowrank_key != key:
+            self._lowrank = lowrank.lowrank_state(
+                self.x_train,
+                self.y_train,
+                self.params,
+                self.m_inducing,
+                self.tile_size,
+                strategy=self.strategy,
+                inducing=self.inducing,
+                jitter=self._effective_jitter(),
+                n_streams=self.n_streams,
+                backend=self.op_backend,
+                update_dtype=self.update_dtype,
+                dtype=self.dtype,
+                kernel=self.kernel,
+            )
+            self._lowrank_key = key
+        return self._lowrank
+
     def invalidate_cache(self) -> None:
         self._posterior = None
         self._posterior_key = None
+        self._lowrank = None
+        self._lowrank_key = None
 
     # -- streaming updates (DESIGN.md §10) ----------------------------------
 
     def _cache_warm(self) -> bool:
         return self._posterior is not None and self._posterior_key == self._cache_key()
+
+    def _lowrank_warm(self) -> bool:
+        return self._lowrank is not None and self._lowrank_key == self._cache_key()
 
     def update(self, x_new: jax.Array, y_new: jax.Array) -> "GaussianProcess":
         """Absorb new observations online in O(n^2 b) — no re-factorization.
@@ -181,6 +238,34 @@ class GaussianProcess:
                 f"{tuple(x_new.shape)} and {tuple(y_new.shape)}"
             )
         if x_new.shape[0] == 0:
+            return self
+        if self.method == "lowrank":
+            # absorb through the rank-m inner system: O(b m² + m³), no O(n³)
+            warm = self._lowrank_warm()
+            state = self._lowrank
+            self.x_train = jnp.concatenate([self.x_train, x_new], axis=0)
+            self.y_train = jnp.concatenate([self.y_train, y_new], axis=0)
+            if warm:
+                try:
+                    self._lowrank = lowrank.absorb(
+                        state,
+                        x_new,
+                        y_new,
+                        sign=1,
+                        n_streams=self.n_streams,
+                        backend=self.op_backend,
+                        update_dtype=self.update_dtype,
+                    )
+                    self._lowrank_key = self._cache_key()
+                except upd.CholeskyUpdateError:
+                    self.invalidate_cache()
+            else:
+                self.invalidate_cache()
+            if self.sliding_window is not None:
+                excess = self.y_train.shape[0] - self.sliding_window
+                if excess > 0:
+                    # no tile alignment needed: eviction is a rank-m downdate
+                    self.forget(min(excess, self.y_train.shape[0] - 1))
             return self
         warm = self.pipeline == "tiled" and self._cache_warm()
         state = self._posterior
@@ -225,6 +310,31 @@ class GaussianProcess:
         if not 0 <= k < n:
             raise ValueError(f"forget(k) needs 0 <= k < n = {n}; got {k}")
         if k == 0:
+            return self
+        if self.method == "lowrank":
+            # rank-m downdate of the inner system (absorb with sign=-1);
+            # works for any k — no tile alignment requirement
+            warm = self._lowrank_warm()
+            state = self._lowrank
+            x_old, y_old = self.x_train[:k], self.y_train[:k]
+            self.x_train = self.x_train[k:]
+            self.y_train = self.y_train[k:]
+            if warm:
+                try:
+                    self._lowrank = lowrank.absorb(
+                        state,
+                        x_old,
+                        y_old,
+                        sign=-1,
+                        n_streams=self.n_streams,
+                        backend=self.op_backend,
+                        update_dtype=self.update_dtype,
+                    )
+                    self._lowrank_key = self._cache_key()
+                except upd.CholeskyUpdateError:
+                    self.invalidate_cache()
+            else:
+                self.invalidate_cache()
             return self
         warm = self.pipeline == "tiled" and self._cache_warm()
         state = self._posterior
@@ -280,8 +390,20 @@ class GaussianProcess:
             dtype=self.dtype,
         )
 
+    def _predict_lowrank(self, x_test: jax.Array, full_cov: bool):
+        return lowrank.predict_from_lowrank_state(
+            self.lowrank_posterior(),
+            x_test,
+            full_cov=full_cov,
+            n_streams=self.n_streams,
+            backend=self.op_backend,
+            dtype=self.dtype,
+        )
+
     def predict(self, x_test: jax.Array) -> jax.Array:
         x_test = self._prep(x_test)
+        if self.method == "lowrank":
+            return self._predict_lowrank(x_test, full_cov=False)
         if self.pipeline == "monolithic":
             return pred.predict_monolithic(
                 self.x_train, self.y_train, x_test, self.params,
@@ -292,6 +414,8 @@ class GaussianProcess:
     def predict_full_cov(self, x_test: jax.Array) -> Tuple[jax.Array, jax.Array]:
         """The paper's *Predict with Full Covariance Matrix* operation."""
         x_test = self._prep(x_test)
+        if self.method == "lowrank":
+            return self._predict_lowrank(x_test, full_cov=True)
         if self.pipeline == "monolithic":
             return pred.predict_monolithic(
                 self.x_train,
@@ -321,6 +445,10 @@ class GaussianProcess:
         """
         from repro.core import mll
 
+        if self.method == "lowrank":
+            return lowrank.nlml_from_lowrank_state(
+                self.lowrank_posterior(), dtype=self.dtype
+            )
         if self.pipeline == "monolithic":
             return mll.negative_log_marginal_likelihood(
                 self.x_train, self.y_train, self.params,
@@ -349,7 +477,10 @@ class GaussianProcess:
         from repro.core import mll
 
         if method is None:
-            method = "tiled" if self.pipeline == "tiled" else "monolithic"
+            if self.method == "lowrank":
+                method = "lowrank"
+            else:
+                method = "tiled" if self.pipeline == "tiled" else "monolithic"
         new_params, _ = mll.optimize_hyperparameters(
             self.x_train,
             self.y_train,
@@ -363,6 +494,10 @@ class GaussianProcess:
             op_backend=self.op_backend,
             update_dtype=self.update_dtype,
             kernel=self.kernel,
+            m_inducing=self.m_inducing,
+            strategy=self.strategy,
+            inducing=self.inducing,
+            jitter=self.jitter,
         )
         self.params = new_params
         self.invalidate_cache()  # the factor belongs to the old hyperparameters
@@ -412,11 +547,25 @@ class GPBatch:
     # to the single-device path.
     mesh: Optional[object] = None
     kernel: Optional[object] = None  # covariance family (DESIGN.md §13)
+    # approximation tier (DESIGN.md §14): "lowrank" runs the whole fleet's
+    # Nyström builds/heads as ONE problem-batched program (B folded into the
+    # bulk-op launches, Plans shared with the single-GP lowrank tier).
+    method: str = "exact"
+    m_inducing: Optional[int] = None
+    strategy: str = "subset"
+    inducing: Optional[object] = None  # (m_inducing, D) shared or (B, m_inducing, D)
+    jitter: Optional[float] = None
 
     def __post_init__(self):
         self.kernel = km.resolve_kernel(self.kernel)
         if self.params is None:
             self.params = self.kernel.default_params()
+        if self.method not in ("exact", "lowrank"):
+            raise ValueError(
+                f"method must be 'exact' or 'lowrank', got {self.method!r}"
+            )
+        if self.method == "lowrank" and self.m_inducing is None:
+            raise ValueError("method='lowrank' requires m_inducing")
         x = jnp.asarray(self.x_train, self.dtype)
         if x.ndim == 2:  # (B, n) convenience for 1-D problems
             x = x[..., None]
@@ -435,6 +584,8 @@ class GPBatch:
         _validate_fleet_params(self.params, self.kernel, b, "GPBatch")
         self._posterior: Optional[pred.PosteriorState] = None
         self._posterior_key = None
+        self._lowrank: Optional[lowrank.LowRankState] = None
+        self._lowrank_key = None
         self._params_bytes = None  # (params object, host bytes) memo
 
     @property
@@ -463,6 +614,11 @@ class GPBatch:
             str(jnp.dtype(self.dtype)),
             self.batch_dispatch,
             self.mesh,
+            self.method,
+            self.m_inducing,
+            self.strategy,
+            None if self.jitter is None else float(self.jitter),
+            None if self.inducing is None else id(self.inducing),
         )
 
     def posterior(self) -> pred.PosteriorState:
@@ -502,9 +658,47 @@ class GPBatch:
             self._posterior_key = key
         return self._posterior
 
+    def _lowrank_inducing(self):
+        """Explicit inducing inputs normalized to stacked (B, m_inducing, D)."""
+        if self.inducing is None:
+            return None
+        ind = jnp.asarray(self.inducing, self.dtype)
+        if ind.ndim == 2:  # shared set, broadcast across the fleet
+            ind = jnp.broadcast_to(ind[None], (self.batch_size,) + ind.shape)
+        return ind
+
+    def lowrank_posterior(self) -> lowrank.LowRankState:
+        """Stacked Nyström states (leading B axis), cached across calls."""
+        key = self._cache_key()
+        if self._lowrank is None or self._lowrank_key != key:
+            self._lowrank = lowrank.lowrank_state(
+                self.x_train,
+                self.y_train,
+                self.params,
+                self.m_inducing,
+                self.tile_size,
+                strategy=self.strategy,
+                inducing=self._lowrank_inducing(),
+                jitter=lowrank.DEFAULT_JITTER if self.jitter is None
+                else float(self.jitter),
+                n_streams=self.n_streams,
+                backend=self.op_backend,
+                update_dtype=self.update_dtype,
+                dtype=self.dtype,
+                batch_dispatch=self.batch_dispatch,
+                kernel=self.kernel,
+            )
+            self._lowrank_key = key
+        return self._lowrank
+
+    def _lowrank_warm(self) -> bool:
+        return self._lowrank is not None and self._lowrank_key == self._cache_key()
+
     def invalidate_cache(self) -> None:
         self._posterior = None
         self._posterior_key = None
+        self._lowrank = None
+        self._lowrank_key = None
 
     # -- streaming updates (DESIGN.md §10) ----------------------------------
 
@@ -539,6 +733,29 @@ class GPBatch:
             )
         if x_new.shape[1] == 0:
             return self
+        if self.method == "lowrank":
+            warm = self._lowrank_warm()
+            state = self._lowrank
+            self.x_train = jnp.concatenate([self.x_train, x_new], axis=1)
+            self.y_train = jnp.concatenate([self.y_train, y_new], axis=1)
+            if warm:
+                try:
+                    self._lowrank = lowrank.absorb(
+                        state,
+                        x_new,
+                        y_new,
+                        sign=1,
+                        n_streams=self.n_streams,
+                        backend=self.op_backend,
+                        update_dtype=self.update_dtype,
+                        batch_dispatch=self.batch_dispatch,
+                    )
+                    self._lowrank_key = self._cache_key()
+                except upd.CholeskyUpdateError:
+                    self.invalidate_cache()
+            else:
+                self.invalidate_cache()
+            return self
         warm = self._cache_warm()
         state = self._posterior
         self.x_train = jnp.concatenate([self.x_train, x_new], axis=1)
@@ -570,6 +787,30 @@ class GPBatch:
             raise ValueError(f"forget(k) needs 0 <= k < n = {n}; got {k}")
         if k == 0:
             return self
+        if self.method == "lowrank":
+            warm = self._lowrank_warm()
+            state = self._lowrank
+            x_old, y_old = self.x_train[:, :k], self.y_train[:, :k]
+            self.x_train = self.x_train[:, k:]
+            self.y_train = self.y_train[:, k:]
+            if warm:
+                try:
+                    self._lowrank = lowrank.absorb(
+                        state,
+                        x_old,
+                        y_old,
+                        sign=-1,
+                        n_streams=self.n_streams,
+                        backend=self.op_backend,
+                        update_dtype=self.update_dtype,
+                        batch_dispatch=self.batch_dispatch,
+                    )
+                    self._lowrank_key = self._cache_key()
+                except upd.CholeskyUpdateError:
+                    self.invalidate_cache()
+            else:
+                self.invalidate_cache()
+            return self
         warm = self._cache_warm()
         state = self._posterior
         self.x_train = self.x_train[:, k:]
@@ -599,6 +840,16 @@ class GPBatch:
         """Cold: ONE problem-batched fused program (populates the posterior
         cache from its buffer env).  Warm: batched cross/mean tail off the
         cached stacked factor."""
+        if self.method == "lowrank":
+            return lowrank.predict_from_lowrank_state(
+                self.lowrank_posterior(),
+                x_test,
+                full_cov=full_cov,
+                n_streams=self.n_streams,
+                backend=self.op_backend,
+                dtype=self.dtype,
+                batch_dispatch=self.batch_dispatch,
+            )
         key = self._cache_key()
         if self._posterior is not None and self._posterior_key == key:
             return pred.predict_from_state_batched(
@@ -648,6 +899,10 @@ class GPBatch:
         """Per-problem NLML vector (B,) from the cached stacked posterior."""
         from repro.core import mll
 
+        if self.method == "lowrank":
+            return lowrank.nlml_from_lowrank_state(
+                self.lowrank_posterior(), dtype=self.dtype
+            )
         return mll.nlml_from_state(self.posterior(), self.y_train, dtype=self.dtype)
 
     def log_marginal_likelihood(self) -> jax.Array:
@@ -665,13 +920,17 @@ class GPBatch:
             steps=steps,
             lr=lr,
             dtype=self.dtype,
-            method="tiled",
+            method="lowrank" if self.method == "lowrank" else "tiled",
             tile_size=self.tile_size,
             n_streams=self.n_streams,
             op_backend=self.op_backend,
             update_dtype=self.update_dtype,
             batch_dispatch=self.batch_dispatch,
             kernel=self.kernel,
+            m_inducing=self.m_inducing,
+            strategy=self.strategy,
+            inducing=None if self.method != "lowrank" else self._lowrank_inducing(),
+            jitter=self.jitter,
         )
         self.params = new_params
         self.invalidate_cache()  # the factors belong to the old hyperparameters
@@ -714,7 +973,8 @@ class _Bucket:
     """One bucket of a :class:`GPFleet`: a ragged slice sharing a geometry."""
 
     idx: Tuple[int, ...]                       # fleet indices, bucket order
-    state: Optional[pred.PosteriorState]       # stacked ragged state (warm)
+    state: Optional[object]                    # stacked ragged state (warm):
+    #   PosteriorState (exact) or lowrank.LowRankState (method="lowrank")
     key: object                                # fleet cache key at build time
 
 
@@ -757,11 +1017,27 @@ class GPFleet:
     # per-bucket (fleet_spec), never to an error.
     mesh: Optional[object] = None
     kernel: Optional[object] = None  # covariance family (DESIGN.md §13)
+    # approximation tier (DESIGN.md §14).  Under "lowrank" every bucket's
+    # cached state is mu-sized (inducing chunks + m×m inner factors — nothing
+    # n-sized), so bucket *migration* needs no factor re-embedding at all:
+    # transfer is a pure row gather of the stacked state, then a ragged
+    # absorb of the arrivals.
+    method: str = "exact"
+    m_inducing: Optional[int] = None
+    strategy: str = "subset"
+    inducing: Optional[object] = None  # (m_inducing, D) shared across the fleet
+    jitter: Optional[float] = None
 
     def __post_init__(self):
         self.kernel = km.resolve_kernel(self.kernel)
         if self.params is None:
             self.params = self.kernel.default_params()
+        if self.method not in ("exact", "lowrank"):
+            raise ValueError(
+                f"method must be 'exact' or 'lowrank', got {self.method!r}"
+            )
+        if self.method == "lowrank" and self.m_inducing is None:
+            raise ValueError("method='lowrank' requires m_inducing")
         xs, ys = [], []
         if len(self.x_train) != len(self.y_train) or not len(self.x_train):
             raise ValueError(
@@ -827,6 +1103,11 @@ class GPFleet:
             self.boundaries if not isinstance(self.boundaries, (list, tuple))
             else tuple(self.boundaries),
             self.mesh,
+            self.method,
+            self.m_inducing,
+            self.strategy,
+            None if self.jitter is None else float(self.jitter),
+            None if self.inducing is None else id(self.inducing),
         )
 
     def invalidate_cache(self) -> None:
@@ -853,7 +1134,7 @@ class GPFleet:
         nv = jnp.asarray([self._ys[i].shape[0] for i in idx], jnp.int32)
         return xs, ys, nv
 
-    def _bucket_state(self, cap_tiles, idx) -> pred.PosteriorState:
+    def _bucket_state(self, cap_tiles, idx):
         """Warm cached stacked state for one bucket, (re)built cold on miss."""
         key = self._cache_key()
         rec = self._buckets.get(cap_tiles)
@@ -862,6 +1143,26 @@ class GPFleet:
             return rec.state
         xs, ys, nv = self._stack(idx, cap_tiles)
         bp = self._bucket_params(idx)
+        if self.method == "lowrank":
+            ind = self.inducing
+            if ind is not None:
+                ind = jnp.asarray(ind, self.dtype)
+                if ind.ndim == 2:  # one shared set, broadcast over the bucket
+                    ind = jnp.broadcast_to(ind[None], (len(idx),) + ind.shape)
+                else:
+                    ind = ind[jnp.asarray(idx)]
+            state = lowrank.lowrank_state(
+                xs, ys, bp, self.m_inducing, self.tile_size,
+                strategy=self.strategy, inducing=ind,
+                jitter=lowrank.DEFAULT_JITTER if self.jitter is None
+                else float(self.jitter),
+                n_streams=self.n_streams, backend=self.op_backend,
+                update_dtype=self.update_dtype, dtype=self.dtype,
+                batch_dispatch=self.batch_dispatch, n_valid=nv,
+                kernel=self.kernel,
+            )
+            self._buckets[cap_tiles] = _Bucket(tuple(idx), state, key)
+            return state
         env, yc = pred.nlml_program_env(
             xs, ys, bp, self.tile_size,
             n_streams=self.n_streams, backend=self.op_backend,
@@ -904,10 +1205,17 @@ class GPFleet:
         for cap, idx in self.bucket_assignment().items():
             state = self._bucket_state(cap, idx)
             xt = jnp.broadcast_to(x_test[None], (len(idx),) + x_test.shape)
-            out = pred.predict_from_state_batched(
-                state, xt, full_cov=full_cov,
-                n_streams=self.n_streams, dtype=self.dtype, mesh=self.mesh,
-            )
+            if self.method == "lowrank":
+                out = lowrank.predict_from_lowrank_state(
+                    state, xt, full_cov=full_cov, n_streams=self.n_streams,
+                    backend=self.op_backend, dtype=self.dtype,
+                    batch_dispatch=self.batch_dispatch,
+                )
+            else:
+                out = pred.predict_from_state_batched(
+                    state, xt, full_cov=full_cov,
+                    n_streams=self.n_streams, dtype=self.dtype, mesh=self.mesh,
+                )
             gather = jnp.asarray(idx)
             if full_cov:
                 mean = mean.at[gather].set(out[0])
@@ -966,11 +1274,19 @@ class GPFleet:
                 [jnp.pad(tests[i], ((0, nt_max - tests[i].shape[0]), (0, 0)))
                  for i in idx]
             )
-            res = pred.predict_from_state_batched(
-                state, xt, full_cov=full_cov, n_streams=self.n_streams,
-                dtype=self.dtype, nt_valid=jnp.asarray(nts, jnp.int32),
-                mesh=self.mesh,
-            )
+            if self.method == "lowrank":
+                res = lowrank.predict_from_lowrank_state(
+                    state, xt, full_cov=full_cov, n_streams=self.n_streams,
+                    backend=self.op_backend, dtype=self.dtype,
+                    nt_valid=jnp.asarray(nts, jnp.int32),
+                    batch_dispatch=self.batch_dispatch,
+                )
+            else:
+                res = pred.predict_from_state_batched(
+                    state, xt, full_cov=full_cov, n_streams=self.n_streams,
+                    dtype=self.dtype, nt_valid=jnp.asarray(nts, jnp.int32),
+                    mesh=self.mesh,
+                )
             for pos, i in enumerate(idx):
                 if full_cov:
                     out[i] = (
@@ -991,8 +1307,11 @@ class GPFleet:
         out = jnp.zeros((b,), self.dtype)
         for cap, idx in self.bucket_assignment().items():
             state = self._bucket_state(cap, idx)
-            _, ys, nv = self._stack(idx, cap)
-            vals = mll.nlml_from_state(state, ys, dtype=self.dtype, n_valid=nv)
+            if self.method == "lowrank":
+                vals = lowrank.nlml_from_lowrank_state(state, dtype=self.dtype)
+            else:
+                _, ys, nv = self._stack(idx, cap)
+                vals = mll.nlml_from_state(state, ys, dtype=self.dtype, n_valid=nv)
             out = out.at[jnp.asarray(idx)].set(vals.astype(self.dtype))
         return out
 
@@ -1030,6 +1349,8 @@ class GPFleet:
         counts = np.asarray([y.shape[0] for y in yn], np.int64)
         if not counts.any():
             return self
+        if self.method == "lowrank":
+            return self._update_lowrank(xn, yn, counts)
 
         old_assign = self.bucket_assignment()
         old_key = self._cache_key()
@@ -1103,6 +1424,99 @@ class GPFleet:
             n=cap * m, m=m, params=self._bucket_params(idx),
             beta=jnp.stack(be), y_chunks=jnp.stack(yc),
             n_valid=jnp.asarray(old_ns[np.asarray(idx)], jnp.int32),
+            kernel=self.kernel,
+        )
+
+    def _update_lowrank(self, xn, yn, counts) -> "GPFleet":
+        """Ragged absorption through the rank-m inner systems.
+
+        The low-rank bucket state is mu-sized (nothing n-sized lives in it),
+        so a problem crossing a bucket boundary needs NO factor re-embedding:
+        the destination state is a pure row gather of the warm source rows
+        (``_gather_lowrank_rows``), followed by one ragged ``lowrank.absorb``
+        per destination bucket.  A cold or numerically failed bucket rebuilds
+        lazily on the next predict/nlml, same as the exact tier."""
+        from repro.core import update as upd
+
+        b = self.batch_size
+        old_assign = self.bucket_assignment()
+        old_key = self._cache_key()
+        # per-problem warm source rows: i -> (state, row position)
+        src: Dict[int, Tuple[object, int]] = {}
+        for cap, idx in old_assign.items():
+            rec = self._buckets.get(cap)
+            if rec is not None and rec.key == old_key \
+                    and rec.idx == tuple(idx) and rec.state is not None:
+                for pos, i in enumerate(idx):
+                    src[i] = (rec.state, pos)
+        for i in range(b):
+            if counts[i]:
+                self._xs[i] = jnp.concatenate([self._xs[i], xn[i]])
+                self._ys[i] = jnp.concatenate([self._ys[i], yn[i]])
+        self._version += 1
+        new_key = self._cache_key()
+        new_buckets: Dict[int, _Bucket] = {}
+        for cap, idx in self.bucket_assignment().items():
+            state = None
+            if all(i in src for i in idx):
+                try:
+                    state = self._gather_lowrank_rows(cap, idx, src)
+                    cnt = counts[np.asarray(idx)]
+                    if cnt.any():
+                        b_max = int(cnt.max())
+                        xa = jnp.stack(
+                            [jnp.pad(xn[i], ((0, b_max - xn[i].shape[0]), (0, 0)))
+                             for i in idx]
+                        )
+                        ya = jnp.stack(
+                            [jnp.pad(yn[i], (0, b_max - yn[i].shape[0]))
+                             for i in idx]
+                        )
+                        state = lowrank.absorb(
+                            state, xa, ya, cnt, sign=1,
+                            n_streams=self.n_streams, backend=self.op_backend,
+                            update_dtype=self.update_dtype,
+                            batch_dispatch=self.batch_dispatch,
+                        )
+                except upd.CholeskyUpdateError:
+                    state = None
+            new_buckets[cap] = _Bucket(tuple(idx), state, new_key)
+        self._buckets = new_buckets
+        return self
+
+    def _gather_lowrank_rows(self, cap, idx, src) -> lowrank.LowRankState:
+        """Destination bucket's pre-absorb state from warm source rows — a
+        gather, zero FLOPs (every per-problem piece is mu-sized)."""
+        rows = [src[i] for i in idx]
+
+        def g(field):
+            return jnp.stack([getattr(st, field)[pos] for st, pos in rows])
+
+        mv = jnp.asarray(
+            [int(st.mu_valid[pos]) if st.mu_valid is not None
+             else st.m_inducing for st, pos in rows],
+            jnp.int32,
+        )
+        nv = jnp.asarray(
+            [int(st.n_valid[pos]) if st.n_valid is not None else st.n
+             for st, pos in rows],
+            jnp.int32,
+        )
+        return lowrank.LowRankState(
+            u_chunks=g("u_chunks"),
+            luu_packed=g("luu_packed"),
+            b_packed=g("b_packed"),
+            lb_packed=g("lb_packed"),
+            c_chunks=g("c_chunks"),
+            gamma=g("gamma"),
+            yty=g("yty"),
+            n=cap * self.tile_size,
+            m=self.tile_size,
+            m_inducing=self.m_inducing,
+            params=self._bucket_params(idx),
+            jitter=rows[0][0].jitter,
+            mu_valid=mv,
+            n_valid=nv,
             kernel=self.kernel,
         )
 

@@ -179,6 +179,20 @@ class Kernel:
         """Per-leaf base rank of the params pytree (before any (B,) batching)."""
         return jax.tree_util.tree_map(lambda _: 0, params)
 
+    def kfree_vjp(self, params, xa, xb, g):
+        """Hand-derived VJP of ``sum(g * kfree(params, xa, xb))``.
+
+        Returns ``(g_params, g_xa, g_xb)`` where ``g_params`` matches the
+        params pytree (the ``noise`` leaf is zero — kfree is noise-free; the
+        caller folds its own noise cotangent in) and ``g_xa``/``g_xb`` match
+        the input blocks.  Only kernels with ``analytic_vjp = True`` provide
+        this; everything else trains through autodiff of the fused program.
+        """
+        raise NotImplementedError(
+            f"{self.name} has no hand-derived kfree VJP (analytic_vjp is "
+            f"{self.analytic_vjp})"
+        )
+
     def kernel_id(self) -> str:
         return self.name
 
@@ -195,6 +209,18 @@ class SquaredExponential(Kernel):
 
     def kfree(self, params, xa, xb):
         return params.vertical * jnp.exp(-0.5 / params.lengthscale * sq_dists(xa, xb))
+
+    def kfree_vjp(self, params, xa, xb, g):
+        l, v = params.lengthscale, params.vertical
+        d2 = sq_dists(xa, xb)
+        gk = g * (v * jnp.exp(-0.5 / l * d2))
+        g_l = jnp.sum(gk * d2) / (2.0 * l * l)
+        g_v = jnp.sum(gk) / v
+        # dk/d(d2) = -k / (2 l); d(d2)/dxa = 2 (xa - xb) rowwise
+        w = -gk / (2.0 * l)
+        g_xa = 2.0 * (jnp.sum(w, axis=1, keepdims=True) * xa - w @ xb)
+        g_xb = 2.0 * (jnp.sum(w, axis=0)[:, None] * xb - w.T @ xa)
+        return SEKernelParams(g_l, g_v, jnp.zeros_like(params.noise)), g_xa, g_xb
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,6 +256,7 @@ class Matern52(Kernel):
     """Matérn nu=5/2: k = v * (1 + sqrt(5) r + 5 r^2 / 3) exp(-sqrt(5) r)."""
 
     name: ClassVar[str] = "matern52"
+    analytic_vjp: ClassVar[bool] = True
 
     def default_params(self) -> SEKernelParams:
         return SEKernelParams.paper_defaults()
@@ -237,6 +264,20 @@ class Matern52(Kernel):
     def kfree(self, params, xa, xb):
         s = math.sqrt(5.0) * _safe_sqrt(sq_dists(xa, xb) / params.lengthscale)
         return params.vertical * (1.0 + s + s * s / 3.0) * jnp.exp(-s)
+
+    def kfree_vjp(self, params, xa, xb, g):
+        l, v = params.lengthscale, params.vertical
+        s = math.sqrt(5.0) * _safe_sqrt(sq_dists(xa, xb) / l)
+        e = jnp.exp(-s)
+        g_v = jnp.sum(g * (1.0 + s + s * s / 3.0) * e)
+        # dk/dl = v s^2 (1 + s) e^{-s} / (6 l)   (via ds/dl = -s / (2 l))
+        g_l = jnp.sum(g * s * s * (1.0 + s) * e) * v / (6.0 * l)
+        # dk/d(d2) = -(5 v / (6 l)) (1 + s) e^{-s} — the 1/s of ds/d(d2)
+        # cancels against dk/ds ∝ s, so this is finite at d2 == 0.
+        w = g * (-(5.0 * v / (6.0 * l)) * (1.0 + s) * e)
+        g_xa = 2.0 * (jnp.sum(w, axis=1, keepdims=True) * xa - w @ xb)
+        g_xb = 2.0 * (jnp.sum(w, axis=0)[:, None] * xb - w.T @ xa)
+        return SEKernelParams(g_l, g_v, jnp.zeros_like(params.noise)), g_xa, g_xb
 
 
 @dataclasses.dataclass(frozen=True)

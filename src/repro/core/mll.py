@@ -38,6 +38,7 @@ evaluates B stacked GPs' NLMLs through ONE problem-batched fused program
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 from typing import Tuple
@@ -186,28 +187,28 @@ def _nlml_cv_fwd(cfg, x, y, params):
     return val, (x, y, params, lpacked, alpha_c)
 
 
-def _nlml_dense_grads(xd, alpha, kinv, l, v):
+def _nlml_dense_grads(kernel, params, xd, alpha, kinv):
     """O(n^2) dense contraction of S = 0.5(K^{-1} - aa^T) with dK/dtheta.
 
-    One problem: xd (n, D), alpha (n,), kinv (n, n), scalar l / v.  Returns
-    (g_x, g_y, g_l, g_v, g_noise).  The batched backward pass vmaps this
-    over the problem axis.
+    One problem: xd (n, D), alpha (n,), kinv (n, n), scalar params leaves.
+    Returns (g_x, g_y, g_params) with g_params matching the params pytree:
+    the kernel's hand-derived ``kfree_vjp`` supplies every noise-free
+    derivative (and the x cotangents), and dK/dsigma2 = I adds tr(S) onto
+    the noise leaf.  The batched backward pass vmaps this over the problem
+    axis.
     """
     s = 0.5 * (kinv - jnp.outer(alpha, alpha))
-    d2 = km.sq_dists(xd, xd)
-    kse = v * jnp.exp(-0.5 / l * d2)
-    g = s * kse
-    g_l = jnp.sum(g * d2) / (2.0 * l * l)
-    g_v = jnp.sum(g) / v
-    g_noise = jnp.trace(s)
-    g_x = -(2.0 / l) * (jnp.sum(g, axis=1, keepdims=True) * xd - g @ xd)
-    return g_x, alpha, g_l, g_v, g_noise
+    g_params, g_xa, g_xb = kernel.kfree_vjp(params, xd, xd, s)
+    g_params = dataclasses.replace(
+        g_params, noise=g_params.noise + jnp.trace(s)
+    )
+    return g_xa + g_xb, alpha, g_params
 
 
 def _nlml_cv_bwd(cfg, res, ct):
-    # SE-only (kernel.analytic_vjp): nlml_tiled routes every other kernel
-    # family to vjp="autodiff" before this rule can be installed.
-    _, n_streams, _, _, dtype_name, _, _ = cfg
+    # analytic-vjp kernels only (SE, Matérn 5/2): nlml_tiled routes every
+    # other family to vjp="autodiff" before this rule can be installed.
+    _, n_streams, _, _, dtype_name, _, kernel = cfg
     dtype = jnp.dtype(dtype_name)
     x, y, params, lpacked, alpha_c = res
     n = y.shape[0]
@@ -216,18 +217,17 @@ def _nlml_cv_bwd(cfg, res, ct):
     kinv = tiling.untile_dense(kinv_t)[:n, :n]
     alpha = alpha_c.reshape(-1)[:n]
     # O(n^2): contract S with the analytic kernel derivatives.
-    g_x, g_y, g_l, g_v, g_noise = _nlml_dense_grads(
-        x.astype(dtype),
-        alpha,
-        kinv,
-        jnp.asarray(params.lengthscale, dtype),
-        jnp.asarray(params.vertical, dtype),
+    params_d = jax.tree_util.tree_map(
+        lambda p: jnp.asarray(p, dtype), params
+    )
+    g_x, g_y, g_params = _nlml_dense_grads(
+        kernel, params_d, x.astype(dtype), alpha, kinv
     )
     ct = jnp.asarray(ct, dtype)
     return (
         ct * g_x,
         ct * g_y,
-        km.SEKernelParams(ct * g_l, ct * g_v, ct * g_noise),
+        jax.tree_util.tree_map(lambda g: ct * g, g_params),
     )
 
 
@@ -256,7 +256,7 @@ def _nlml_batched_cv_fwd(cfg, x, y, params):
 
 
 def _nlml_batched_cv_bwd(cfg, res, ct):
-    _, n_streams, _, _, dtype_name, _, _ = cfg
+    _, n_streams, _, _, dtype_name, _, kernel = cfg
     dtype = jnp.dtype(dtype_name)
     x, y, params, lpacked, alpha_c = res
     b, n = y.shape
@@ -264,16 +264,18 @@ def _nlml_batched_cv_bwd(cfg, res, ct):
     kinv_t = triangular.kinv_tiles_from_factor(lpacked, n_streams=n_streams)
     kinv = tiling.untile_dense(kinv_t)[:, :n, :n]
     alpha = alpha_c.reshape(b, -1)[:, :n]
-    l = jnp.broadcast_to(jnp.asarray(params.lengthscale, dtype), (b,))
-    v = jnp.broadcast_to(jnp.asarray(params.vertical, dtype), (b,))
-    g_x, g_y, g_l, g_v, g_noise = jax.vmap(_nlml_dense_grads)(
-        x.astype(dtype), alpha, kinv, l, v
+    # per-problem leaves (B,) — callers broadcast shared scalars up front
+    params_b = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(jnp.asarray(p, dtype), (b,)), params
     )
+    g_x, g_y, g_params = jax.vmap(
+        lambda p, xd, a, ki: _nlml_dense_grads(kernel, p, xd, a, ki)
+    )(params_b, x.astype(dtype), alpha, kinv)
     ct = jnp.asarray(ct, dtype)  # (B,) — one cotangent per problem loss
     return (
         ct[:, None, None] * g_x,
         ct[:, None] * g_y,
-        km.SEKernelParams(ct * g_l, ct * g_v, ct * g_noise),
+        jax.tree_util.tree_map(lambda g: ct * g, g_params),
     )
 
 
@@ -349,9 +351,10 @@ def nlml_tiled(
     Pallas tile ops via their reference VJPs) — kept as the correctness
     baseline the custom rule is tested against.
 
-    The blocked reverse-mode rule contracts hand-derived SE kernel
-    derivatives, so only kernels with ``analytic_vjp`` (SE) use it; any
-    other registered ``kernel`` silently falls back to ``vjp="autodiff"``.
+    The blocked reverse-mode rule contracts hand-derived kernel
+    derivatives, so only kernels with ``analytic_vjp`` (SE, Matérn-5/2)
+    use it; any other registered ``kernel`` silently falls back to
+    ``vjp="autodiff"``.
     """
     x = jnp.asarray(x, dtype)
     if x.ndim == 1:
@@ -369,6 +372,212 @@ def nlml_tiled(
         val, _ = _nlml_forward(cfg, x, y, params)
         return val
     raise ValueError(f"vjp must be 'custom' or 'autodiff', got {vjp!r}")
+
+
+# ---------------------------------------------------------------------------
+# Low-rank (Nyström / DTC) NLML — O(n m^2) per evaluation (DESIGN.md §14).
+#
+# Forward: the whitened inner system from repro.core.lowrank (K_un through
+# the CROSS family, c = K_un y through LRGEMM, chol(K_uu)/chol(B) through
+# the fused POTRF/TRSM/SYRK plans).  Backward (vjp="custom"): the blocked
+# reverse-mode rule below — all cotangents contract against *dense* m×m /
+# m×n quantities, so the backward pass is O(n m^2) like the forward.  With
+#   A = K_uu + s^-2 K_un K_nu,   b = A^{-1} K_un y,
+# the NLML derivatives are
+#   G_A    = 0.5 A^{-1} + 0.5 s^-4 b b^T
+#   G_Kuu  = G_A - 0.5 K_uu^{-1}
+#   G_Kun  = 2 s^-2 G_A K_un - s^-4 b y^T
+#   g_s2   = -0.5 s^-4 y^T y + s^-6 c^T b + 0.5 n s^-2
+#            - s^-4 tr(G_A K_un K_nu)
+#   g_y    = s^-2 (y - s^-2 K_nu b)
+# and the kernel-level cotangents route through kernel.kfree_vjp exactly
+# like the exact tier's rule.  The inducing inputs are stop_gradient'ed in
+# the forward builder, so their cotangent is zero by construction.
+# ---------------------------------------------------------------------------
+
+
+def _dense_from_packed(packed):
+    """Packed lower tiles (T, m, m) -> dense lower-triangular (M*m, M*m)."""
+    t, m, _ = packed.shape[-3:]
+    m_tiles = int((math.isqrt(8 * t + 1) - 1) // 2)
+    rows, cols = tiling._packed_coords(m_tiles)
+    grid = jnp.zeros((m_tiles, m_tiles, m, m), packed.dtype)
+    grid = grid.at[rows, cols].set(packed)
+    return tiling.untile_dense(grid)
+
+
+def _lr_state(cfg, x, y, u, params):
+    from repro.core import lowrank
+
+    (mu, tile_size, jitter, n_streams, backend, update_dtype, dtype_name,
+     kernel) = cfg
+    return lowrank.lowrank_state(
+        x, y, params, mu, tile_size,
+        inducing=u, jitter=jitter, n_streams=n_streams, backend=backend,
+        update_dtype=update_dtype, dtype=jnp.dtype(dtype_name), kernel=kernel,
+    )
+
+
+def _nlml_lr_value(cfg, x, y, u, params):
+    from repro.core import lowrank
+
+    state = _lr_state(cfg, x, y, u, params)
+    return lowrank.nlml_from_lowrank_state(state), state
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _nlml_lr_cv(cfg, x, y, u, params):
+    val, _ = _nlml_lr_value(cfg, x, y, u, params)
+    return val
+
+
+def _nlml_lr_fwd(cfg, x, y, u, params):
+    val, state = _nlml_lr_value(cfg, x, y, u, params)
+    return val, (x, y, u, params, state.luu_packed, state.lb_packed, state.gamma)
+
+
+def _nlml_lr_bwd(cfg, res, ct):
+    mu, _, _, _, _, _, dtype_name, kernel = cfg
+    dtype = jnp.dtype(dtype_name)
+    x, y, u, params, luu_packed, lb_packed, gamma = res
+    n = y.shape[0]
+    params_d = jax.tree_util.tree_map(lambda p: jnp.asarray(p, dtype), params)
+    xd, yd, ud = x.astype(dtype), y.astype(dtype), u.astype(dtype)
+    # O(m^3) dense sandwich for A^{-1} / K_uu^{-1} from the saved factors
+    luu_d = _dense_from_packed(luu_packed)[:mu, :mu]
+    lb_d = _dense_from_packed(lb_packed)[:mu, :mu]
+    eye = jnp.eye(mu, dtype=dtype)
+    linv = jax.scipy.linalg.solve_triangular(luu_d, eye, lower=True)
+    t = jax.scipy.linalg.solve_triangular(lb_d, linv, lower=True)
+    ainv = t.T @ t
+    kuuinv = linv.T @ linv
+    kun = kernel.kfree(params_d, ud, xd)  # (m, n)
+    c = kun @ yd
+    b = gamma.reshape(-1)[:mu]  # A^{-1} c, solved stably in the forward
+    inv = 1.0 / jnp.asarray(kernel.noise(params_d))
+    ga = 0.5 * ainv + 0.5 * inv * inv * jnp.outer(b, b)
+    g_kuu = ga - 0.5 * kuuinv
+    ga_kun = ga @ kun
+    g_kun = 2.0 * inv * ga_kun - inv * inv * jnp.outer(b, yd)
+    g_noise = (
+        -0.5 * inv * inv * jnp.sum(yd * yd)
+        + inv * inv * inv * jnp.dot(c, b)
+        + 0.5 * n * inv
+        - inv * inv * jnp.sum(ga_kun * kun)
+    )
+    g_y = inv * yd - inv * inv * (kun.T @ b)
+    gp_uu, _, _ = kernel.kfree_vjp(params_d, ud, ud, g_kuu)
+    gp_un, _, g_x = kernel.kfree_vjp(params_d, ud, xd, g_kun)
+    g_params = jax.tree_util.tree_map(jnp.add, gp_uu, gp_un)
+    g_params = dataclasses.replace(
+        g_params, noise=g_params.noise + g_noise
+    )
+    ct = jnp.asarray(ct, dtype)
+    return (
+        ct * g_x,
+        ct * g_y,
+        jnp.zeros_like(u),  # inducing inputs are stop_gradient'ed
+        jax.tree_util.tree_map(lambda g: ct * g, g_params),
+    )
+
+
+_nlml_lr_cv.defvjp(_nlml_lr_fwd, _nlml_lr_bwd)
+
+
+def nlml_lowrank(
+    x: jax.Array,
+    y: jax.Array,
+    params,
+    *,
+    m_inducing: int,
+    tile_size: int = 256,
+    strategy: str = "subset",
+    inducing=None,
+    jitter=None,
+    n_streams=None,
+    op_backend: str = "jnp",
+    update_dtype=None,
+    dtype=jnp.float32,
+    vjp: str = "custom",
+    kernel=None,
+) -> jax.Array:
+    """Nyström low-rank NLML — O(n m^2), differentiable (DESIGN.md §14).
+
+    Same contract as :func:`nlml_tiled` but through the low-rank tier:
+    ``vjp="custom"`` installs the blocked O(n m^2) reverse-mode rule above
+    (analytic-vjp kernels only — others fall back to autodiff through the
+    builder, which works on both backends via the tile ops' reference
+    VJPs).  The inducing set is selected once per call from the *primal*
+    inputs and carries no gradient.
+    """
+    from repro.core import lowrank
+
+    x = jnp.asarray(x, dtype)
+    if x.ndim == 1:
+        x = x[:, None]
+    y = jnp.asarray(y, dtype).reshape(-1)
+    kernel = km.resolve_kernel(kernel)
+    jitter = lowrank.DEFAULT_JITTER if jitter is None else float(jitter)
+    u, _ = lowrank.select_inducing(
+        x, m_inducing, strategy=strategy, inducing=inducing
+    )
+    cfg = (
+        int(m_inducing), int(tile_size), jitter, n_streams, op_backend,
+        update_dtype, jnp.dtype(dtype).name, kernel,
+    )
+    if vjp == "custom" and not kernel.analytic_vjp:
+        vjp = "autodiff"
+    if vjp == "custom":
+        return _nlml_lr_cv(cfg, x, y, u, params)
+    if vjp == "autodiff":
+        val, _ = _nlml_lr_value(cfg, x, y, u, params)
+        return val
+    raise ValueError(f"vjp must be 'custom' or 'autodiff', got {vjp!r}")
+
+
+def nlml_lowrank_batched(
+    x: jax.Array,
+    y: jax.Array,
+    params,
+    *,
+    m_inducing: int,
+    tile_size: int = 256,
+    strategy: str = "subset",
+    inducing=None,
+    jitter=None,
+    n_streams=None,
+    op_backend: str = "jnp",
+    update_dtype=None,
+    dtype=jnp.float32,
+    batch_dispatch: str = "flat",
+    n_valid=None,
+    kernel=None,
+) -> jax.Array:
+    """Per-problem low-rank NLML vector (B,) in one batched build.
+
+    Differentiates through the builder (autodiff; the custom rule is
+    single-problem).  Hyperparameter leaves scalar or (B,) as usual.
+    """
+    from repro.core import lowrank
+
+    x = jnp.asarray(x, dtype)
+    if x.ndim == 2:
+        x = x[..., None]
+    y = jnp.asarray(y, dtype)
+    if x.ndim != 3 or y.ndim != 2 or x.shape[:2] != y.shape:
+        raise ValueError(
+            f"batched NLML needs x (B, n, D) and y (B, n); got {x.shape}, {y.shape}"
+        )
+    kernel = km.resolve_kernel(kernel)
+    state = lowrank.lowrank_state(
+        x, y, params, m_inducing, tile_size,
+        strategy=strategy, inducing=inducing,
+        jitter=lowrank.DEFAULT_JITTER if jitter is None else float(jitter),
+        n_streams=n_streams, backend=op_backend, update_dtype=update_dtype,
+        dtype=dtype, batch_dispatch=batch_dispatch, n_valid=n_valid,
+        kernel=kernel,
+    )
+    return lowrank.nlml_from_lowrank_state(state, dtype=dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -463,8 +672,12 @@ def nlml_loss_fn(
     update_dtype=None,
     vjp: str = "custom",
     kernel=None,
+    m_inducing=None,
+    strategy: str = "subset",
+    inducing=None,
+    jitter=None,
 ):
-    """loss(raw) over unconstrained hyperparameters, for either NLML path."""
+    """loss(raw) over unconstrained hyperparameters, for any NLML path."""
     kernel = km.resolve_kernel(kernel)
     _, unpack = _raw_codec(kernel)
     if method == "monolithic":
@@ -484,7 +697,28 @@ def nlml_loss_fn(
             vjp=vjp,
             kernel=kernel,
         )
-    raise ValueError(f"method must be 'monolithic' or 'tiled', got {method!r}")
+    if method == "lowrank":
+        if m_inducing is None:
+            raise ValueError("method='lowrank' needs m_inducing")
+        return lambda raw: nlml_lowrank(
+            x,
+            y,
+            unpack(raw),
+            m_inducing=m_inducing,
+            tile_size=tile_size,
+            strategy=strategy,
+            inducing=inducing,
+            jitter=jitter,
+            n_streams=n_streams,
+            op_backend=op_backend,
+            update_dtype=update_dtype,
+            dtype=dtype,
+            vjp=vjp,
+            kernel=kernel,
+        )
+    raise ValueError(
+        f"method must be 'monolithic', 'tiled' or 'lowrank', got {method!r}"
+    )
 
 
 def _adam_scan_impl(vg, steps: int, lr: float):
@@ -580,12 +814,18 @@ def optimize_hyperparameters(
     update_dtype=None,
     vjp: str = "custom",
     kernel=None,
+    m_inducing=None,
+    strategy: str = "subset",
+    inducing=None,
+    jitter=None,
 ) -> Tuple:
     """Adam on the NLML in unconstrained space.  Returns (params, loss curve).
 
     ``method="monolithic"`` differentiates the dense reference NLML;
     ``method="tiled"`` trains through the tiled fused program
-    (:func:`nlml_tiled` — no monolithic Cholesky anywhere in the loop).
+    (:func:`nlml_tiled` — no monolithic Cholesky anywhere in the loop);
+    ``method="lowrank"`` trains the O(n m^2) Nyström NLML
+    (:func:`nlml_lowrank`, requires ``m_inducing``).
     Either way the optimizer is one jitted ``lax.scan`` (:func:`adam_scan`).
     Any registered ``kernel`` trains: ``init`` is that kernel's params
     pytree, optimized leaf-by-leaf through softplus space (SE keeps its
@@ -608,6 +848,10 @@ def optimize_hyperparameters(
         update_dtype=update_dtype,
         vjp=vjp,
         kernel=kernel,
+        m_inducing=m_inducing,
+        strategy=strategy,
+        inducing=inducing,
+        jitter=jitter,
     )
     raw, losses = adam_scan(loss, steps, lr)(pack(init, dtype=dtype))
     return unpack(raw), losses
@@ -629,6 +873,11 @@ def optimize_hyperparameters_batched(
     vjp: str = "custom",
     batch_dispatch: str = "flat",
     kernel=None,
+    m_inducing=None,
+    strategy: str = "subset",
+    inducing=None,
+    jitter=None,
+    n_valid=None,
 ) -> Tuple:
     """Train B GPs' hyperparameters in ONE jitted Adam scan (DESIGN.md §9).
 
@@ -637,7 +886,9 @@ def optimize_hyperparameters_batched(
     (steps, B)).  ``method="tiled"`` (default) evaluates all B NLMLs through
     one problem-batched fused program per optimizer step;
     ``method="monolithic"`` vmaps the dense reference NLML — the
-    equivalence baseline.
+    equivalence baseline; ``method="lowrank"`` evaluates the Nyström NLML
+    (:func:`nlml_lowrank_batched`, requires ``m_inducing``; trains by
+    autodiff through the builder).
     """
     x = jnp.asarray(x, dtype)
     if x.ndim == 2:
@@ -666,6 +917,26 @@ def optimize_hyperparameters_batched(
             batch_dispatch=batch_dispatch,
             kernel=kernel,
         )
+    elif method == "lowrank":
+        if m_inducing is None:
+            raise ValueError("method='lowrank' needs m_inducing")
+        loss = lambda raw: nlml_lowrank_batched(
+            x,
+            y,
+            unpack(raw),
+            m_inducing=m_inducing,
+            tile_size=tile_size,
+            strategy=strategy,
+            inducing=inducing,
+            jitter=jitter,
+            n_streams=n_streams,
+            op_backend=op_backend,
+            update_dtype=update_dtype,
+            dtype=dtype,
+            batch_dispatch=batch_dispatch,
+            n_valid=n_valid,
+            kernel=kernel,
+        )
     elif method == "monolithic":
         mono = jax.vmap(
             lambda x1, y1, raw1: negative_log_marginal_likelihood(
@@ -675,6 +946,8 @@ def optimize_hyperparameters_batched(
         )
         loss = lambda raw: mono(x, y, raw)
     else:
-        raise ValueError(f"method must be 'monolithic' or 'tiled', got {method!r}")
+        raise ValueError(
+            f"method must be 'monolithic', 'tiled' or 'lowrank', got {method!r}"
+        )
     raw, losses = adam_scan_batched(loss, steps, lr)(pack(init, dtype=dtype))
     return unpack(raw), losses

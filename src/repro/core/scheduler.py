@@ -99,6 +99,12 @@ UPREP = "uprep"          # column head: L'(j,j) + the X/Y/C auxiliaries
 UPROW = "uprow"          # L'(i,j) = L(i,j) X_j^T + s W_i Y_j^T
 UCARRY = "ucarry"        # W_i <- (W_i - L'(i,j) Y_j) C_j^{-T}
 
+# Low-rank (Nyström) tier op (DESIGN.md §14): the n-side contraction of the
+# inducing system.  One tile task per (inducing row p, training column j) of
+# the K_un grid — every task is independent (the n axis is embarrassingly
+# parallel), so the whole family is a single bulk launch in the executor.
+LRGEMM = "lrgemm"        # c_p += K_un[p, j] @ y_j  /  G += K_un[:, j] K_un[:, j]^T
+
 Task = Tuple[str, int, int, int]
 
 # Ops that the wavefront scheduler does NOT count against the stream pool:
@@ -109,7 +115,9 @@ Task = Tuple[str, int, int, int]
 # soon as their dependencies resolve — riding along with whatever BLAS wave
 # is current — so the cross-stage overlap is preserved without inflating the
 # launch count.
-BULK_OPS = frozenset({ASSEMBLE, CROSS, PRIOR, VINIT, XGEMV, GRAM, UASM, UASMD})
+BULK_OPS = frozenset(
+    {ASSEMBLE, CROSS, PRIOR, VINIT, XGEMV, GRAM, UASM, UASMD, LRGEMM}
+)
 
 # Dispatch groups: tasks whose batched kernel is literally the same launch.
 # SYRK is GEMM with both panels equal, so the executor fuses both into one
@@ -536,6 +544,22 @@ def build_update_schedule(
     return Schedule(m_tiles=m_tiles, levels=levels, kind=kind)
 
 
+def lowrank_tasks(mu_tiles: int, n_tiles: int) -> List[Task]:
+    """The LRGEMM bulk family over the (mu_tiles × n_tiles) K_un grid.
+
+    Single level: every tile contraction is independent, so the whole
+    family compiles to ONE batched launch (BULK_OPS) — the low-rank tier's
+    n-dimensional work is embarrassingly tile-parallel by construction.
+    """
+    return [(LRGEMM, p, j, -1) for p in range(mu_tiles) for j in range(n_tiles)]
+
+
+def lowrank_deps(task: Task) -> List[Task]:
+    if task[0] != LRGEMM:
+        raise ValueError(task[0])
+    return []
+
+
 def task_deps(task: Task, schedule: Schedule) -> List[Task]:
     """Dependencies of ``task`` under the DAG family of ``schedule.kind``."""
     if schedule.kind == "cholesky":
@@ -546,6 +570,8 @@ def task_deps(task: Task, schedule: Schedule) -> List[Task]:
         return append_deps(task, schedule.m_tiles)
     if schedule.kind == "update_rank":
         return rank_update_deps(task, schedule.m_tiles)
+    if schedule.kind == "lowrank":
+        return lowrank_deps(task)
     return solve_deps(task, schedule.m_tiles, lower=schedule.kind == "forward")
 
 
@@ -568,6 +594,9 @@ def _dag(m_tiles: int, kind: str, q_tiles: int = 0, uncertainty: bool = False):
         return append_tasks(m_tiles), lambda t: append_deps(t, m_tiles)
     if kind == "update_rank":
         return rank_update_tasks(m_tiles), lambda t: rank_update_deps(t, m_tiles)
+    if kind == "lowrank":
+        # q_tiles carries the n-side tile count of the K_un grid
+        return lowrank_tasks(m_tiles, q_tiles), lambda t: lowrank_deps(t)
     raise ValueError(kind)
 
 

@@ -1,0 +1,56 @@
+"""Pallas kernel: low-rank contraction tile  c = A · v  (LRGEMM, DESIGN.md §14).
+
+The n-side work of the Nyström inner system is a stack of independent tile
+matvecs over the K_un grid: task (p, j) contracts cross-covariance tile
+K_un[p, j] (rows = inducing points, cols = training points) with training
+chunk v_j.  One (m × m)·(m,) product on the MXU per grid step; the executor
+either vmaps the single-tile entry (its batch axis becomes the Pallas grid)
+or issues :func:`lrgemm_tiles` directly for a pre-gathered stack.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lrgemm_kernel(a_ref, v_ref, o_ref):
+    a = a_ref[0].astype(jnp.float32)            # (m, mb) tile
+    v = v_ref[0].astype(jnp.float32)            # (mb,) chunk
+    o_ref[0] = (a @ v).astype(o_ref.dtype)
+
+
+def lrgemm(a: jax.Array, v: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """One tile contraction a (m, mb) @ v (mb,) -> (m,)."""
+    m, mb = a.shape
+    return pl.pallas_call(
+        _lrgemm_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, m, mb), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, mb), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, m), a.dtype),
+        interpret=interpret,
+    )(a[None], v[None])[0]
+
+
+def lrgemm_tiles(
+    a_stack: jax.Array, v_stack: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """The whole LRGEMM family as ONE launch: a_stack (G, m, mb), v_stack
+    (G, mb) -> (G, m), tile batch on the leading grid dimension."""
+    g, m, mb = a_stack.shape
+    return pl.pallas_call(
+        _lrgemm_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, m, mb), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, mb), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, m), a_stack.dtype),
+        interpret=interpret,
+    )(a_stack, v_stack)

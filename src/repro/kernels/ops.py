@@ -47,6 +47,7 @@ import numpy as np
 from repro.core import tiling
 from repro.kernels import cov_assembly as _cov
 from repro.kernels import downdate_tile as _down
+from repro.kernels import lrgemm_tile as _lrgemm
 from repro.kernels import potrf_tile as _potrf
 from repro.kernels import trailing_update as _trail
 from repro.kernels import trsm_tile as _trsm
@@ -166,6 +167,19 @@ def _pick_block(m: int) -> int:
     while b * 2 <= min(m, 256):
         b *= 2
     return b
+
+
+def _lrgemm_ref(a, v):
+    return a @ v
+
+
+def _lrgemm_impl(a: jax.Array, v: jax.Array) -> jax.Array:
+    return _lrgemm.lrgemm(a, v, interpret=_interpret())
+
+
+# low-rank contraction tile (DESIGN.md §14); the reference VJP keeps the
+# lowrank NLML differentiable under op_backend="pallas"
+lrgemm = _with_ref_vjp(_lrgemm_impl, _lrgemm_ref)
 
 
 def carry_update(w: jax.Array, l_new: jax.Array, y: jax.Array, c: jax.Array) -> jax.Array:

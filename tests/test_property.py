@@ -135,6 +135,56 @@ def test_tiled_optimization_recovers_monolithic_hyperparameters(n, seed):
 
 
 @given(
+    n=st.integers(8, 48),
+    mi=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+    l=st.floats(0.4, 2.0),
+)
+@settings(max_examples=10, deadline=None)
+def test_lowrank_variance_is_nonnegative(n, mi, seed, l):
+    """The whitened Nyström head never produces a negative predictive
+    variance — the clamp plus B's unit eigenvalue floor hold for any
+    (n, m_inducing, lengthscale) the strategies can see."""
+    from repro.core import lowrank
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 2)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    xt = rng.standard_normal((6, 2)).astype(np.float32)
+    p = SEKernelParams(l, 1.0, 0.1)
+    state = lowrank.lowrank_state(x, y, p, min(mi, n), 8)
+    _, cov = lowrank.predict_from_lowrank_state(
+        state, jnp.asarray(xt), full_cov=True
+    )
+    var = np.diag(np.asarray(cov))
+    assert np.isfinite(var).all()
+    assert (var >= 0.0).all()
+
+
+@given(
+    n=st.integers(10, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_lowrank_converges_to_exact_at_full_rank(n, seed):
+    """With the inducing set equal to the training inputs the Nyström
+    posterior mean collapses onto the exact posterior."""
+    from repro.core import lowrank
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 2)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    xt = rng.standard_normal((5, 2)).astype(np.float32)
+    p = SEKernelParams.paper_defaults()
+    mu_exact = np.asarray(
+        pred.predict(jnp.asarray(x), jnp.asarray(y), jnp.asarray(xt), p, 8)
+    )
+    state = lowrank.lowrank_state(x, y, p, n, 8, inducing=jnp.asarray(x))
+    mu_lr = np.asarray(lowrank.predict_from_lowrank_state(state, jnp.asarray(xt)))
+    np.testing.assert_allclose(mu_lr, mu_exact, atol=5e-2)
+
+
+@given(
     seed=st.integers(0, 2**31 - 1),
     chunk=st.sampled_from([64, 256, 1024]),
     size=st.integers(10, 5000),
