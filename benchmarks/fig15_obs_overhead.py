@@ -1,0 +1,165 @@
+"""fig15: telemetry overhead — the zero-cost-when-off contract, measured.
+
+Times the two instrumented hot paths with ``repro.obs`` disabled vs
+enabled (DESIGN.md §15):
+
+* ``fused_predict`` — one cold fused predict per iteration (cache
+  invalidated each time), the path that records an ``executor.wave``
+  dispatch event and opens a profiler span;
+* ``serve_wave`` — one ContinuousBatcher wave per iteration (mixed
+  predict + observe queue), the path that feeds both the batcher's
+  private registry and, when enabled, the global ``serve.wave`` events.
+
+Recording happens only at host dispatch boundaries (never inside jitted
+code, never by materializing async results), so the enabled overhead is a
+few dict hits per *launch sequence*, not per tile task — the acceptance
+bar is <= 2% on the median.  The fused-predict means are also compared
+bitwise across the two modes: telemetry must never perturb numerics.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import repro.obs as obs
+
+
+def _median_us(fn, reps: int, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def _overhead(us_off: float, us_on: float) -> float:
+    return (us_on / us_off - 1.0) * 100.0
+
+
+def _bench_fused(n, tile, d, reps):
+    import jax
+
+    from repro.core.gp import GaussianProcess
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    xt = rng.standard_normal((max(n // 8, 8), d)).astype(np.float32)
+    gp = GaussianProcess(x, y, tile_size=tile)
+
+    def cold_predict():
+        gp.invalidate_cache()
+        out = gp.predict(xt)
+        jax.block_until_ready(out)
+        return out
+
+    results = {}
+    for mode in ("off", "on"):
+        (obs.enable if mode == "on" else obs.disable)()
+        results[mode] = (np.asarray(cold_predict()), _median_us(cold_predict, reps))
+    obs.disable()
+    obs.reset()
+    mean_off, us_off = results["off"]
+    mean_on, us_on = results["on"]
+    return us_off, us_on, bool(np.array_equal(mean_off, mean_on))
+
+
+def _bench_serve(b, n_max, tile, batch, reps):
+    from repro.core.gp import GPFleet
+    from repro.serve import ContinuousBatcher
+
+    def scenario():
+        rng = np.random.default_rng(3)
+        ns = rng.integers(max(tile // 2, 8), n_max, size=b)
+        xs = [rng.uniform(size=(int(n), 1)).astype(np.float32) for n in ns]
+        ys = [np.sin(6 * x[:, 0]).astype(np.float32) for x in xs]
+        srv = ContinuousBatcher(GPFleet(xs, ys, tile_size=tile))
+        rng_req = np.random.default_rng(4)
+
+        def wave():
+            for i in range(b):
+                srv.submit_predict(i, rng_req.uniform(size=(batch // b + 1, 1)))
+            srv.submit_observe(
+                int(rng_req.integers(b)),
+                rng_req.uniform(size=(2, 1)),
+                rng_req.normal(size=2),
+            )
+            srv.step()
+
+        return wave, srv
+
+    # pre-pass: the schedule GROWS problems, so later waves hit new bucket
+    # geometries — run it once untimed so every jit trace/Plan the timed
+    # passes will touch is already compiled (else the first mode measured
+    # pays all the compiles and the comparison is meaningless)
+    obs.disable()
+    wave, srv = scenario()
+    for _ in range(reps + 2):
+        wave()
+    srv.flush()
+
+    # one batcher per mode, waves INTERLEAVED (off, on, off, on, ...): the
+    # two fleets follow identical request schedules in lockstep, so slow
+    # machine drift lands on both modes instead of biasing whichever block
+    # was measured first
+    waves, srvs = {}, {}
+    for mode in ("off", "on"):
+        waves[mode], srvs[mode] = scenario()
+    ts = {"off": [], "on": []}
+    for rep in range(reps + 2):
+        for mode in ("off", "on"):
+            (obs.enable if mode == "on" else obs.disable)()
+            t0 = time.perf_counter()
+            waves[mode]()
+            if rep >= 2:
+                ts[mode].append(time.perf_counter() - t0)
+    obs.disable()
+    for mode in ("off", "on"):
+        srvs[mode].flush()
+    obs.reset()
+    return (
+        float(np.median(ts["off"]) * 1e6),
+        float(np.median(ts["on"]) * 1e6),
+    )
+
+
+def run(n=512, tile=64, d=8, b=6, n_max=128, batch=24, reps=10, out=print):
+    from benchmarks.common import row
+
+    prev = obs.enabled()  # restore the caller's telemetry state on exit
+    rows = []
+
+    us_off, us_on, bitwise = _bench_fused(n, tile, d, reps)
+    out(row(f"fig15/fused_predict/off/n{n}", us_off / 1e6))
+    out(row(
+        f"fig15/fused_predict/on/n{n}", us_on / 1e6,
+        f"overhead_pct={_overhead(us_off, us_on):.2f} bitwise_identical={bitwise}",
+    ))
+    rows.append({
+        "path": "fused_predict", "n": n, "us_off": us_off, "us_on": us_on,
+        "overhead_pct": _overhead(us_off, us_on), "bitwise_identical": bitwise,
+    })
+
+    us_off, us_on = _bench_serve(b, n_max, tile, batch, reps)
+    out(row(f"fig15/serve_wave/off/b{b}", us_off / 1e6))
+    out(row(
+        f"fig15/serve_wave/on/b{b}", us_on / 1e6,
+        f"overhead_pct={_overhead(us_off, us_on):.2f}",
+    ))
+    rows.append({
+        "path": "serve_wave", "b": b, "us_off": us_off, "us_on": us_on,
+        "overhead_pct": _overhead(us_off, us_on),
+    })
+
+    if prev:
+        obs.enable()
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -57,6 +57,21 @@ class _Collector:
 
         return _out
 
+    def run_fig(self, figure: str, fn, /, *args, **kwargs):
+        """Run one figure module, stamping its wall-clock duration and the
+        lru-cache tallies (cumulative across the run — per-figure deltas are
+        derivable by diffing consecutive groups) into its JSON group."""
+        import time
+
+        import repro.obs as obs
+
+        t0 = time.perf_counter()
+        result = fn(*args, out=self.out(figure), **kwargs)
+        group = self.figures[figure]
+        group["duration_s"] = round(time.perf_counter() - t0, 3)
+        group["cache_stats"] = obs.cache_stats()
+        return result
+
 
 def _executor_counts(tile_counts=(4, 8, 16), streams=(None, 4, 16)) -> list:
     """Fused-program vs staged batched-launch counts (plan-level, no exec)."""
@@ -162,75 +177,87 @@ def main() -> None:
         fig12_sharded_fleet,
         fig13_kernel_zoo,
         fig14_lowrank_tradeoff,
+        fig15_obs_overhead,
         mem_tiles,
     )
 
     col = _Collector()
     print("name,us_per_call,derived")
     if args.smoke:
-        fig3_streams_tiles.run(n=128, tile_counts=(4,), streams=(2, None), out=col.out("fig3"))
-        fig5_schedule_trace.run(m_tiles=8, out=col.out("fig5"))
-        fig6_cholesky_scaling.run(sizes=(128,), out=col.out("fig6"))
-        fig8_train_scaling.run(sizes=(64,), out=col.out("fig8"))
-        fleet = fig9_batched_fleet.run(n=128, bs=(1, 4), out=col.out("fig9"))
-        online = fig10_online_update.run(ns=(128,), bs=(1, 8), out=col.out("fig10"))
-        ragged = fig11_ragged_fleet.run(
+        col.run_fig("fig3", fig3_streams_tiles.run, n=128, tile_counts=(4,), streams=(2, None))
+        col.run_fig("fig5", fig5_schedule_trace.run, m_tiles=8)
+        col.run_fig("fig6", fig6_cholesky_scaling.run, sizes=(128,))
+        col.run_fig("fig8", fig8_train_scaling.run, sizes=(64,))
+        fleet = col.run_fig("fig9", fig9_batched_fleet.run, n=128, bs=(1, 4))
+        online = col.run_fig("fig10", fig10_online_update.run, ns=(128,), bs=(1, 8))
+        ragged = col.run_fig(
+            "fig11", fig11_ragged_fleet.run,
             b=8, n_max=96, tile=16, bucket_counts=(1, 2), waves=1, batch=8,
-            out=col.out("fig11"),
         )
-        sharded = fig12_sharded_fleet.run(
-            n_total=128, tile=16, bs=(1, 4), n_test=16, out=col.out("fig12")
+        sharded = col.run_fig(
+            "fig12", fig12_sharded_fleet.run, n_total=128, tile=16, bs=(1, 4), n_test=16
         )
-        kernel_zoo = fig13_kernel_zoo.run(
-            n=96, n_test=16, tile=32, d=4, out=col.out("fig13")
+        kernel_zoo = col.run_fig(
+            "fig13", fig13_kernel_zoo.run, n=96, n_test=16, tile=32, d=4
         )
-        lowrank = fig14_lowrank_tradeoff.run(
+        lowrank = col.run_fig(
+            "fig14", fig14_lowrank_tradeoff.run,
             sizes=(96,), ms=(16, 32), n_test=24, tile=32, d=3,
-            out=col.out("fig14"),
         )
-        mem_tiles.run(n=256, out=col.out("mem"))
-        pipeline = _fused_vs_staged(128, col.out("pipeline"))
+        obs_overhead = col.run_fig(
+            "fig15", fig15_obs_overhead.run,
+            n=96, tile=32, d=4, b=4, n_max=64, batch=8, reps=3,
+        )
+        col.run_fig("mem", mem_tiles.run, n=256)
+        pipeline = col.run_fig(
+            "pipeline", lambda n, out: _fused_vs_staged(n, out), 128
+        )
         counts = _executor_counts(tile_counts=(8,))
     else:
         n = min(args.n, 512) if args.quick else args.n
-        fig3_streams_tiles.run(n=n, out=col.out("fig3"))
-        fig4_breakdown.run(n=n, n_test=n, out=col.out("fig4"))
-        fig5_schedule_trace.run(m_tiles=32, out=col.out("fig5"))
+        col.run_fig("fig3", fig3_streams_tiles.run, n=n)
+        col.run_fig("fig4", fig4_breakdown.run, n=n, n_test=n)
+        col.run_fig("fig5", fig5_schedule_trace.run, m_tiles=32)
         sizes = (128, 256, 512) if args.quick else (128, 256, 512, 1024, 2048)
-        fig6_cholesky_scaling.run(sizes=sizes, out=col.out("fig6"))
+        col.run_fig("fig6", fig6_cholesky_scaling.run, sizes=sizes)
         psizes = (128, 256) if args.quick else (128, 256, 512, 1024)
-        fig7_predict_scaling.run(sizes=psizes, out=col.out("fig7"))
+        col.run_fig("fig7", fig7_predict_scaling.run, sizes=psizes)
         tsizes = (128, 256) if args.quick else (128, 256, 512, 1024, 2048)
-        fig8_train_scaling.run(sizes=tsizes, out=col.out("fig8"))
+        col.run_fig("fig8", fig8_train_scaling.run, sizes=tsizes)
         fbs = (1, 2, 4) if args.quick else (1, 2, 4, 8, 16)
-        fleet = fig9_batched_fleet.run(n=min(n, 256), bs=fbs, out=col.out("fig9"))
+        fleet = col.run_fig("fig9", fig9_batched_fleet.run, n=min(n, 256), bs=fbs)
         osizes = (256, 512) if args.quick else (256, 512, 1024)
-        online = fig10_online_update.run(
-            ns=osizes, bs=(1, 16, 64), out=col.out("fig10")
-        )
+        online = col.run_fig("fig10", fig10_online_update.run, ns=osizes, bs=(1, 16, 64))
         rb, rn = ((8, 256) if args.quick else (16, 512))
-        ragged = fig11_ragged_fleet.run(
-            b=rb, n_max=rn, tile=32, out=col.out("fig11")
-        )
-        sharded = fig12_sharded_fleet.run(
+        ragged = col.run_fig("fig11", fig11_ragged_fleet.run, b=rb, n_max=rn, tile=32)
+        sharded = col.run_fig(
+            "fig12", fig12_sharded_fleet.run,
             n_total=(256 if args.quick else 512),
             bs=(1, 4) if args.quick else (1, 4, 16),
-            out=col.out("fig12"),
         )
-        kernel_zoo = fig13_kernel_zoo.run(
+        kernel_zoo = col.run_fig(
+            "fig13", fig13_kernel_zoo.run,
             n=(256 if args.quick else 512),
             tile=(32 if args.quick else 64),
-            out=col.out("fig13"),
         )
-        lowrank = fig14_lowrank_tradeoff.run(
+        lowrank = col.run_fig(
+            "fig14", fig14_lowrank_tradeoff.run,
             sizes=((1024,) if args.quick else (4096, 16384)),
             ms=((64, 128) if args.quick else (64, 128, 256, 512)),
             n_test=(128 if args.quick else 512),
             tile=(64 if args.quick else 256),
-            out=col.out("fig14"),
         )
-        mem_tiles.run(n=n, out=col.out("mem"))
-        pipeline = _fused_vs_staged(min(n, 512), col.out("pipeline"))
+        obs_overhead = col.run_fig(
+            "fig15", fig15_obs_overhead.run,
+            n=(256 if args.quick else 512),
+            tile=(32 if args.quick else 64),
+            b=6, n_max=(96 if args.quick else 128),
+            reps=(5 if args.quick else 10),
+        )
+        col.run_fig("mem", mem_tiles.run, n=n)
+        pipeline = col.run_fig(
+            "pipeline", lambda n, out: _fused_vs_staged(n, out), min(n, 512)
+        )
         counts = _executor_counts()
 
     if args.json:
@@ -245,6 +272,7 @@ def main() -> None:
             "sharded_fleet": sharded,
             "kernel_zoo": kernel_zoo,
             "lowrank": lowrank,
+            "obs_overhead": obs_overhead,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -5,14 +5,20 @@ white-noise term — built from the kernel zoo's composition algebra
 (DESIGN.md §13), trained via the tiled NLML (autodiff VJP fallback), and
 served through a predict-observe-update loop where each round's new
 observations are absorbed online by the block Cholesky append (no
-re-factorization).
+re-factorization).  `repro.obs` telemetry (DESIGN.md §15) is on for the
+whole run; the tail prints what the loop actually did — warm vs cold
+posterior builds, executor dispatches, factorization-health incidents,
+and the plan/jit lru-cache tallies.
 
     PYTHONPATH=src python examples/composite_workload.py
 """
 
 import numpy as np
 
+import repro.obs as obs
 from repro.core import GaussianProcess, Matern52, Scaled, Sum, White
+
+obs.enable()
 
 rng = np.random.default_rng(0)
 
@@ -51,3 +57,18 @@ for round_idx in range(3):
     mean, _ = gp.predict_with_uncertainty(x_test)
     err = np.abs(np.asarray(mean) - f(x_test))
     print(f"round {round_idx}: n={gp.y_train.shape[0]}  mae={err.mean():.4f}")
+
+# what the loop did, from the telemetry registry (DESIGN.md §15)
+snap = obs.snapshot()
+c = snap["counters"]
+print(
+    f"obs: posterior cache warm={c.get('cache.posterior.warm', 0):.0f} "
+    f"cold={c.get('cache.posterior.cold', 0):.0f}, executor dispatches="
+    f"{sum(v for k, v in c.items() if k.startswith('executor.dispatch.')):.0f}, "
+    f"health incidents={sum(v for k, v in c.items() if k.startswith('health.')):.0f}"
+)
+print("obs: cache stats:")
+for name, st in obs.cache_stats().items():
+    if st["hits"] or st["misses"]:
+        print(f"  {name}: hits={st['hits']} misses={st['misses']} size={st['size']}")
+obs.disable()

@@ -31,6 +31,13 @@ latency, the number the streaming subsystem exists to shrink.
     PYTHONPATH=src python examples/serve_gp.py --fleet 8 --n 512
     PYTHONPATH=src python examples/serve_gp.py --online --n 1024 --arrive 32
     PYTHONPATH=src python examples/serve_gp.py --ragged 12 --n 512 --tile 64
+
+``--metrics out.jsonl`` enables `repro.obs` telemetry (DESIGN.md §15) for
+the run and streams every event — executor wave dispatches, `serve.wave`
+records, factorization-health incidents, a final lru-cache snapshot — to a
+JSON-lines file:
+
+    PYTHONPATH=src python examples/serve_gp.py --ragged 8 --metrics metrics.jsonl
 """
 
 import argparse
@@ -39,6 +46,7 @@ import time
 import jax
 import numpy as np
 
+import repro.obs as obs
 from repro.core import GaussianProcess, GPBatch, GPFleet
 from repro.core import predict as pred
 from repro.data.msd import MSDConfig, make_dataset, nfir_features, simulate
@@ -248,17 +256,42 @@ def main():
     ap.add_argument(
         "--arrive", type=int, default=32, help="observations arriving per batch (--online/--ragged)"
     )
+    ap.add_argument(
+        "--metrics",
+        metavar="OUT.jsonl",
+        default=None,
+        help="enable repro.obs telemetry and stream events to a JSONL file",
+    )
     args = ap.parse_args()
 
+    if args.metrics:
+        obs.enable(args.metrics)
     cfg = MSDConfig()
-    if args.ragged > 0:
-        serve_ragged(args, cfg)
-    elif args.online:
-        serve_online(args, cfg)
-    elif args.fleet > 0:
-        serve_fleet(args, cfg)
-    else:
-        serve_single(args, cfg)
+    try:
+        if args.ragged > 0:
+            serve_ragged(args, cfg)
+        elif args.online:
+            serve_online(args, cfg)
+        elif args.fleet > 0:
+            serve_fleet(args, cfg)
+        else:
+            serve_single(args, cfg)
+        if args.metrics:
+            # health + cache tallies ride along as final events so the JSONL
+            # is self-contained (no second file for the snapshot)
+            snap = obs.snapshot()
+            obs.event(
+                "serve.health",
+                counters={
+                    k: v for k, v in snap["counters"].items()
+                    if k.startswith("health.")
+                },
+            )
+            obs.event("obs.cache_stats", caches=obs.cache_stats())
+            print(f"metrics: wrote {len(obs.registry().events)}+ events to {args.metrics}")
+    finally:
+        if args.metrics:
+            obs.disable()
 
 
 if __name__ == "__main__":

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.core import kernels_math as km
 from repro.core import scheduler as sch
 from repro.core import tiling
@@ -161,6 +162,85 @@ class Plan:
 
 def _arr(xs: Sequence[int]) -> np.ndarray:
     return np.asarray(xs, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Wave-trace telemetry (DESIGN.md §15) — the live analogue of fig5: what one
+# dispatch of a Plan launches, wave by wave, and how full the stream pool is.
+# ---------------------------------------------------------------------------
+
+# Plans are lru-cached and live for the process; keying the digest by id()
+# makes the per-dispatch record a dict lookup, not a Plan walk.
+_plan_stats_cache: dict = {}
+
+
+def plan_wave_stats(plan: Plan) -> dict:
+    """Static per-Plan wave digest: waves, launches, tasks by op family,
+    bulk-op ride-alongs, and mean stream-pool occupancy.
+
+    ``occupancy`` is pool tasks per pool-bearing wave over ``n_streams``
+    (BULK_OPS ride along outside the pool budget — scheduler docstring);
+    with ``n_streams=None`` the pool is unbounded and occupancy is 1.0 by
+    definition.  Memoized per Plan object, so recording a dispatch costs a
+    dict hit.
+    """
+    st = _plan_stats_cache.get(id(plan))
+    if st is not None:
+        return st
+    by_op: dict = {}
+    bulk_tasks = 0
+    pool_tasks = 0
+    pool_waves = 0
+    for level in plan.levels:
+        level_pool = 0
+        for bt in level:
+            by_op[bt.op] = by_op.get(bt.op, 0) + bt.size
+            if bt.op in sch.BULK_OPS:
+                bulk_tasks += bt.size
+            else:
+                level_pool += bt.size
+        if level_pool:
+            pool_waves += 1
+            pool_tasks += level_pool
+    if plan.n_streams and pool_waves:
+        occupancy = pool_tasks / (pool_waves * plan.n_streams)
+    else:
+        occupancy = 1.0 if pool_tasks else 0.0
+    st = {
+        "plan": plan.kind,
+        "waves": len(plan.levels),
+        "launches": plan.n_batches,
+        "tasks": bulk_tasks + pool_tasks,
+        "bulk_tasks": bulk_tasks,
+        "pool_tasks": pool_tasks,
+        "n_streams": plan.n_streams,
+        "occupancy": occupancy,
+        "by_op": by_op,
+    }
+    _plan_stats_cache[id(plan)] = st
+    return st
+
+
+def record_dispatch(kind: str, plan: Plan, *, backend: str, batched: bool) -> None:
+    """Count + log one host-side dispatch of ``plan`` (obs must be enabled;
+    callers guard — and must never call this at trace time: under jit the
+    program body runs once per trace, so an in-trace record would count
+    compilations, not dispatches.  The eager run_* entry points check
+    ``isinstance(operand, jax.core.Tracer)`` and log a retrace counter
+    instead; the jitted fast paths record from their *callers* in
+    predict/update, where operands are concrete)."""
+    st = plan_wave_stats(plan)
+    obs.inc(f"executor.dispatch.{kind}")
+    obs.inc("executor.launches", st["launches"])
+    for op, cnt in st["by_op"].items():
+        obs.inc(f"executor.tasks.{op}", cnt)
+    obs.event(
+        "executor.wave",
+        dispatch=kind,
+        backend=backend,
+        batched=bool(batched),
+        **st,
+    )
 
 
 def _cholesky_batch(op: str, tasks: Sequence[sch.Task], m: int) -> Batch:
@@ -775,6 +855,11 @@ def run_program(
     m_tiles, m = xc.shape[-3], xc.shape[-2]
     q_tiles = xtc.shape[-3]
     plan = program_plan(m_tiles, q_tiles, uncertainty, n_streams)
+    if obs.enabled():
+        if isinstance(xc, jax.core.Tracer):
+            obs.inc("executor.traces.run_program")
+        else:
+            record_dispatch("run_program", plan, backend=backend, batched=batched)
     dtype = xc.dtype
     lead = (xc.shape[0],) if batched else ()
     take, put, add = _env_ops(batched)
@@ -1051,6 +1136,11 @@ def run_append(
             f"store {lpacked.shape}"
         )
     plan = update_append_plan(r_tiles, m_store, n_streams)
+    if obs.enabled():
+        if isinstance(lpacked, jax.core.Tracer):
+            obs.inc("executor.traces.run_append")
+        else:
+            record_dispatch("run_append", plan, backend=backend, batched=batched)
     take, put, _ = _env_ops(batched)
     lead = (xc.shape[0],) if batched else ()
     dtype = lpacked.dtype
@@ -1225,6 +1315,13 @@ def run_rank_update(
     m = lpacked.shape[-1]
     lead = (lpacked.shape[0],) if batched else ()
     plan = update_rank_plan(m_tiles, n_streams)
+    if obs.enabled():
+        if isinstance(lpacked, jax.core.Tracer):
+            obs.inc("executor.traces.run_rank_update")
+        else:
+            record_dispatch(
+                "run_rank_update", plan, backend=backend, batched=batched
+            )
     uprep, uprow, ucarry = get_update_ops(backend, sign)
     uprep_b = _tile_dispatch(uprep, batched, batch_dispatch)
     uprow_b = _tile_dispatch(uprow, batched, batch_dispatch)
@@ -1264,3 +1361,14 @@ def run_rank_update(
             else:
                 raise ValueError(bt.op)
     return lpacked, w
+
+
+# Expose every plan cache to obs.cache_stats() — plan-invariance regressions
+# (a cache that grows per call instead of per geometry) become visible at
+# runtime, not just in tests (DESIGN.md §15).
+obs.register_cache("executor.cholesky_plan", cholesky_plan)
+obs.register_cache("executor.solve_plan", solve_plan)
+obs.register_cache("executor.program_plan", program_plan)
+obs.register_cache("executor.lowrank_plan", lowrank_plan)
+obs.register_cache("executor.update_append_plan", update_append_plan)
+obs.register_cache("executor.update_rank_plan", update_rank_plan)

@@ -37,10 +37,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.core import kernels_math as km
 from repro.core import lowrank
 from repro.core import predict as pred
 from repro.core import tiling
+
+
+def _lowrank_state_with_retry(build, base_jitter: float) -> lowrank.LowRankState:
+    """Cold Nyström build with escalating-jitter retries (DESIGN.md §15).
+
+    ``chol(K_uu + jitter I)`` can fail when the inducing set has duplicate
+    or near-duplicate rows and the jitter is too small — the whitened
+    factors come back NaN and every downstream predict/NLML is poisoned.
+    Retry the build with the jitter escalated tenfold (at most twice).  The
+    finiteness probe reads only the two packed m×m inner factors — O(m²)
+    and once per cold build, never on the per-predict path — and each
+    incident is recorded as a ``health.lowrank_jitter_retry`` event.
+    """
+    jit = float(base_jitter)
+    state = build(jit)
+    for _ in range(2):
+        if bool(
+            jnp.all(jnp.isfinite(state.luu_packed))
+            & jnp.all(jnp.isfinite(state.lb_packed))
+        ):
+            return state
+        jit = max(jit, lowrank.DEFAULT_JITTER) * 10.0
+        obs.health_event("lowrank_jitter_retry", jitter=jit)
+        state = build(jit)
+    return state
 
 
 def _params_key(params):
@@ -159,6 +185,7 @@ class GaussianProcess:
         """
         key = self._cache_key()
         if self._posterior is None or self._posterior_key != key:
+            obs.inc("cache.posterior.cold")
             self._posterior = pred.posterior_state(
                 self.x_train,
                 self.y_train,
@@ -171,6 +198,8 @@ class GaussianProcess:
                 kernel=self.kernel,
             )
             self._posterior_key = key
+        else:
+            obs.inc("cache.posterior.warm")
         return self._posterior
 
     def _effective_jitter(self) -> float:
@@ -183,22 +212,28 @@ class GaussianProcess:
         """
         key = self._cache_key()
         if self._lowrank is None or self._lowrank_key != key:
-            self._lowrank = lowrank.lowrank_state(
-                self.x_train,
-                self.y_train,
-                self.params,
-                self.m_inducing,
-                self.tile_size,
-                strategy=self.strategy,
-                inducing=self.inducing,
-                jitter=self._effective_jitter(),
-                n_streams=self.n_streams,
-                backend=self.op_backend,
-                update_dtype=self.update_dtype,
-                dtype=self.dtype,
-                kernel=self.kernel,
+            obs.inc("cache.lowrank.cold")
+            self._lowrank = _lowrank_state_with_retry(
+                lambda jit: lowrank.lowrank_state(
+                    self.x_train,
+                    self.y_train,
+                    self.params,
+                    self.m_inducing,
+                    self.tile_size,
+                    strategy=self.strategy,
+                    inducing=self.inducing,
+                    jitter=jit,
+                    n_streams=self.n_streams,
+                    backend=self.op_backend,
+                    update_dtype=self.update_dtype,
+                    dtype=self.dtype,
+                    kernel=self.kernel,
+                ),
+                self._effective_jitter(),
             )
             self._lowrank_key = key
+        else:
+            obs.inc("cache.lowrank.warm")
         return self._lowrank
 
     def invalidate_cache(self) -> None:
@@ -258,6 +293,7 @@ class GaussianProcess:
                     )
                     self._lowrank_key = self._cache_key()
                 except upd.CholeskyUpdateError:
+                    obs.health_event("refactorize_fallback", site="gp.update.lowrank")
                     self.invalidate_cache()
             else:
                 self.invalidate_cache()
@@ -282,6 +318,7 @@ class GaussianProcess:
                 )
                 self._posterior_key = self._cache_key()
             except upd.CholeskyUpdateError:
+                obs.health_event("refactorize_fallback", site="gp.update")
                 self.invalidate_cache()  # next predict refactorizes
         else:
             self.invalidate_cache()
@@ -332,6 +369,7 @@ class GaussianProcess:
                     )
                     self._lowrank_key = self._cache_key()
                 except upd.CholeskyUpdateError:
+                    obs.health_event("refactorize_fallback", site="gp.forget.lowrank")
                     self.invalidate_cache()
             else:
                 self.invalidate_cache()
@@ -348,6 +386,7 @@ class GaussianProcess:
                 )
                 self._posterior_key = self._cache_key()
             except upd.CholeskyUpdateError:
+                obs.health_event("refactorize_fallback", site="gp.forget")
                 self.invalidate_cache()
         else:
             self.invalidate_cache()
@@ -361,8 +400,10 @@ class GaussianProcess:
         populates the posterior cache; cold staged -> posterior() then tail."""
         key = self._cache_key()
         if self._posterior is not None and self._posterior_key == key:
+            obs.inc("cache.posterior.warm")
             state = self._posterior
         elif self.fused:
+            obs.inc("cache.posterior.cold")
             result, state = pred.predict_fused(
                 self.x_train,
                 self.y_train,
@@ -631,6 +672,7 @@ class GPBatch:
         """
         key = self._cache_key()
         if self._posterior is None or self._posterior_key != key:
+            obs.inc("cache.posterior.cold")
             env, yc = pred.nlml_program_env(
                 self.x_train,
                 self.y_train,
@@ -656,6 +698,8 @@ class GPBatch:
                 kernel=self.kernel,
             )
             self._posterior_key = key
+        else:
+            obs.inc("cache.posterior.warm")
         return self._posterior
 
     def _lowrank_inducing(self):
@@ -671,24 +715,30 @@ class GPBatch:
         """Stacked Nyström states (leading B axis), cached across calls."""
         key = self._cache_key()
         if self._lowrank is None or self._lowrank_key != key:
-            self._lowrank = lowrank.lowrank_state(
-                self.x_train,
-                self.y_train,
-                self.params,
-                self.m_inducing,
-                self.tile_size,
-                strategy=self.strategy,
-                inducing=self._lowrank_inducing(),
-                jitter=lowrank.DEFAULT_JITTER if self.jitter is None
+            obs.inc("cache.lowrank.cold")
+            self._lowrank = _lowrank_state_with_retry(
+                lambda jit: lowrank.lowrank_state(
+                    self.x_train,
+                    self.y_train,
+                    self.params,
+                    self.m_inducing,
+                    self.tile_size,
+                    strategy=self.strategy,
+                    inducing=self._lowrank_inducing(),
+                    jitter=jit,
+                    n_streams=self.n_streams,
+                    backend=self.op_backend,
+                    update_dtype=self.update_dtype,
+                    dtype=self.dtype,
+                    batch_dispatch=self.batch_dispatch,
+                    kernel=self.kernel,
+                ),
+                lowrank.DEFAULT_JITTER if self.jitter is None
                 else float(self.jitter),
-                n_streams=self.n_streams,
-                backend=self.op_backend,
-                update_dtype=self.update_dtype,
-                dtype=self.dtype,
-                batch_dispatch=self.batch_dispatch,
-                kernel=self.kernel,
             )
             self._lowrank_key = key
+        else:
+            obs.inc("cache.lowrank.warm")
         return self._lowrank
 
     def _lowrank_warm(self) -> bool:
@@ -752,6 +802,9 @@ class GPBatch:
                     )
                     self._lowrank_key = self._cache_key()
                 except upd.CholeskyUpdateError:
+                    obs.health_event(
+                        "refactorize_fallback", site="batch.update.lowrank"
+                    )
                     self.invalidate_cache()
             else:
                 self.invalidate_cache()
@@ -773,6 +826,7 @@ class GPBatch:
                 )
                 self._posterior_key = self._cache_key()
             except upd.CholeskyUpdateError:
+                obs.health_event("refactorize_fallback", site="batch.update")
                 self.invalidate_cache()
         else:
             self.invalidate_cache()
@@ -807,6 +861,9 @@ class GPBatch:
                     )
                     self._lowrank_key = self._cache_key()
                 except upd.CholeskyUpdateError:
+                    obs.health_event(
+                        "refactorize_fallback", site="batch.forget.lowrank"
+                    )
                     self.invalidate_cache()
             else:
                 self.invalidate_cache()
@@ -826,6 +883,7 @@ class GPBatch:
                 )
                 self._posterior_key = self._cache_key()
             except upd.CholeskyUpdateError:
+                obs.health_event("refactorize_fallback", site="batch.forget")
                 self.invalidate_cache()
         else:
             self.invalidate_cache()
@@ -852,6 +910,7 @@ class GPBatch:
             )
         key = self._cache_key()
         if self._posterior is not None and self._posterior_key == key:
+            obs.inc("cache.posterior.warm")
             return pred.predict_from_state_batched(
                 self._posterior,
                 x_test,
@@ -860,6 +919,7 @@ class GPBatch:
                 dtype=self.dtype,
                 mesh=self.mesh,
             )
+        obs.inc("cache.posterior.cold")
         result, state = pred.predict_fused_batched(
             self.x_train,
             self.y_train,
@@ -1140,7 +1200,9 @@ class GPFleet:
         rec = self._buckets.get(cap_tiles)
         if rec is not None and rec.key == key and rec.idx == tuple(idx) \
                 and rec.state is not None:
+            obs.inc("cache.bucket.warm")
             return rec.state
+        obs.inc("cache.bucket.cold")
         xs, ys, nv = self._stack(idx, cap_tiles)
         bp = self._bucket_params(idx)
         if self.method == "lowrank":
@@ -1151,15 +1213,18 @@ class GPFleet:
                     ind = jnp.broadcast_to(ind[None], (len(idx),) + ind.shape)
                 else:
                     ind = ind[jnp.asarray(idx)]
-            state = lowrank.lowrank_state(
-                xs, ys, bp, self.m_inducing, self.tile_size,
-                strategy=self.strategy, inducing=ind,
-                jitter=lowrank.DEFAULT_JITTER if self.jitter is None
+            state = _lowrank_state_with_retry(
+                lambda jit: lowrank.lowrank_state(
+                    xs, ys, bp, self.m_inducing, self.tile_size,
+                    strategy=self.strategy, inducing=ind,
+                    jitter=jit,
+                    n_streams=self.n_streams, backend=self.op_backend,
+                    update_dtype=self.update_dtype, dtype=self.dtype,
+                    batch_dispatch=self.batch_dispatch, n_valid=nv,
+                    kernel=self.kernel,
+                ),
+                lowrank.DEFAULT_JITTER if self.jitter is None
                 else float(self.jitter),
-                n_streams=self.n_streams, backend=self.op_backend,
-                update_dtype=self.update_dtype, dtype=self.dtype,
-                batch_dispatch=self.batch_dispatch, n_valid=nv,
-                kernel=self.kernel,
             )
             self._buckets[cap_tiles] = _Bucket(tuple(idx), state, key)
             return state
@@ -1318,6 +1383,51 @@ class GPFleet:
     def log_marginal_likelihood(self) -> jax.Array:
         return -self.nlml()
 
+    def optimize(self, steps: int = 100, lr: float = 0.05) -> "GPFleet":
+        """Fit every problem's hyperparameters (the off-hot-path re-optimize
+        the serving loop's drift monitor schedules — DESIGN.md §15).
+
+        Each problem trains independently at its *own exact size* — no
+        padding rows in the training loss, unlike a bucket-stacked scan —
+        via the single-problem Adam scan (mll.optimize_hyperparameters) on
+        its gathered leaves.  The fitted pytrees are stacked back into
+        per-problem ``(B,) + base`` leaves: any leaf that started shared
+        comes back per-problem, because independently fitted problems
+        drift apart.  Caches invalidate; the next predict/nlml
+        re-factorizes each bucket under the new hyperparameters.
+        """
+        from repro.core import mll
+
+        method = "lowrank" if self.method == "lowrank" else "tiled"
+        fitted = []
+        for i in range(self.batch_size):
+            pi = km.gather_params(self.params, jnp.asarray(i), self.kernel)
+            new_pi, _ = mll.optimize_hyperparameters(
+                self._xs[i],
+                self._ys[i],
+                pi,
+                steps=steps,
+                lr=lr,
+                dtype=self.dtype,
+                method=method,
+                tile_size=self.tile_size,
+                n_streams=self.n_streams,
+                op_backend=self.op_backend,
+                update_dtype=self.update_dtype,
+                kernel=self.kernel,
+                m_inducing=self.m_inducing,
+                strategy=self.strategy,
+                inducing=self.inducing,
+                jitter=self.jitter,
+            )
+            fitted.append(new_pi)
+        self.params = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack([jnp.asarray(l) for l in leaves]), *fitted
+        )
+        obs.inc("fleet.optimize")
+        self.invalidate_cache()  # factors belong to the old hyperparameters
+        return self
+
     # -- ragged streaming updates (DESIGN.md §11) ---------------------------
 
     def update(self, x_new_list, y_new_list) -> "GPFleet":
@@ -1396,6 +1506,9 @@ class GPFleet:
                             mesh=self.mesh,
                         )
                 except upd.CholeskyUpdateError:
+                    obs.health_event(
+                        "refactorize_fallback", site="fleet.update", cap=cap
+                    )
                     state = None
             new_buckets[cap] = _Bucket(tuple(idx), state, new_key)
         self._buckets = new_buckets
@@ -1479,6 +1592,10 @@ class GPFleet:
                             batch_dispatch=self.batch_dispatch,
                         )
                 except upd.CholeskyUpdateError:
+                    obs.health_event(
+                        "refactorize_fallback", site="fleet.update.lowrank",
+                        cap=cap,
+                    )
                     state = None
             new_buckets[cap] = _Bucket(tuple(idx), state, new_key)
         self._buckets = new_buckets

@@ -37,11 +37,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.core import cholesky as chol
 from repro.core import executor
 from repro.core import kernels_math as km
 from repro.core import tiling, triangular
 from repro.dist import sharding as dist_sharding
+
+# Dispatch-boundary trace spans (DESIGN.md §15).  The jnp fast paths run
+# the program under jit, so executor.run_program only executes at trace
+# time there — the per-dispatch record must happen HERE, at the host call
+# into the cached jitted fn, where operands are concrete.
+_tracer = obs.Tracer("repro.predict")
+
+
+def _record_program(kind, xc, q_tiles, uncertainty, n_streams, backend):
+    """Record one jitted fused-program dispatch (no-op unless obs is on).
+
+    Skipped at trace time (``xc`` a tracer — when this caller is itself
+    under an outer jit/grad the dispatch belongs to whoever runs that
+    trace) and for the Pallas backend, whose unjitted eager path records
+    inside executor.run_program — so no dispatch is ever counted twice.
+    """
+    if obs.enabled() and backend == "jnp" and not isinstance(xc, jax.core.Tracer):
+        executor.record_dispatch(
+            kind,
+            executor.program_plan(xc.shape[-3], q_tiles, uncertainty, n_streams),
+            backend=backend,
+            batched=xc.ndim == 4,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -308,6 +332,8 @@ def predict_from_state(
     params = state.params
     kernel = state.kernel
     nh = x_test.shape[0]
+    if obs.enabled() and not isinstance(x_test, jax.core.Tracer):
+        obs.inc("predict.warm_tail")
     dtype = state.x_chunks.dtype if dtype is None else jnp.dtype(dtype)
     xtc = tiling.pad_features(x_test, state.m, dtype=dtype)
     kstar = assemble_cross_tiles(
@@ -446,7 +472,9 @@ def predict_fused(
     fn = _fused_program_fn(
         full_cov, n_streams, backend, update_dtype, n, nh, kernel=kernel
     )
-    env = fn(xc, yc, xtc, params)
+    _record_program("run_program", xc, xtc.shape[-3], full_cov, n_streams, backend)
+    with _tracer.span("fused"):
+        env = fn(xc, yc, xtc, params)
     mean = env["mean"].reshape(-1)[:nh]
     if full_cov:
         q_tiles = xtc.shape[0]
@@ -528,13 +556,21 @@ def predict_fused_batched(
             full_cov, n_streams, backend, update_dtype, None, None,
             batch_dispatch, mesh, kernel,
         )
-        env = fn(xc, yc, xtc, params, nv, ntv)
+        _record_program(
+            "run_program", xc, xtc.shape[-3], full_cov, n_streams, backend
+        )
+        with _tracer.span("fused_batched"):
+            env = fn(xc, yc, xtc, params, nv, ntv)
     else:
         fn = _fused_program_fn(
             full_cov, n_streams, backend, update_dtype, n, nh, batch_dispatch,
             mesh, kernel,
         )
-        env = fn(xc, yc, xtc, params)
+        _record_program(
+            "run_program", xc, xtc.shape[-3], full_cov, n_streams, backend
+        )
+        with _tracer.span("fused_batched"):
+            env = fn(xc, yc, xtc, params)
     mean = env["mean"].reshape(b, -1)[:, :nh]
     if full_cov:
         q_tiles = xtc.shape[1]
@@ -579,6 +615,8 @@ def predict_from_state_batched(
     params = state.params
     kernel = state.kernel
     b, nh = x_test.shape[0], x_test.shape[1]
+    if obs.enabled() and not isinstance(x_test, jax.core.Tracer):
+        obs.inc("predict.warm_tail_batched")
     dtype = state.x_chunks.dtype if dtype is None else jnp.dtype(dtype)
     xtc = tiling.pad_features(x_test, state.m, dtype=dtype)
     # the warm tail runs op-by-op (no enclosing jit): committing the test
@@ -658,12 +696,16 @@ def nlml_program_env(
             batch_dispatch, mesh, kernel,
         )
         nv = jnp.asarray(n_valid, jnp.int32)
-        return fn(xc, yc, xtc, params, nv, jnp.asarray(0, jnp.int32)), yc
+        _record_program("run_program", xc, 0, False, n_streams, backend)
+        with _tracer.span("nlml_program"):
+            return fn(xc, yc, xtc, params, nv, jnp.asarray(0, jnp.int32)), yc
     fn = _fused_program_fn(
         False, n_streams, backend, update_dtype, n, 0, batch_dispatch, mesh,
         kernel,
     )
-    return fn(xc, yc, xtc, params), yc
+    _record_program("run_program", xc, 0, False, n_streams, backend)
+    with _tracer.span("nlml_program"):
+        return fn(xc, yc, xtc, params), yc
 
 
 def predict(
@@ -776,3 +818,6 @@ def predict_monolithic(
     prior = km.assemble_prior_covariance(xt, params, kernel=kernel, dtype=dtype)
     sigma = prior - v.T @ v
     return mean, sigma
+
+
+obs.register_cache("predict.fused_program_fn", _fused_program_fn)

@@ -39,7 +39,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.core import executor, tiling, triangular
+
+
+def _record_step(kind: str, plan, backend: str, batched: bool, operand) -> None:
+    """Dispatch-boundary record for the jitted step fns (DESIGN.md §15).
+
+    The jnp backend jits each step, so executor.run_append/run_rank_update
+    only execute at trace time there — the per-dispatch record happens
+    here, where ``operand`` is concrete.  The Pallas backend runs the steps
+    unjitted and records inside the executor entry points instead.
+    """
+    if obs.enabled() and backend == "jnp" \
+            and not isinstance(operand, jax.core.Tracer):
+        executor.record_dispatch(kind, plan, backend=backend, batched=batched)
 
 
 class CholeskyUpdateError(RuntimeError):
@@ -182,6 +196,7 @@ def _resolve_fn(n_streams: Optional[int], forward: bool):
 def _check(state_arrays, what: str) -> None:
     flat = jnp.concatenate([jnp.ravel(a) for a in state_arrays])
     if bool(jnp.any(jnp.isnan(flat))):
+        obs.health_event("nan_guard_trip", what=what)
         raise CholeskyUpdateError(
             f"incremental {what} produced NaNs (non-positive-definite head); "
             "fall back to a full refactorization"
@@ -283,6 +298,10 @@ def extend_state(
             r_tiles, m_store, grow, n_streams, backend, update_dtype,
             batched, batch_dispatch, mesh if batched else None,
             getattr(state, "kernel", None),
+        )
+        _record_step(
+            "run_append", executor.update_append_plan(r_tiles, m_store, n_streams),
+            backend, batched, lpacked,
         )
         lpacked, xc, yc, beta = step(
             lpacked, xc, yc, beta, x_row, y_row, state.params,
@@ -407,6 +426,10 @@ def extend_state_ragged(
             r, m_store, False, n_streams, backend, update_dtype,
             True, batch_dispatch, mesh, getattr(state, "kernel", None),
         )
+        _record_step(
+            "run_append", executor.update_append_plan(r, m_store, n_streams),
+            backend, True, lpacked,
+        )
         lpacked, xc, yc, beta = step(
             lpacked, xc, yc, beta, xc[:, r], yc[:, r], state.params, nv_new_dev
         )
@@ -461,6 +484,11 @@ def shrink_state(
     _, yc = _live_chunks(state)
     lpacked = state.lpacked
     for step in range(t):
+        _record_step(
+            "run_rank_update",
+            executor.update_rank_plan(m_tiles - step - 1, n_streams),
+            backend, batched, lpacked,
+        )
         lpacked = _evict_step_fn(
             m_tiles - step, n_streams, backend, batch_dispatch,
             mesh if batched else None,
@@ -515,3 +543,8 @@ def update_factor(
     if check_finite:
         _check((new_packed,), "update")
     return new_packed
+
+
+obs.register_cache("update.append_step_fn", _append_step_fn)
+obs.register_cache("update.evict_step_fn", _evict_step_fn)
+obs.register_cache("update.resolve_fn", _resolve_fn)

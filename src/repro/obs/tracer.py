@@ -1,0 +1,73 @@
+"""Trace spans for the hot paths (DESIGN.md §15).
+
+Spans wrap host *dispatch* boundaries in ``jax.profiler.TraceAnnotation``
+so the library's stages show up as named ranges in a jax profiler / perfetto
+capture — the live analogue of the paper's per-stage breakdown.  When
+telemetry is disabled (the default) :func:`span` returns a shared no-op
+context manager: no allocation, no profiler calls, nothing.
+
+Spans are never opened inside jitted code: under jit the Python body runs
+only at trace time, so an in-program annotation would label tracing, not
+execution (why-no-instrumentation-inside-jit, DESIGN.md §15).  For scoping
+*within* a traced program jax's ``named_scope`` is the right tool — the
+:class:`Tracer` exposes it for completeness — but the repro's own
+instrumentation stays at dispatch boundaries.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+
+# NOT ``from repro.obs import registry`` — the package re-exports a
+# same-named *function*, which shadows the submodule attribute.
+from repro.obs.registry import enabled as _obs_enabled
+
+try:  # pragma: no cover - present on every supported jax
+    from jax.profiler import TraceAnnotation as _TraceAnnotation
+except ImportError:  # pragma: no cover
+    _TraceAnnotation = None
+
+_NULL = contextlib.nullcontext()
+
+
+def span(name: str):
+    """Context manager: a profiler trace annotation when enabled, no-op off."""
+    if not _obs_enabled() or _TraceAnnotation is None:
+        return _NULL
+    return _TraceAnnotation(name)
+
+
+class Tracer:
+    """Span factory with a fixed name prefix.
+
+    >>> tr = Tracer("repro.serve")
+    >>> with tr.span("wave"):
+    ...     dispatch_wave()
+    """
+
+    def __init__(self, prefix: str = "repro") -> None:
+        self.prefix = prefix
+
+    def span(self, name: str):
+        return span(f"{self.prefix}.{name}")
+
+    def named_scope(self, name: str):
+        """jax.named_scope — for use INSIDE traced code (names jaxpr ops);
+        unconditional because it costs nothing at execution time."""
+        return jax.named_scope(f"{self.prefix}.{name}")
+
+    def annotate(self, name: str):
+        """Decorator form of :meth:`span`."""
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapped(*args, **kwargs):
+                with self.span(name):
+                    return fn(*args, **kwargs)
+
+            return wrapped
+
+        return deco

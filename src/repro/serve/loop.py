@@ -44,6 +44,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+import repro.obs as obs
 from repro.core.gp import GPFleet
 
 PREDICT = "predict"
@@ -76,6 +77,7 @@ class WaveStats:
     buckets: Tuple[int, ...]   # occupied cap_tiles AFTER the wave
     migrations: int            # problems whose bucket capacity changed
     duration_s: float          # host dispatch time (excludes device wait)
+    reoptimized: bool = False  # drift monitor fired -> fleet.optimize() ran
 
 
 @dataclasses.dataclass
@@ -93,19 +95,44 @@ class ContinuousBatcher:
 
     ``clock`` is injectable for deterministic tests; it must be monotonic.
     Results are kept until :meth:`result` pops them.
+
+    **Accounting.**  The batcher keeps a private, always-on
+    :class:`repro.obs.Registry` for its own wave/latency accounting —
+    :meth:`summary` reads from it, so it works whether or not global
+    telemetry is enabled.  With ``obs.enable()`` each wave additionally
+    emits a ``serve.wave`` event (queue depth, bucket occupancy,
+    padded-FLOP waste, ...) to the process-global registry/JSONL sink.
+
+    **Drift-triggered re-optimize (DESIGN.md §15).**  Pass a
+    :class:`repro.obs.DriftMonitor` as ``drift_monitor`` and the batcher
+    feeds it the fleet's NLML-per-point after every wave that absorbed
+    observations.  When the monitor fires, ``reoptimize`` (default
+    ``fleet.optimize()``) runs at the END of the wave — after the wave's
+    predictions are already dispatched and overlapping their device
+    execution, so the hot dispatch path never waits on training — and the
+    monitor is reset against the new hyperparameter level.
     """
 
-    def __init__(self, fleet: GPFleet, *, clock: Callable[[], float] = time.perf_counter):
+    def __init__(
+        self,
+        fleet: GPFleet,
+        *,
+        clock: Callable[[], float] = time.perf_counter,
+        drift_monitor: Optional[obs.DriftMonitor] = None,
+        reoptimize: Optional[Callable[[], None]] = None,
+    ):
         self.fleet = fleet
         self.clock = clock
+        self.drift_monitor = drift_monitor
+        self._reoptimize = reoptimize
         self._queue: List[Request] = []
         self._inflight: Optional[_InflightWave] = None
         self._done: Dict[int, Request] = {}
         self._next_rid = 0
         self._wave = 0
-        self._latencies: List[float] = []
         self._t0 = clock()
         self._served = 0
+        self._metrics = obs.Registry()  # private, always on (summary reads it)
 
     # -- submission ---------------------------------------------------------
 
@@ -143,6 +170,12 @@ class ContinuousBatcher:
         queued prediction (fetched one wave late — see the module
         docstring), re-forming buckets in between."""
         t0 = self.clock()
+        self._metrics.histogram("serve.queue_depth", obs.COUNT_EDGES).observe(
+            len(self._queue)
+        )
+        self._metrics.histogram("serve.inflight_depth", obs.COUNT_EDGES).observe(
+            0 if self._inflight is None else 1
+        )
         self.flush()  # previous wave's device work is done (or nearly) by now
         wave, self._queue = self._queue, []
         observes = [r for r in wave if r.kind == OBSERVE]
@@ -198,6 +231,57 @@ class ContinuousBatcher:
             1 for i, c in after.items() if before.get(i) not in (None, c)
         )
         self._wave += 1
+
+        # off-hot-path training: predictions are already in flight, so a
+        # triggered re-optimize overlaps their device execution and only
+        # delays the NEXT wave's (cold) dispatch
+        reoptimized = False
+        if self.drift_monitor is not None and observes:
+            nlml_pp = float(np.sum(np.asarray(self.fleet.nlml()))) \
+                / max(sum(self.fleet.sizes), 1)
+            if self.drift_monitor.observe(nlml_pp):
+                (self._reoptimize or self.fleet.optimize)()
+                self.drift_monitor.reset()
+                self._metrics.counter("serve.reoptimizations").inc()
+                obs.health_event("serve_reoptimize", wave=self._wave - 1,
+                                 nlml_per_point=nlml_pp)
+                reoptimized = True
+
+        m = self.fleet.tile_size
+        sizes = self.fleet.sizes
+        caps = self._capacity_map()
+        cap_n = {i: caps[i] * m for i in caps}
+        occupancy = sum(sizes) / max(sum(cap_n.values()), 1)
+        # quadratic measure: fraction of the warm tail's cross-covariance
+        # FLOPs spent on padding rows (each problem's tail is O(cap_n^2))
+        waste = 1.0 - sum(n * n for n in sizes) \
+            / max(sum(c * c for c in cap_n.values()), 1)
+        self._metrics.histogram("serve.wave_latency_ms").observe((t1 - t0) * 1e3)
+        self._metrics.histogram(
+            "serve.bucket_occupancy", obs.FRACTION_EDGES
+        ).observe(occupancy)
+        self._metrics.histogram(
+            "serve.padded_flop_waste", obs.FRACTION_EDGES
+        ).observe(waste)
+        self._metrics.counter("serve.waves").inc()
+        self._metrics.counter("serve.points_absorbed").inc(absorbed)
+        self._metrics.counter("serve.migrations").inc(migrations)
+        if obs.enabled():
+            obs.event(
+                "serve.wave",
+                wave=self._wave - 1,
+                n_predict=len(predicts),
+                n_observe=len(observes),
+                points_absorbed=absorbed,
+                migrations=migrations,
+                duration_ms=(t1 - t0) * 1e3,
+                queue_depth=len(wave),
+                bucket_occupancy=occupancy,
+                padded_flop_waste=waste,
+                buckets=sorted({c for c in after.values()}),
+                reoptimized=reoptimized,
+            )
+
         return WaveStats(
             wave=self._wave - 1,
             n_predict=len(predicts),
@@ -206,6 +290,7 @@ class ContinuousBatcher:
             buckets=tuple(sorted({c for c in after.values()})),
             migrations=migrations,
             duration_s=t1 - t0,
+            reoptimized=reoptimized,
         )
 
     def flush(self) -> int:
@@ -259,21 +344,39 @@ class ContinuousBatcher:
         return self._done.pop(rid).result
 
     def summary(self) -> Dict[str, float]:
-        """Throughput / latency digest over every finished request."""
-        lat = np.asarray(self._latencies) if self._latencies else np.zeros(1)
+        """Throughput / latency digest over every finished request.
+
+        Percentiles come from the private registry's request-latency
+        histogram — exact-[min, max]-clamped bucket interpolation, so tiny
+        sample sets behave: zero requests yields 0.0 (not NaN, not a
+        percentile of garbage), one request yields that request's latency
+        for every percentile, and p99 >= p50 always.
+        """
+        h = self._metrics.histogram("serve.request_latency_ms")
+        empty = h.count == 0
         elapsed = max(self.clock() - self._t0, 1e-9)
         return {
             "requests": float(self._served),
             "waves": float(self._wave),
             "req_per_s": self._served / elapsed,
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
-            "max_ms": float(lat.max() * 1e3),
+            "p50_ms": 0.0 if empty else h.percentile(50),
+            "p99_ms": 0.0 if empty else h.percentile(99),
+            "max_ms": 0.0 if empty else h.max,
+            "reoptimizations": self._metrics.counter(
+                "serve.reoptimizations"
+            ).value,
         }
+
+    def metrics_snapshot(self) -> dict:
+        """The private wave-accounting registry's full snapshot."""
+        return self._metrics.snapshot()
 
     def _finish(self, r: Request, t: float) -> None:
         r.t_done = t
-        self._latencies.append(t - r.t_submit)
+        self._metrics.histogram("serve.request_latency_ms").observe(
+            (t - r.t_submit) * 1e3
+        )
+        self._metrics.counter("serve.requests").inc()
         self._done[r.rid] = r
         self._served += 1
 
